@@ -1,0 +1,105 @@
+"""Shared benchmark plumbing: workload construction, predictor training,
+scheduler sweeps.  All experiments run the SAME scheduler code the engine
+uses, on the calibrated discrete-event backend (DESIGN.md §2 explains why
+paper-scale runs are simulated on this CPU-only container).
+
+Calibration: decode 30 tok/s/seq, prefill 4000 tok/s, pool M = 16384
+KV-token units — chosen so the paper's small/medium/large agent classes land
+in their reported JCT buckets (<1 min / 1-10 min / >10 min solo).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import make_scheduler
+from repro.predictor import AgentCostPredictor, relative_error
+from repro.sim import (
+    ClusterSim,
+    SimAgent,
+    fair_ratios,
+    fairness_stats,
+    jct_stats,
+)
+from repro.workloads import (
+    AGENT_CLASSES,
+    arrivals_for_density,
+    sample_agent,
+    sample_mixed_suite,
+)
+
+M_TOKENS = 16384.0
+DECODE_RATE = 30.0
+
+
+@dataclasses.dataclass
+class Workload:
+    agents: list                     # SampledAgent
+    arrivals: np.ndarray
+    predicted: np.ndarray            # per-agent predicted cost
+
+
+def train_predictor(seed: int = 0, n_train: int = 100) -> AgentCostPredictor:
+    rng = np.random.default_rng(seed + 1000)
+    samples = {}
+    for cls in AGENT_CLASSES:
+        tr = [sample_agent(rng, cls) for _ in range(n_train)]
+        samples[cls] = ([a.prompt for a in tr], [a.true_cost for a in tr])
+    pred = AgentCostPredictor(max_features=64)
+    pred.fit(samples)
+    return pred
+
+
+def build_workload(
+    seed: int,
+    n_agents: int = 300,
+    density: int = 3,
+    predictor: AgentCostPredictor | None = None,
+) -> Workload:
+    rng = np.random.default_rng(seed)
+    agents = sample_mixed_suite(rng, n_agents)
+    arrivals = arrivals_for_density(rng, n_agents, density)
+    if predictor is None:
+        predicted = np.array([a.true_cost for a in agents])
+    else:
+        predicted = np.array(
+            [predictor.predict(a.name, a.prompt) for a in agents]
+        )
+    return Workload(agents=agents, arrivals=arrivals, predicted=predicted)
+
+
+def to_sim_agents(w: Workload, *, cost_override=None) -> list[SimAgent]:
+    costs = cost_override if cost_override is not None else w.predicted
+    return [
+        SimAgent(
+            agent_id=i,
+            arrival=float(t),
+            stages=[list(s) for s in a.stages],
+            predicted_cost=float(c),
+            true_cost=a.true_cost,
+            family=a.family,
+            name=a.name,
+        )
+        for i, (a, t, c) in enumerate(zip(w.agents, w.arrivals, costs))
+    ]
+
+
+def run_scheduler(
+    name: str,
+    w: Workload,
+    *,
+    m: float = M_TOKENS,
+    decode_rate: float = DECODE_RATE,
+    cost_override=None,
+):
+    sched = make_scheduler(name, m, service_rate=decode_rate)
+    sim = ClusterSim(sched, m, decode_rate=decode_rate)
+    return sim.run(to_sim_agents(w, cost_override=cost_override))
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    """The scaffold's required output format."""
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,246 @@
+"""§Roofline: derive the three terms per (arch x shape x mesh) from the
+dry-run artifacts.
+
+  compute term    = FLOPs_per_device / 197e12        (bf16 peak, TPU v5e)
+  memory term     = HBM_bytes_per_device / 819e9
+  collective term = collective_bytes_per_device / 50e9 (per-link ICI)
+
+FLOPs and collective bytes come from the loop-aware HLO analysis
+(repro.launch.hlo_analysis — exact per-device, while-loop trip counts
+applied).  The memory term uses an ANALYTIC model of HBM traffic (params +
+KV/state cache + layer-boundary activations); the HLO-derived byte count is
+reported alongside as an upper bound — the CPU backend's scheduled HLO
+materializes f32 upcasts of bf16 matmul operands and whole-buffer
+cache-update fusions that a TPU compile aliases in place (EXPERIMENTS.md
+§Dry-run caveats).
+
+MODEL_FLOPS uses 6*N*D for training (2ND forward + 4ND backward; remat adds
++2ND -> ratio ~0.75 expected) and 2*N_active*D for serving, plus exact
+attention terms.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+from repro.configs import INPUT_SHAPES, get_config
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def model_flops_per_device(arch: str, shape_name: str, mesh: str) -> float:
+    """Useful-math FLOPs per device (no remat, no waste)."""
+    cfg = get_config(arch, shape=shape_name)
+    shape = INPUT_SHAPES[shape_name]
+    chips = CHIPS[mesh]
+    n_active = cfg.n_active_params()
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        # 6ND matmul + attention: 12*L*H*hd*S per token (fwd+bwd QK+PV)
+        attn = 0.0
+        if cfg.kind in ("dense", "moe", "vlm", "encdec"):
+            w = cfg.sliding_window or shape.seq_len
+            ctx = min(shape.seq_len, w) / 2  # avg causal context
+            attn = (12 * cfg.n_layers * cfg.n_heads * cfg.head_dim
+                    * ctx * tokens)
+        return (6.0 * n_active * tokens + attn) / chips
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        attn = 0.0
+        if cfg.kind in ("dense", "moe", "vlm", "encdec"):
+            w = cfg.sliding_window or shape.seq_len
+            ctx = min(shape.seq_len, w) / 2
+            attn = (4 * cfg.n_layers * cfg.n_heads * cfg.head_dim
+                    * ctx * tokens)
+        return (2.0 * n_active * tokens + attn) / chips
+    # decode: one token per sequence
+    tokens = shape.global_batch
+    ctx = min(shape.seq_len, cfg.sliding_window or shape.seq_len)
+    n_attn_layers = cfg.n_layers
+    if cfg.kind == "hybrid":
+        n_attn_layers = cfg.n_layers // cfg.attn_every
+    if cfg.kind == "ssm":
+        n_attn_layers = 0
+    attn = 4 * n_attn_layers * cfg.n_kv_heads * cfg.q_per_kv \
+        * cfg.head_dim * ctx * tokens
+    return (2.0 * n_active * tokens + attn) / chips
+
+
+def analytic_hbm_bytes_per_device(arch: str, shape_name: str,
+                                  mesh: str) -> float:
+    """Dominant HBM traffic PER DEVICE per step.
+
+    Weight reads: each device computes with 1/model_par of the weights
+    (tensor parallel); under the FSDP 'data' sharding the other data-shards
+    are all-gathered into HBM first, so the read volume per device is the
+    full model-shard, not 1/chips.  Activation carries are per-device
+    (B_local).  Caches are sharded over all chips.
+    """
+    cfg = get_config(arch, shape=shape_name)
+    shape = INPUT_SHAPES[shape_name]
+    chips = CHIPS[mesh]
+    model_par = 16
+    batch_ways = chips // model_par
+    b_local = max(1, shape.global_batch // batch_ways)
+    bp = 2  # bf16
+    n_active = cfg.n_active_params()
+    shard_reads = n_active * bp / model_par
+    if shape.mode == "train":
+        # 3 weight passes (fwd + bwd + remat fwd), f32 optimizer traffic,
+        # and 4 activation passes over the layer-boundary carries
+        weights = 3 * shard_reads + 3 * 2 * cfg.n_params() * 4 / chips
+        acts = b_local * shape.seq_len * cfg.d_model * cfg.n_layers * bp * 4
+        return weights + acts
+    if shape.mode == "prefill":
+        acts = b_local * shape.seq_len * cfg.d_model * cfg.n_layers * bp * 2
+        cache_w = kv_cache_bytes(cfg, shape.seq_len, shape.global_batch)
+        return shard_reads + acts + cache_w / chips
+    # decode: one batched step reads the weight shard + the whole cache
+    cache = kv_cache_bytes(cfg, shape.seq_len, shape.global_batch)
+    return shard_reads + cache / chips
+
+
+def kv_cache_bytes(cfg, seq_len: int, batch: int) -> float:
+    t = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    n_attn = cfg.n_layers
+    if cfg.kind == "hybrid":
+        n_attn = cfg.n_layers // cfg.attn_every
+    if cfg.kind == "ssm":
+        # recurrent state, not KV
+        n_pairs = cfg.n_layers // cfg.slstm_every
+        per = cfg.n_heads * cfg.head_dim * (cfg.head_dim + 6) * 4
+        return n_pairs * batch * per
+    kv = 2 * n_attn * batch * t * cfg.n_kv_heads * cfg.head_dim * 2
+    if cfg.kind == "hybrid":
+        d_inner = 2 * cfg.d_model
+        kv += cfg.n_layers * batch * (d_inner // 64) * 64 * cfg.ssm_state * 4
+    return kv
+
+
+@dataclasses.dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    hlo_flops: float
+    useful_ratio: float
+    hlo_bytes: float
+    note: str = ""
+
+
+def roofline_from_records(results_path: str,
+                          hlo_dir: str = "dryrun_hlo") -> list[RooflineRow]:
+    from repro.launch.hlo_analysis import analyze_file
+
+    rows = []
+    seen = set()
+    for line in open(results_path):
+        rec = json.loads(line)
+        key = (rec["arch"], rec["shape"], rec["mesh"])
+        if key in seen or rec.get("status") != "ok":
+            continue
+        seen.add(key)
+        hlo_file = rec.get("hlo_file")
+        if not hlo_file or not os.path.exists(hlo_file):
+            continue
+        st = analyze_file(hlo_file)
+        mf = model_flops_per_device(rec["arch"], rec["shape"], rec["mesh"])
+        mem_bytes = analytic_hbm_bytes_per_device(
+            rec["arch"], rec["shape"], rec["mesh"]
+        )
+        compute_s = st.flops / PEAK_FLOPS
+        memory_s = mem_bytes / HBM_BW
+        collective_s = st.coll_bytes / ICI_BW
+        terms = {
+            "compute": compute_s, "memory": memory_s,
+            "collective": collective_s,
+        }
+        bottleneck = max(terms, key=terms.get)
+        rows.append(RooflineRow(
+            arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+            compute_s=compute_s, memory_s=memory_s,
+            collective_s=collective_s, bottleneck=bottleneck,
+            model_flops=mf, hlo_flops=st.flops,
+            useful_ratio=mf / st.flops if st.flops else float("nan"),
+            hlo_bytes=st.bytes,
+        ))
+    return rows
+
+
+def format_table(rows: list[RooflineRow]) -> str:
+    hdr = (f"{'arch':18s} {'shape':12s} {'mesh':8s} {'compute_s':>10s} "
+           f"{'memory_s':>10s} {'collect_s':>10s} {'bound':>7s} "
+           f"{'useful':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in sorted(rows, key=lambda r: (r.arch, r.shape, r.mesh)):
+        lines.append(
+            f"{r.arch:18s} {r.shape:12s} {r.mesh:8s} {r.compute_s:10.2e} "
+            f"{r.memory_s:10.2e} {r.collective_s:10.2e} {r.bottleneck:>7s} "
+            f"{r.useful_ratio:7.2f}"
+        )
+    return "\n".join(lines)
+
+
+def main(results_path: str = "dryrun_results.jsonl"):
+    rows = roofline_from_records(results_path)
+    print(format_table(rows))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(*sys.argv[1:])
+
+
+def optimized_comparison(hlo_dir: str = "dryrun_hlo") -> str:
+    """Baseline vs O1-O4 optimized collective terms (EXPERIMENTS §Perf)."""
+    import glob
+    import statistics
+
+    from repro.launch.hlo_analysis import analyze_file
+
+    lines = [
+        "baseline vs optimized (O1-O4) collective term, 16x16, per device",
+        f"{'arch':18s} {'shape':12s} {'base_coll_s':>12s} {'opt_coll_s':>11s}"
+        f" {'gain':>7s} {'opt_compute_s':>13s} {'opt_bound':>10s}",
+    ]
+    rows = []
+    for f in sorted(glob.glob(os.path.join(hlo_dir, "*_16x16_opt.hlo.zst"))):
+        base_f = f.replace("_opt.hlo.zst", ".hlo.zst")
+        if not os.path.exists(base_f):
+            continue
+        name = os.path.basename(f)[: -len("_16x16_opt.hlo.zst")]
+        for shape in INPUT_SHAPES:
+            if name.endswith("_" + shape):
+                arch = name[: -(len(shape) + 1)]
+                break
+        b, o = analyze_file(base_f), analyze_file(f)
+        mem = analytic_hbm_bytes_per_device(arch, shape, "16x16") / HBM_BW
+        terms = {"compute": o.flops / PEAK_FLOPS, "memory": mem,
+                 "collective": o.coll_bytes / ICI_BW}
+        rows.append((arch, shape, b.coll_bytes / ICI_BW,
+                     o.coll_bytes / ICI_BW,
+                     b.coll_bytes / max(o.coll_bytes, 1),
+                     o.flops / PEAK_FLOPS, max(terms, key=terms.get)))
+    for r in rows:
+        lines.append(f"{r[0]:18s} {r[1]:12s} {r[2]:12.3f} {r[3]:11.3f} "
+                     f"{r[4]:6.1f}x {r[5]:13.3f} {r[6]:>10s}")
+    if rows:
+        lines.append(
+            f"median collective reduction: "
+            f"{statistics.median(r[4] for r in rows):.1f}x over {len(rows)}"
+            " pairs"
+        )
+    return "\n".join(lines)

@@ -1,0 +1,63 @@
+"""Benchmark harness entry point: one benchmark per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--skip-roofline]
+
+Prints ``name,us_per_call,derived`` CSV rows (scaffold contract) followed by
+the human-readable detail lines, and appends the roofline table when
+dry-run artifacts are present.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark names")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks.paper_figures import ALL_FIGURES
+
+    all_csv, all_detail = [], []
+    for fn in ALL_FIGURES:
+        if args.only and args.only not in fn.__name__:
+            continue
+        t0 = time.time()
+        csv_rows, detail = fn()
+        dt = time.time() - t0
+        all_csv.extend(csv_rows)
+        all_detail.extend(detail)
+        all_detail.append(f"[{fn.__name__} took {dt:.1f}s]")
+
+    print("name,us_per_call,derived")
+    for row in all_csv:
+        print(row)
+    print()
+    for line in all_detail:
+        print(line)
+
+    if not args.skip_roofline and os.path.exists("dryrun_results.jsonl"):
+        print("\n=== §Roofline (from multi-pod dry-run artifacts) ===")
+        try:
+            from benchmarks.roofline import main as roofline_main
+
+            roofline_main("dryrun_results.jsonl")
+        except Exception as e:  # noqa: BLE001
+            print(f"(roofline unavailable: {e})")
+        try:
+            from benchmarks.roofline import optimized_comparison
+
+            print("\n=== §Perf: baseline vs optimized sharding (O1-O4) ===")
+            print(optimized_comparison())
+        except Exception as e:  # noqa: BLE001
+            print(f"(optimized comparison unavailable: {e})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Justitia core: memory-centric cost model, virtual-time fair queuing,
+selective-pampering scheduler, and the baseline schedulers (paper §4)."""
+
+from repro.core.cost import (
+    InferenceSpec,
+    MemoryFamily,
+    agent_cost,
+    encdec_kv_token_time,
+    hybrid_kv_token_time,
+    inference_cost,
+    kv_token_time,
+    ssm_token_time,
+    swa_kv_token_time,
+    vtc_agent_cost,
+    vtc_cost,
+)
+from repro.core.gps import GpsAgent, gps_finish_times
+from repro.core.schedulers import (
+    ALL_SCHEDULERS,
+    AgentRecord,
+    AgentScheduler,
+    JustitiaScheduler,
+    ParrotScheduler,
+    Request,
+    SrjfScheduler,
+    VllmFcfsScheduler,
+    VllmSjfScheduler,
+    VtcScheduler,
+    make_scheduler,
+)
+from repro.core.virtual_time import VirtualClock
+
+__all__ = [
+    "InferenceSpec",
+    "MemoryFamily",
+    "agent_cost",
+    "encdec_kv_token_time",
+    "hybrid_kv_token_time",
+    "inference_cost",
+    "kv_token_time",
+    "ssm_token_time",
+    "swa_kv_token_time",
+    "vtc_agent_cost",
+    "vtc_cost",
+    "GpsAgent",
+    "gps_finish_times",
+    "ALL_SCHEDULERS",
+    "AgentRecord",
+    "AgentScheduler",
+    "JustitiaScheduler",
+    "ParrotScheduler",
+    "Request",
+    "SrjfScheduler",
+    "VllmFcfsScheduler",
+    "VllmSjfScheduler",
+    "VtcScheduler",
+    "make_scheduler",
+    "VirtualClock",
+]

@@ -1,0 +1,229 @@
+"""Agent-level schedulers: Justitia (the paper) and the five baselines.
+
+The same scheduler objects drive both the discrete-event cluster simulator
+(`repro.sim`) and the real continuous-batching engine (`repro.engine`) — the
+policy code is identical, only the backend differs.
+
+Contract
+--------
+The backend notifies the scheduler of agent arrivals/completions and of
+service as it is dealt, and asks for a *priority key* per pending request
+whenever it makes an admission (or swap-victim) decision.  Lower key = served
+first.  Keys may be dynamic (VTC, SRJF) and are therefore recomputed at every
+scheduling decision; Justitia's key is static by construction (the one-shot
+virtual finish time).
+
+Non-preemption (paper §4.3 + App. C) is enforced by the *backend*: a waiting
+request never preempts a running inference; swapping happens only on memory
+pressure, evicting the running request with the *worst* key.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.cost import InferenceSpec
+from repro.core.virtual_time import VirtualClock
+
+
+@dataclasses.dataclass
+class Request:
+    """One inference task as seen by the scheduler/backend."""
+
+    agent_id: int
+    rid: int                      # globally unique, monotone with submit order
+    spec: InferenceSpec
+    submit_time: float
+    pred_cost: float = 0.0        # predicted inference-level KV token-time
+
+    # runtime state owned by the backend
+    decoded: int = 0              # decode tokens produced so far
+
+
+@dataclasses.dataclass
+class AgentRecord:
+    agent_id: int
+    arrival: float
+    predicted_cost: float         # predicted agent-level cost (model units)
+    virtual_finish: float = float("inf")   # Justitia F_j
+    serviced_kv: float = 0.0      # accumulated KV token-time service
+    serviced_vtc: float = 0.0     # accumulated VTC-weighted token service
+    completed: bool = False
+
+
+class AgentScheduler:
+    """Base class; default key is inference-level FCFS."""
+
+    name = "base"
+    #: whether this scheduler's admission key depends on runtime state
+    dynamic = False
+
+    def __init__(self) -> None:
+        self.agents: dict[int, AgentRecord] = {}
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def on_agent_arrival(self, agent_id: int, t: float, predicted_cost: float) -> None:
+        self.agents[agent_id] = AgentRecord(agent_id, t, float(predicted_cost))
+
+    def on_agent_complete(self, agent_id: int, t: float) -> None:
+        rec = self.agents.get(agent_id)
+        if rec is not None:
+            rec.completed = True
+
+    def on_service(
+        self,
+        agent_id: int,
+        *,
+        kv_token_time: float = 0.0,
+        prefill_tokens: float = 0.0,
+        decode_tokens: float = 0.0,
+        w_p: float = 1.0,
+        w_d: float = 2.0,
+    ) -> None:
+        rec = self.agents.get(agent_id)
+        if rec is None:
+            return
+        rec.serviced_kv += kv_token_time
+        rec.serviced_vtc += w_p * prefill_tokens + w_d * decode_tokens
+
+    # -- the decision -------------------------------------------------------
+
+    def request_key(self, req: Request, t: float) -> tuple:
+        return (req.submit_time, req.rid)
+
+
+class VllmFcfsScheduler(AgentScheduler):
+    """Baseline (a): vLLM — inference-level First-Come-First-Serve."""
+
+    name = "vllm-fcfs"
+
+
+class VllmSjfScheduler(AgentScheduler):
+    """Baseline (b): vLLM-SJF — inference-level Shortest-Job-First using the
+    per-inference predicted cost (the paper uses DistilBERT-predicted
+    durations; we feed it the same predictor output as everyone else)."""
+
+    name = "vllm-sjf"
+
+    def request_key(self, req: Request, t: float) -> tuple:
+        return (req.pred_cost, req.submit_time, req.rid)
+
+
+class ParrotScheduler(AgentScheduler):
+    """Baseline (c): Parrot — agent-level FCFS (all inferences of the
+    earliest-arrived agent served consecutively)."""
+
+    name = "parrot"
+
+    def request_key(self, req: Request, t: float) -> tuple:
+        rec = self.agents[req.agent_id]
+        return (rec.arrival, rec.agent_id, req.rid)
+
+
+class VtcScheduler(AgentScheduler):
+    """Baseline (d): Virtual Token Counter (Sheng et al., OSDI'24).
+
+    Tracks the weighted token service each agent has received and always
+    admits from the agent with the smallest counter — approximating
+    instantaneous fair sharing.  On arrival of an agent during a backlogged
+    period its counter is lifted to the minimum over active agents
+    (the paper's 'counter lift' that prevents gaming by idling).
+    """
+
+    name = "vtc"
+    dynamic = True
+
+    def on_agent_arrival(self, agent_id: int, t: float, predicted_cost: float) -> None:
+        super().on_agent_arrival(agent_id, t, predicted_cost)
+        live = [
+            a.serviced_vtc
+            for a in self.agents.values()
+            if not a.completed and a.agent_id != agent_id
+        ]
+        if live:
+            self.agents[agent_id].serviced_vtc = min(live)
+
+    def request_key(self, req: Request, t: float) -> tuple:
+        rec = self.agents[req.agent_id]
+        return (rec.serviced_vtc, rec.arrival, req.rid)
+
+
+class SrjfScheduler(AgentScheduler):
+    """Baseline (e): Shortest-Remaining-Job-First at the *agent* level, on
+    the same predicted KV token-time costs Justitia uses."""
+
+    name = "srjf"
+    dynamic = True
+
+    def request_key(self, req: Request, t: float) -> tuple:
+        rec = self.agents[req.agent_id]
+        remaining = max(0.0, rec.predicted_cost - rec.serviced_kv)
+        return (remaining, rec.arrival, req.rid)
+
+
+class JustitiaScheduler(AgentScheduler):
+    """The paper: virtual-time fair queuing with selective pampering.
+
+    On agent arrival we compute, one-shot, its GPS virtual finish time
+    F_j = V(a_j) + C_j (predicted) and use ascending F_j as a *static*
+    agent priority; all inferences of the pampered agent run consecutively
+    and saturate the backend.  Theorem B.1 bounds the worst-case delay vs
+    GPS by 2*c_max + C_max/M.
+    """
+
+    name = "justitia"
+
+    def __init__(self, total_kv: float, service_rate: float = 1.0):
+        """``total_kv``: pool size M in KV-token units (the paper's M).
+
+        ``service_rate``: how many decode iterations the backend completes
+        per unit of real time (tokens/s per running sequence).  The GPS
+        virtual clock must advance at the backend's *service capacity*
+        M * service_rate in KV-token-time per second — the cost model's
+        units are token·iterations while wall time is seconds (Eq. 2 is
+        stated with time measured in iterations; this converts it).
+        """
+        super().__init__()
+        self.clock = VirtualClock(total_kv * service_rate)
+
+    def on_agent_arrival(self, agent_id: int, t: float, predicted_cost: float) -> None:
+        super().on_agent_arrival(agent_id, t, predicted_cost)
+        f = self.clock.on_arrival(agent_id, t, predicted_cost)
+        self.agents[agent_id].virtual_finish = f
+
+    def on_agent_complete(self, agent_id: int, t: float) -> None:
+        super().on_agent_complete(agent_id, t)
+        self.clock.advance(t)
+
+    def request_key(self, req: Request, t: float) -> tuple:
+        rec = self.agents[req.agent_id]
+        return (rec.virtual_finish, rec.arrival, req.rid)
+
+
+def make_scheduler(
+    name: str, total_kv: float, service_rate: float = 1.0
+) -> AgentScheduler:
+    """Factory used by the simulator, the engine, and the benchmarks.
+
+    ``service_rate`` (decode iterations per second) only matters for
+    Justitia's virtual clock; see JustitiaScheduler.__init__.
+    """
+    name = name.lower()
+    if name in ("justitia",):
+        return JustitiaScheduler(total_kv, service_rate)
+    if name in ("vtc",):
+        return VtcScheduler()
+    if name in ("vllm", "fcfs", "vllm-fcfs"):
+        return VllmFcfsScheduler()
+    if name in ("vllm-sjf", "sjf"):
+        return VllmSjfScheduler()
+    if name in ("parrot", "agent-fcfs"):
+        return ParrotScheduler()
+    if name in ("srjf",):
+        return SrjfScheduler()
+    raise ValueError(f"unknown scheduler {name!r}")
+
+
+ALL_SCHEDULERS = ["vllm-fcfs", "vllm-sjf", "parrot", "vtc", "srjf", "justitia"]

@@ -1,0 +1,107 @@
+"""GPS virtual time for fair queuing (paper §4.3, Eq. 2-3).
+
+V(0) = 0 ;  dV/dt = M / N_t
+
+where M is the total KV-cache space (in KV-token units) and N_t the number
+of agents *active in the GPS reference system* at real time t.  V advances
+at the marginal per-agent GPS service rate, so an agent arriving at a_j with
+cost C_j finishes in GPS exactly when V reaches
+
+    F_j = V(a_j) + C_j            (virtual finish time; Eq. 3)
+
+F_j is computed once at arrival and never updated: later arrivals slow the
+*real-time* mapping of V but never reorder {F_j} — that is the one-shot
+property the paper borrows from WFQ (Demers et al. 1989; Parekh & Gallager
+1993).
+
+The clock is event-driven: ``advance(t)`` integrates V piecewise-linearly
+from the last update to t, popping GPS completions (which change N_t) from a
+min-heap of pending virtual finish times as V sweeps past them.
+"""
+
+from __future__ import annotations
+
+import heapq
+
+
+class VirtualClock:
+    """Piecewise-linear integrator of the GPS virtual time."""
+
+    def __init__(self, total_kv: float):
+        if total_kv <= 0:
+            raise ValueError("total_kv must be positive")
+        self.m = float(total_kv)
+        self._v = 0.0          # current virtual time
+        self._t = 0.0          # real time of last update
+        self._finish_heap: list[tuple[float, int]] = []  # (F_j, agent_id)
+        self._active: set[int] = set()
+
+    # -- inspection ---------------------------------------------------------
+
+    @property
+    def n_active(self) -> int:
+        return len(self._active)
+
+    def now(self, t: float) -> float:
+        """V(t) without mutating state (t must be >= last update time)."""
+        v, _ = self._peek(t)
+        return v
+
+    # -- core ---------------------------------------------------------------
+
+    def advance(self, t: float) -> None:
+        """Integrate V up to real time t, retiring GPS completions."""
+        if t < self._t - 1e-9:
+            raise ValueError(f"clock moved backwards: {t} < {self._t}")
+        v, retired = self._peek(t)
+        for agent_id in retired:
+            self._active.discard(agent_id)
+        # pop retired entries off the heap for real
+        while self._finish_heap and self._finish_heap[0][0] <= v + 1e-12:
+            heapq.heappop(self._finish_heap)
+        self._v, self._t = v, max(t, self._t)
+
+    def on_arrival(self, agent_id: int, t: float, cost: float) -> float:
+        """Register agent arrival; returns its virtual finish time F_j."""
+        self.advance(t)
+        f = self._v + float(cost)
+        self._active.add(agent_id)
+        heapq.heappush(self._finish_heap, (f, agent_id))
+        return f
+
+    # -- internals ----------------------------------------------------------
+
+    def _peek(self, t: float) -> tuple[float, list[int]]:
+        """Integrate from (self._t, self._v) to real time t.
+
+        Returns (V(t), agents whose GPS finish V is swept past).  While
+        N_t agents are active, dV/dt = M / N_t; when no agent is active V
+        stalls (no service is being dealt in GPS — matching the convention
+        that V only needs to order *backlogged* periods; an idle system
+        re-anchors at the current V).
+        """
+        v = self._v
+        t_cur = t if t > self._t else self._t
+        elapsed = t_cur - self._t
+        heap = list(self._finish_heap)
+        heapq.heapify(heap)
+        active = len(self._active)
+        retired: list[int] = []
+        while elapsed > 0 and active > 0:
+            rate = self.m / active
+            # real time needed for V to reach the next GPS completion
+            if heap:
+                f_next = heap[0][0]
+                dt_next = max(0.0, (f_next - v)) / rate
+            else:
+                dt_next = float("inf")
+            if dt_next > elapsed:
+                v += rate * elapsed
+                elapsed = 0.0
+            else:
+                v = max(v, heap[0][0])
+                elapsed -= dt_next
+                while heap and heap[0][0] <= v + 1e-12:
+                    retired.append(heapq.heappop(heap)[1])
+                    active -= 1
+        return v, retired

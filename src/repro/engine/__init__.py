@@ -1,0 +1,5 @@
+"""Continuous-batching serving engine (vLLM semantics, JAX backend)."""
+
+from repro.engine.engine import EngineAgent, EngineRequest, ServeEngine
+
+__all__ = ["EngineAgent", "EngineRequest", "ServeEngine"]

@@ -1,0 +1,322 @@
+"""Continuous-batching serving engine over the JAX model zoo.
+
+This is the real end-to-end path: actual model prefill/decode on device,
+slot-based batched decoding, paged KV-block accounting, agent-level
+scheduling via the SAME scheduler objects as the simulator, vLLM's
+non-preemptive semantics (App. C):
+
+  * waiting requests never preempt running inferences;
+  * when the block pool cannot host a new decode token, the running
+    inference with the WORST scheduler key is swapped out (its KV rows are
+    copied to host memory and its blocks freed);
+  * the swapped queue outranks the waiting queue for (re-)admission, and
+    while it is non-empty no new request is admitted.
+
+Time is measured in engine iterations (one batched decode step == 1
+iteration; a prefill costs ceil(prompt / prefill_chunk) iterations),
+matching the cost model's token-iteration units (service_rate=1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost import InferenceSpec, kv_token_time
+from repro.core.schedulers import AgentScheduler, Request
+from repro.kvcache.allocator import BlockAllocator
+from repro.models import Model
+
+
+@dataclasses.dataclass
+class EngineRequest:
+    """One inference task: prompt tokens + a decode budget."""
+
+    agent_id: int
+    rid: int
+    prompt: np.ndarray             # (p,) int32
+    max_new_tokens: int
+    submit_iter: int = 0
+    # runtime
+    slot: int = -1
+    generated: int = 0
+    done: bool = False
+    swapped_kv: Any = None         # host copy when swapped out
+    _last_tok: int = 0
+
+    @property
+    def spec(self) -> InferenceSpec:
+        return InferenceSpec(len(self.prompt), self.max_new_tokens)
+
+    def to_sched_request(self) -> Request:
+        return Request(
+            agent_id=self.agent_id,
+            rid=self.rid,
+            spec=self.spec,
+            submit_time=float(self.submit_iter),
+            pred_cost=kv_token_time(len(self.prompt), self.max_new_tokens),
+        )
+
+
+@dataclasses.dataclass
+class EngineAgent:
+    agent_id: int
+    arrival_iter: int
+    stages: list[list[tuple[np.ndarray, int]]]  # stage -> [(prompt, d)]
+    predicted_cost: float
+    # runtime
+    next_stage: int = 0
+    live: int = 0
+    finish_iter: int = -1
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        model: Model,
+        params,
+        scheduler: AgentScheduler,
+        *,
+        pool_tokens: int = 4096,
+        block_size: int = 16,
+        max_batch: int = 8,
+        cache_len: int = 512,
+        prefill_chunk: int = 512,
+    ):
+        self.model = model
+        self.params = params
+        self.sched = scheduler
+        self.alloc = BlockAllocator(pool_tokens, block_size)
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        self.prefill_chunk = prefill_chunk
+
+        self.cache = model.init_cache(params, max_batch, cache_len)
+        self.slot_free = list(range(max_batch))
+        self.slot_req: dict[int, EngineRequest] = {}
+        self.slot_last_tok = np.zeros(max_batch, np.int32)
+        self.slot_pos = np.zeros(max_batch, np.int32)
+
+        self.waiting: list[EngineRequest] = []
+        self.swapped: list[EngineRequest] = []
+        self.agents: dict[int, EngineAgent] = {}
+        self.now = 0               # iteration counter
+        self.completions: dict[int, int] = {}   # agent -> finish iter
+        self._rid = 0
+        self.metrics = {"prefills": 0, "decode_steps": 0, "swaps": 0,
+                        "tokens": 0}
+
+        self._jit_decode = jax.jit(self.model.decode)
+        self._jit_prefill = jax.jit(
+            self.model.prefill, static_argnames=("cache_len",)
+        )
+
+    # ------------------------------------------------------------- submit
+
+    def submit_agent(self, agent: EngineAgent) -> None:
+        self.agents[agent.agent_id] = agent
+        self.sched.on_agent_arrival(
+            agent.agent_id, float(self.now), agent.predicted_cost
+        )
+        self._submit_stage(agent)
+
+    def _submit_stage(self, agent: EngineAgent) -> None:
+        stage = agent.stages[agent.next_stage]
+        agent.next_stage += 1
+        agent.live += len(stage)
+        for prompt, d in stage:
+            if len(prompt) + int(d) + 1 > self.cache_len:
+                raise ValueError(
+                    f"request p={len(prompt)} d={d} exceeds cache_len "
+                    f"{self.cache_len}"
+                )
+            self.waiting.append(
+                EngineRequest(
+                    agent_id=agent.agent_id,
+                    rid=self._rid,
+                    prompt=np.asarray(prompt, np.int32),
+                    max_new_tokens=int(d),
+                    submit_iter=self.now,
+                )
+            )
+            self._rid += 1
+
+    # ----------------------------------------------------------- stepping
+
+    def step(self) -> None:
+        """One engine iteration: admit, then one batched decode step."""
+        self._admit()
+        self._decode_once()
+        self.now += 1
+
+    def run_until_idle(self, max_iters: int = 200_000) -> dict[int, int]:
+        while (self.waiting or self.swapped or self.slot_req) and (
+            self.now < max_iters
+        ):
+            self.step()
+        if self.waiting or self.swapped or self.slot_req:
+            raise RuntimeError("engine did not drain (max_iters hit)")
+        return dict(self.completions)
+
+    # ----------------------------------------------------------- admission
+
+    def _key(self, req: EngineRequest):
+        return self.sched.request_key(req.to_sched_request(), float(self.now))
+
+    def _admit(self) -> None:
+        # swapped queue has absolute priority and blocks the waiting queue
+        self.swapped.sort(key=self._key)
+        while self.swapped and self.slot_free:
+            req = self.swapped[0]
+            if not self.alloc.swap_in(req.rid):
+                break
+            self.swapped.pop(0)
+            self._restore_slot(req)
+        if self.swapped:
+            return
+        self.waiting.sort(key=self._key)
+        while self.waiting and self.slot_free:
+            req = self.waiting[0]
+            if not self.alloc.can_admit(len(req.prompt) + 1):
+                break
+            self.waiting.pop(0)
+            self.alloc.admit(req.rid, len(req.prompt))
+            self._prefill_into_slot(req)
+
+    # ------------------------------------------------------------- prefill
+
+    def _prefill_into_slot(self, req: EngineRequest) -> None:
+        slot = self.slot_free.pop()
+        req.slot = slot
+        self.slot_req[slot] = req
+        p = len(req.prompt)
+        prompt = req.prompt
+        if self.model.cfg.kind in ("dense", "moe", "vlm"):
+            # bucket prompt lengths to multiples of 64 to bound the number
+            # of prefill compilations; the lens mask keeps logits exact
+            bucket = -(-max(p, 1) // 64) * 64
+            prompt = np.pad(prompt, (0, bucket - p))
+        toks = jnp.asarray(prompt[None, :], jnp.int32)
+        logits, small_cache = self._jit_prefill(
+            self.params,
+            {"tokens": toks, "lens": jnp.asarray([p], jnp.int32)},
+            cache_len=self.cache_len,
+        )
+        self._write_cache_slot(slot, small_cache)
+        nxt = int(jnp.argmax(logits[0, -1]))
+        self.slot_last_tok[slot] = nxt
+        self.slot_pos[slot] = p
+        # prefill costs ceil(p / prefill_chunk) iterations of engine time
+        self.now += max(1, -(-p // self.prefill_chunk)) - 1
+        self.metrics["prefills"] += 1
+        self.sched.on_service(req.agent_id, prefill_tokens=float(p))
+
+    def _write_cache_slot(self, slot: int, small_cache: dict) -> None:
+        """Copy a B=1 prefill cache into row ``slot`` of the engine cache."""
+
+        def write(big, small):
+            if big.ndim >= 2 and small.shape[0] == big.shape[0]:
+                # layer-stacked tensors: (L, B, ...)
+                sl = small.shape[2] if small.ndim > 2 else None
+                return jax.lax.dynamic_update_slice_in_dim(
+                    big, small.astype(big.dtype), slot, axis=1
+                )
+            return big
+
+        self.cache = jax.tree.map(write, self.cache, small_cache)
+
+    def _restore_slot(self, req: EngineRequest) -> None:
+        slot = self.slot_free.pop()
+        req.slot = slot
+        self.slot_req[slot] = req
+        self.cache = jax.tree.map(
+            lambda big, small: jax.lax.dynamic_update_slice_in_dim(
+                big, jnp.asarray(small)[:, None], slot, axis=1
+            ),
+            self.cache,
+            req.swapped_kv,
+        )
+        req.swapped_kv = None
+        self.slot_last_tok[slot] = req._last_tok
+        self.slot_pos[slot] = len(req.prompt) + req.generated
+        self.metrics["swaps"] += 1
+
+    def _swap_out_worst(self) -> bool:
+        """Evict the running request with the WORST scheduler key."""
+        if len(self.slot_req) <= 1:
+            return False
+        slot, req = max(
+            self.slot_req.items(), key=lambda kv: self._key(kv[1])
+        )
+        req.swapped_kv = jax.tree.map(
+            lambda big: np.asarray(big[:, slot]), self.cache
+        )
+        req._last_tok = int(self.slot_last_tok[slot])
+        self.alloc.swap_out(req.rid)
+        self.slot_req.pop(slot)
+        self.slot_free.append(slot)
+        req.slot = -1
+        self.swapped.append(req)
+        return True
+
+    # -------------------------------------------------------------- decode
+
+    def _decode_once(self) -> None:
+        if not self.slot_req:
+            return
+        # grow each running sequence by one token (may trigger swaps)
+        for slot in sorted(self.slot_req):
+            req = self.slot_req.get(slot)
+            if req is None:
+                continue
+            while not self.alloc.append_token(req.rid):
+                if not self._swap_out_worst():
+                    break
+                if req.rid not in [r.rid for r in self.swapped]:
+                    continue
+                break
+            # note: if req itself was swapped out it no longer decodes
+        active = sorted(self.slot_req)
+        if not active:
+            return
+        toks = jnp.asarray(self.slot_last_tok[:, None], jnp.int32)
+        pos = jnp.asarray(self.slot_pos, jnp.int32)
+        logits, self.cache = self._jit_decode(
+            self.params, self.cache, toks, pos
+        )
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1), np.int32)
+        self.metrics["decode_steps"] += 1
+
+        for slot in list(active):
+            req = self.slot_req.get(slot)
+            if req is None:
+                continue
+            req.generated += 1
+            self.metrics["tokens"] += 1
+            self.slot_last_tok[slot] = nxt[slot]
+            self.slot_pos[slot] += 1
+            occ = len(req.prompt) + req.generated
+            self.sched.on_service(
+                req.agent_id, kv_token_time=float(occ), decode_tokens=1.0
+            )
+            if req.generated >= req.max_new_tokens:
+                self._complete(slot, req)
+
+    def _complete(self, slot: int, req: EngineRequest) -> None:
+        req.done = True
+        self.alloc.release(req.rid)
+        self.slot_req.pop(slot)
+        self.slot_free.append(slot)
+        agent = self.agents[req.agent_id]
+        agent.live -= 1
+        if agent.live == 0:
+            if agent.next_stage < len(agent.stages):
+                self._submit_stage(agent)
+            else:
+                agent.finish_iter = self.now
+                self.completions[agent.agent_id] = self.now
+                self.sched.on_agent_complete(agent.agent_id, float(self.now))

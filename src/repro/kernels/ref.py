@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose references)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths):
+    """q: (B, n_kv, qpk, hd) pre-scaled; pages: (P, bs, n_kv, hd)."""
+    b, n_kv, qpk, hd = q.shape
+    max_pages = block_tables.shape[1]
+    bs = k_pages.shape[1]
+    tables = jnp.clip(block_tables, 0, k_pages.shape[0] - 1)
+    # gather each sequence's pages: (B, max_pages, bs, n_kv, hd)
+    k = k_pages[tables]
+    v = v_pages[tables]
+    k = k.reshape(b, max_pages * bs, n_kv, hd)
+    v = v.reshape(b, max_pages * bs, n_kv, hd)
+    s = jnp.einsum("bngh,btnh->bngt", q.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    ids = jnp.arange(max_pages * bs)[None]
+    mask = ids < lengths[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bngt,btnh->bngh", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def flash_attention_ref(q, k, v, window: int = 0):
+    """q: (B,nh,S,hd) pre-scaled; k/v: (B,n_kv,S,hd); causal (+SWA)."""
+    b, nh, s, hd = q.shape
+    n_kv = k.shape[1]
+    qpk = nh // n_kv
+    kr = jnp.repeat(k, qpk, axis=1)
+    vr = jnp.repeat(v, qpk, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kr.astype(jnp.float32))
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    mask = ki <= qi
+    if window:
+        mask &= ki > qi - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)

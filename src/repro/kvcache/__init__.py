@@ -1,0 +1,5 @@
+"""Paged KV-cache block accounting."""
+
+from repro.kvcache.allocator import BlockAllocator, OutOfBlocks, SeqAlloc
+
+__all__ = ["BlockAllocator", "OutOfBlocks", "SeqAlloc"]

@@ -1,0 +1,1 @@
+"""Launchers: production mesh, sharding policy, dry-run, train/serve."""

@@ -1,0 +1,201 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+pair on the production meshes WITHOUT allocating real arrays.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b \
+        --shape train_4k [--multi-pod]
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.json
+
+Per pair it records: compile success, per-device memory analysis
+(argument/output/temp/peak bytes), cost analysis (FLOPs, bytes accessed),
+and the collective-bytes breakdown parsed from the optimized HLO — the
+three §Roofline terms are derived from these (benchmarks/roofline.py).
+
+The XLA_FLAGS line above MUST run before any jax import (jax locks the
+device count at first init); keep it the first statement of this module.
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, INPUT_SHAPES, supports_shape
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_dryrun, lower_plan
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "u64": 8, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    """Total bytes of all array shapes in an HLO result-type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum output bytes of every collective op in the optimized HLO.
+
+    Counts each op once per HLO occurrence.  Ops inside while-loop bodies
+    (layer scans) appear once in the text but execute n_layers times; the
+    caller scales by trip count via the 'in_loop' flag heuristically — we
+    report raw per-occurrence bytes plus occurrence counts here and let
+    the roofline layer apply scan trip counts from the model config.
+    """
+    stats = {op: {"count": 0, "bytes": 0} for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w\.\-]+ = (.+?) (all-gather|all-reduce|"
+                     r"reduce-scatter|all-to-all|collective-permute)", ls)
+        if not m:
+            continue
+        result_type, op = m.groups()
+        stats[op]["count"] += 1
+        stats[op]["bytes"] += _shape_bytes(result_type)
+    stats["total_bytes"] = sum(
+        v["bytes"] for k, v in stats.items() if isinstance(v, dict)
+    )
+    stats["total_count"] = sum(
+        v["count"] for k, v in stats.items() if isinstance(v, dict)
+    )
+    return stats
+
+
+def run_pair(arch: str, shape: str, *, multi_pod: bool,
+             verbose: bool = True, hlo_dir: str = "dryrun_hlo",
+             optimized: bool = False) -> dict:
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "optimized": optimized}
+    if not supports_shape(arch, shape):
+        rec["status"] = "skipped"
+        rec["reason"] = "long_500k not applicable (DESIGN.md §4)"
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        plan = build_dryrun(arch, shape, mesh, optimized=optimized)
+        lowered = lower_plan(plan, mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        rec.update(
+            status="ok",
+            mode=plan.mode,
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "generated_code_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", 0
+                ),
+            },
+            cost={
+                "flops": float(cost.get("flops", -1)),
+                "bytes_accessed": float(cost.get("bytes accessed", -1)),
+            },
+            n_params=plan.cfg.n_params(),
+            n_active_params=plan.cfg.n_active_params(),
+        )
+        hlo = compiled.as_text()
+        rec["collectives"] = collective_stats(hlo)
+        rec["hlo_bytes"] = len(hlo)
+        if hlo_dir:
+            import zstandard as zstd
+            os.makedirs(hlo_dir, exist_ok=True)
+            suffix = "_opt" if optimized else ""
+            fname = (f"{arch}_{shape}_{rec['mesh']}{suffix}.hlo.zst"
+                     .replace("/", "-"))
+            with open(os.path.join(hlo_dir, fname), "wb") as f:
+                f.write(zstd.ZstdCompressor(level=6).compress(hlo.encode()))
+            rec["hlo_file"] = os.path.join(hlo_dir, fname)
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["wall_s"] = round(time.time() - t0, 1)
+    if verbose:
+        mark = {"ok": "PASS", "fail": "FAIL", "skipped": "SKIP"}[rec["status"]]
+        extra = ""
+        if rec["status"] == "ok":
+            gb = rec["memory"]["temp_bytes"] / 2**30
+            extra = (f" mem_temp={gb:.2f}GiB flops={rec['cost']['flops']:.2e}"
+                     f" coll={rec['collectives']['total_bytes']/2**30:.2f}GiB")
+        if rec["status"] == "fail":
+            extra = " " + rec["error"][:160]
+        print(f"[{mark}] {arch} x {shape} ({rec['mesh']}) "
+              f"{rec['wall_s']}s{extra}", flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="all assigned archs x all shapes")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the §Perf sharding scheme (O1/O2/O3)")
+    args = ap.parse_args()
+
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+
+    records = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_pair(arch, shape, multi_pod=mp,
+                               optimized=args.optimized)
+                records.append(rec)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_skip = sum(r["status"] == "skipped" for r in records)
+    n_fail = sum(r["status"] == "fail" for r in records)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped, {n_fail} failed "
+          f"of {len(records)}")
+    if n_fail:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Production mesh builders.
+
+Target: TPU v5e pods — 16x16 = 256 chips per pod ("data" x "model"),
+2 pods = 512 chips with a leading "pod" axis (pure data parallelism across
+pods; ICI within a pod, DCN across).
+
+Functions, not module constants: importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    if jax.device_count() == n:
+        return jax.make_mesh(shape, axes)
+    if jax.device_count() < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {jax.device_count()} "
+            "(the dry-run must set XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=512 before any jax import)"
+        )
+    # more devices than the mesh needs (single-pod mesh under the 512-device
+    # dry-run flag): take the first n
+    devs = np.asarray(jax.devices()[:n]).reshape(shape)
+    return Mesh(devs, axes)
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
+    """Small mesh for CPU sharding tests (device count must match)."""
+    n = int(np.prod(shape))
+    devs = np.asarray(jax.devices()[:n]).reshape(shape)
+    return Mesh(devs, axes)

@@ -1,0 +1,222 @@
+"""Dry-run construction: ShapeDtypeStruct inputs + jit shardings for every
+(architecture x input-shape) pair on a given mesh.
+
+``build_dryrun(arch, shape, mesh)`` returns everything needed to
+``jax.jit(fn, in_shardings=..., out_shardings=...).lower(*args)`` with NO
+device allocation: parameter/optimizer/cache structures come from
+``jax.eval_shape``; batches are ShapeDtypeStructs (weak-type-correct and
+shardable).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config, supports_shape
+from repro.launch.sharding import (
+    batch_axes,
+    cache_pspecs,
+    make_rules,
+    opt_pspecs,
+    param_pspecs,
+    train_batch_pspecs,
+)
+from repro.models import Model
+from repro.models.shardlib import use_sharding
+from repro.training import AdamWConfig, init_adamw, make_train_step
+
+
+class DryrunPlan(NamedTuple):
+    fn: Callable
+    args: tuple                    # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any
+    rules: dict
+    cfg: Any
+    mode: str
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _act_dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def input_specs(arch: str, shape_name: str, *, batch_override: int = 0,
+                cfg=None, seq_override: int = 0) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this pair."""
+    shape = INPUT_SHAPES[shape_name]
+    cfg = cfg or get_config(arch, shape=shape_name)
+    b = batch_override or shape.global_batch
+    s = seq_override or shape.seq_len
+    out: dict[str, Any] = {}
+    if shape.mode in ("train", "prefill"):
+        out["tokens"] = _sds((b, s), jnp.int32)
+        if cfg.kind == "encdec":
+            out["embeds"] = _sds((b, cfg.n_audio_frames, cfg.d_model),
+                                 _act_dtype(cfg))
+        if cfg.kind == "vlm":
+            out["embeds"] = _sds((b, cfg.n_image_tokens, cfg.d_model),
+                                 _act_dtype(cfg))
+        if shape.mode == "prefill":
+            out["lens"] = _sds((b,), jnp.int32)
+    else:  # decode: one new token against a seq_len cache
+        out["tokens"] = _sds((b, 1), jnp.int32)
+        out["pos"] = _sds((b,), jnp.int32)
+    return out
+
+
+def build_dryrun(arch: str, shape_name: str, mesh: Mesh,
+                 *, batch_override: int = 0,
+                 attn_mode: str = "head_dim", cfg_override=None,
+                 seq_override: int = 0, optimized: bool = False) -> DryrunPlan:
+    """``optimized=True`` applies the §Perf sharding scheme:
+      O1 train/prefill: head-sharded attention when n_heads % 16 == 0
+         (kills the per-chunk logits all-reduce of head_dim sharding);
+      O2 serving (prefill/decode): no FSDP — weights replicate over "data"
+         (no per-step weight all-gathers on the latency path);
+      O3 decode: KV cache sequence dim sharded over "model"
+         (flash-decoding partials; tiny stat psums instead of logits).
+    """
+    if not supports_shape(arch, shape_name):
+        raise ValueError(f"{arch} skips {shape_name} (DESIGN.md §4)")
+    shape = INPUT_SHAPES[shape_name]
+    if seq_override:
+        shape = dataclasses.replace(shape, seq_len=seq_override)
+    cfg = cfg_override or get_config(arch, shape=shape_name)
+    model = Model(cfg)
+    b = batch_override or shape.global_batch
+    s = shape.seq_len
+
+    mode = shape.mode
+    fsdp = True
+    if optimized:
+        if mode in ("train", "prefill"):
+            if cfg.n_heads % mesh.shape["model"] == 0:
+                attn_mode = "heads"                      # O1
+            elif cfg.kind in ("dense", "moe", "vlm", "encdec"):
+                attn_mode = "context"                    # O4 (vmapped q chunks)
+        if mode in ("prefill", "decode"):
+            fsdp = False                                 # O2
+
+    shard_batch = b > 1
+    rules = make_rules(cfg, mesh, shard_batch=shard_batch,
+                       attn_mode=attn_mode)
+    b_ax = batch_axes(mesh) if shard_batch else None
+
+    params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = param_pspecs(params_struct, cfg, mesh, attn_mode=attn_mode,
+                          fsdp=fsdp)
+    batch_struct = input_specs(arch, shape_name, batch_override=b, cfg=cfg,
+                               seq_override=shape.seq_len)
+
+    if shape.mode == "train":
+        opt_struct = jax.eval_shape(init_adamw, params_struct)
+        ospecs = opt_pspecs(pspecs)
+        bspecs = {
+            k: P(*((b_ax,) + (None,) * (v.ndim - 1)))
+            for k, v in batch_struct.items()
+        }
+        step = make_train_step(model, AdamWConfig())
+        metric_specs = {"grad_norm": P(), "lr": P(), "loss": P()}
+        return DryrunPlan(
+            fn=step,
+            args=(params_struct, opt_struct, batch_struct),
+            in_shardings=(
+                _named(mesh, pspecs), _named(mesh, ospecs),
+                _named(mesh, bspecs),
+            ),
+            out_shardings=(
+                _named(mesh, pspecs), _named(mesh, ospecs),
+                _named(mesh, metric_specs),
+            ),
+            rules=rules, cfg=cfg, mode="train",
+        )
+
+    if shape.mode == "prefill":
+        cache_len = s + (cfg.n_image_tokens if cfg.kind == "vlm" else 0)
+        cache_struct = jax.eval_shape(
+            lambda: model.init_cache(None, b, cache_len)
+        )
+        cspecs = cache_pspecs(cfg, mesh, cache_struct,
+                              shard_batch=shard_batch, shard_seq=False)
+        bspecs = {
+            k: P(*((b_ax,) + (None,) * (v.ndim - 1)))
+            for k, v in batch_struct.items()
+        }
+
+        def prefill_fn(params, batch):
+            return model.prefill(params, batch, cache_len=cache_len)
+
+        return DryrunPlan(
+            fn=prefill_fn,
+            args=(params_struct, batch_struct),
+            in_shardings=(_named(mesh, pspecs), _named(mesh, bspecs)),
+            out_shardings=(
+                _named(mesh, P(b_ax, None, rules["vocab"])),
+                _named(mesh, cspecs),
+            ),
+            rules=rules, cfg=cfg, mode="prefill",
+        )
+
+    # decode: one token against a seq_len-deep cache
+    cache_len = s
+    cache_struct = jax.eval_shape(
+        lambda: model.init_cache(None, b, cache_len)
+    )
+    # long-context decode with batch=1: shard the cache SEQUENCE dim over
+    # the batch axes; optimized BATCHED decode shards it over "model" (O3).
+    # O3 is NOT applied at batch=1: measured a 400x regression on
+    # mixtral x long_500k (ring-buffer scatter across a model-sharded seq
+    # dim lowers to per-step collective-permutes) — see §Perf iteration 3.
+    shard_seq = (not shard_batch) or optimized
+    cspecs = cache_pspecs(
+        cfg, mesh, cache_struct,
+        shard_batch=shard_batch, shard_seq=shard_seq,
+        seq_axis="model" if (optimized and shard_batch) else "batch",
+    )
+
+    def decode_fn(params, cache, tokens, pos):
+        return model.decode(params, cache, tokens, pos)
+
+    return DryrunPlan(
+        fn=decode_fn,
+        args=(params_struct, cache_struct, batch_struct["tokens"],
+              batch_struct["pos"]),
+        in_shardings=(
+            _named(mesh, pspecs), _named(mesh, cspecs),
+            NamedSharding(mesh, P(b_ax, None)),
+            NamedSharding(mesh, P(b_ax)),
+        ),
+        out_shardings=(
+            _named(mesh, P(b_ax, None, rules["vocab"])),
+            _named(mesh, cspecs),
+        ),
+        rules=rules, cfg=cfg, mode="decode",
+    )
+
+
+def lower_plan(plan: DryrunPlan, mesh: Mesh):
+    """jit + lower under the mesh/rules contexts (no execution)."""
+    jitted = jax.jit(
+        plan.fn,
+        in_shardings=plan.in_shardings,
+        out_shardings=plan.out_shardings,
+    )
+    with mesh, use_sharding(mesh, plan.rules):
+        return jitted.lower(*plan.args)

@@ -1,0 +1,91 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
+        [--reduced] [--steps 100] [--mesh debug]
+
+``--reduced`` (default on CPU) trains the smoke-scale variant on the local
+device; on a real TPU slice drop it to train the full config on the
+production mesh with the same sharding policy the dry-run validated.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.launch.sharding import make_rules, opt_pspecs, param_pspecs
+from repro.models import Model
+from repro.models.shardlib import use_sharding
+from repro.training import (
+    AdamWConfig,
+    DataConfig,
+    data_iterator,
+    init_adamw,
+    make_train_step,
+    save_checkpoint,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b", choices=ALL_ARCHS)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--no-reduced", dest="reduced", action="store_false")
+    ap.add_argument("--mesh", choices=["none", "debug", "prod", "multipod"],
+                    default="none")
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(vocab=min(cfg.vocab, 512))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = init_adamw(params)
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=args.steps)
+    step = make_train_step(model, opt_cfg)
+    data = data_iterator(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                    global_batch=args.batch, order=1))
+
+    if args.mesh == "none":
+        step = jax.jit(step)
+        ctx = None
+    else:
+        mesh = {"debug": lambda: make_debug_mesh(),
+                "prod": lambda: make_production_mesh(),
+                "multipod": lambda: make_production_mesh(multi_pod=True),
+                }[args.mesh]()
+        rules = make_rules(cfg, mesh)
+        pspecs = param_pspecs(
+            jax.eval_shape(lambda: params), cfg, mesh
+        )
+        step = jax.jit(step)
+        ctx = (mesh, rules)
+
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        if ctx:
+            with ctx[0], use_sharding(*ctx):
+                params, opt, metrics = step(params, opt, batch)
+        else:
+            params, opt, metrics = step(params, opt, batch)
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss={float(metrics['loss']):.3f} "
+                  f"({(time.time() - t0) / (i + 1):.2f}s/step)", flush=True)
+    if args.ckpt:
+        save_checkpoint(args.ckpt, {"params": params}, step=args.steps)
+        print(f"saved {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,777 @@
+"""Unified model zoo: one functional Model class covering all assigned
+architecture families (dense GQA / SWA, MoE, VLM decoder, audio enc-dec,
+xLSTM, Mamba2+shared-attention hybrid).
+
+Design choices for multi-pod dry-run sanity:
+  * layers are STACKED and iterated with jax.lax.scan — the HLO contains one
+    layer body regardless of depth, keeping 512-device SPMD compiles fast;
+  * caches carry an explicit per-slot position tensor ``kv_pos`` (B, T);
+    full caches and SWA ring buffers share one attention masking rule
+    (valid = kv_pos >= 0, causal = kv_pos <= q_pos, window optional);
+  * every architecture exposes the same three entry points:
+      forward(params, batch)           -> logits            (training)
+      prefill(params, batch, cache_len)-> (logits, cache)   (serving)
+      decode(params, cache, tokens, pos)-> (logits, cache)  (serving)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm
+from repro.models.config import Block, ModelConfig
+from repro.models.layers import (
+    AttnDims,
+    apply_rope,
+    attention_any,
+    attention_out,
+    attention_qkv,
+    gated_mlp,
+    gqa_attention,
+    init_attention,
+    init_mlp,
+    init_moe,
+    moe_mlp,
+    rms_norm,
+)
+from repro.models.shardlib import shard
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def update_cache(cache_kv, new_kv, pos):
+    """cache_kv: (B,T,n,h); new_kv: (B,S,n,h); pos: (B,) write offsets."""
+
+    def upd(c, n, p):
+        return jax.lax.dynamic_update_slice(c, n, (p, 0, 0))
+
+    return jax.vmap(upd)(cache_kv, new_kv, pos)
+
+
+def update_pos(kv_pos, pos, s):
+    """kv_pos: (B,T) slot-position tensor; write arange(pos, pos+s)."""
+
+    def upd(kp, p):
+        new = p + jnp.arange(s, dtype=kp.dtype)
+        return jax.lax.dynamic_update_slice(kp, new, (p,))
+
+    return jax.vmap(upd)(kv_pos, pos)
+
+
+def ring_update_cache(cache_kv, new_kv, pos):
+    """SWA ring buffer: write one token at slot pos % T.  new_kv: (B,1,n,h)."""
+    t = cache_kv.shape[1]
+    slot = pos % t
+
+    def upd(c, n, sl):
+        return jax.lax.dynamic_update_slice(c, n, (sl, 0, 0))
+
+    return jax.vmap(upd)(cache_kv, new_kv, slot)
+
+
+def ring_update_pos(kv_pos, pos):
+    t = kv_pos.shape[1]
+    slot = pos % t
+
+    def upd(kp, sl, p):
+        return jax.lax.dynamic_update_slice(kp, p[None].astype(kp.dtype), (sl,))
+
+    return jax.vmap(upd)(kv_pos, slot, pos)
+
+
+# ===========================================================================
+# dense / moe / vlm decoder blocks
+# ===========================================================================
+
+
+def init_dense_block(key, cfg: ModelConfig, dtype):
+    ka, km = jax.random.split(key)
+    dims = AttnDims(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": init_attention(ka, cfg.d_model, dims, dtype),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if cfg.is_moe:
+        p["moe"] = init_moe(km, cfg.d_model, cfg.d_ff, cfg.n_experts, dtype)
+    else:
+        p["mlp"] = init_mlp(km, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def dense_block_train(p, x, positions, cfg: ModelConfig, attn_mask_lens=None):
+    """Full-sequence causal block (training / prefill compute).
+
+    Returns (x, (k, v, moe_aux)) so prefill can collect the cache.
+    """
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = attention_qkv(p["attn"], h, positions, cfg.rope_theta, cfg.use_rope)
+    kv_valid = None
+    if attn_mask_lens is not None:
+        t = x.shape[1]
+        kv_valid = jnp.arange(t)[None, :] < attn_mask_lens[:, None]
+    att = attention_any(
+        q, k, v,
+        window=cfg.sliding_window,
+        q_positions=positions,
+        kv_positions=positions,
+        kv_valid=kv_valid,
+    )
+    x = x + attention_out(p["attn"], att)
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    aux = jnp.float32(0.0)
+    if cfg.is_moe:
+        y, aux = moe_mlp(p["moe"], h2, top_k=cfg.top_k,
+                         capacity_factor=cfg.capacity_factor)
+    else:
+        y = gated_mlp(p["mlp"], h2)
+    return x + y, (k, v, aux)
+
+
+def dense_block_decode(p, x, pos, k_cache, v_cache, kv_pos, cfg: ModelConfig,
+                       ring: bool):
+    """One-token decode step against a (possibly ring) KV cache."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k_new, v_new = attention_qkv(
+        p["attn"], h, pos[:, None], cfg.rope_theta, cfg.use_rope
+    )
+    if ring:
+        k_cache = ring_update_cache(k_cache, k_new, pos)
+        v_cache = ring_update_cache(v_cache, v_new, pos)
+        kv_pos = ring_update_pos(kv_pos, pos)
+    else:
+        k_cache = update_cache(k_cache, k_new, pos)
+        v_cache = update_cache(v_cache, v_new, pos)
+        kv_pos = update_pos(kv_pos, pos, 1)
+    att = gqa_attention(
+        q, k_cache, v_cache,
+        window=cfg.sliding_window,
+        q_positions=pos[:, None],
+        kv_positions=kv_pos,
+        kv_valid=kv_pos >= 0,
+    )
+    x = x + attention_out(p["attn"], att)
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        y, _ = moe_mlp(p["moe"], h2, top_k=cfg.top_k,
+                       capacity_factor=cfg.capacity_factor)
+    else:
+        y = gated_mlp(p["mlp"], h2)
+    return x + y, k_cache, v_cache, kv_pos
+
+
+# ===========================================================================
+# the Model
+# ===========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------ init
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dtype = _dtype(cfg)
+        keys = jax.random.split(key, 8)
+        params: dict[str, Any] = {
+            "embed": (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model))
+                      * 0.02).astype(dtype),
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = (
+                jax.random.normal(keys[1], (cfg.d_model, cfg.vocab))
+                * cfg.d_model ** -0.5
+            ).astype(dtype)
+        if not cfg.use_rope:
+            params["pos_emb"] = (
+                jax.random.normal(keys[2], (cfg.max_position, cfg.d_model))
+                * 0.02
+            ).astype(dtype)
+
+        if cfg.kind in ("dense", "moe", "vlm"):
+            lkeys = jax.random.split(keys[3], cfg.n_layers)
+            params["blocks"] = jax.vmap(
+                lambda k: init_dense_block(k, cfg, dtype)
+            )(lkeys)
+        elif cfg.kind == "encdec":
+            ekeys = jax.random.split(keys[3], cfg.n_enc_layers)
+            dkeys = jax.random.split(keys[4], cfg.n_layers)
+            params["enc_blocks"] = jax.vmap(
+                lambda k: init_dense_block(k, cfg, dtype)
+            )(ekeys)
+            params["dec_blocks"] = jax.vmap(
+                lambda k: self._init_decoder_block(k, dtype)
+            )(dkeys)
+            params["enc_pos"] = (
+                jax.random.normal(keys[5], (cfg.n_audio_frames, cfg.d_model))
+                * 0.02
+            ).astype(dtype)
+            params["enc_final_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+        elif cfg.kind == "ssm":
+            n_pairs = cfg.n_layers // cfg.slstm_every
+            pkeys = jax.random.split(keys[3], n_pairs)
+            params["xlstm_pairs"] = jax.vmap(
+                lambda k: self._init_xlstm_pair(k, dtype)
+            )(pkeys)
+        elif cfg.kind == "hybrid":
+            n_super = cfg.n_layers // cfg.attn_every
+            mkeys = jax.random.split(keys[3], n_super)
+            params["super_blocks"] = jax.vmap(
+                lambda k: self._init_mamba_group(k, dtype)
+            )(mkeys)
+            # zamba2's single SHARED attention+MLP block
+            params["shared_attn"] = init_dense_block(keys[4], cfg, dtype)
+        else:
+            raise ValueError(f"unknown kind {cfg.kind}")
+        return params
+
+    def _init_decoder_block(self, key, dtype):
+        cfg = self.cfg
+        ka, kc, km = jax.random.split(key, 3)
+        dims = AttnDims(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+        return {
+            "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "attn": init_attention(ka, cfg.d_model, dims, dtype),
+            "ln_x": jnp.ones((cfg.d_model,), jnp.float32),
+            "xattn": init_attention(kc, cfg.d_model, dims, dtype),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+            "mlp": init_mlp(km, cfg.d_model, cfg.d_ff, dtype),
+        }
+
+    def _init_xlstm_pair(self, key, dtype):
+        cfg = self.cfg
+        km, ks = jax.random.split(key)
+        return {
+            "ln_m": jnp.ones((cfg.d_model,), jnp.float32),
+            "mlstm": ssm.init_mlstm(km, cfg.d_model, cfg.n_heads,
+                                    cfg.head_dim, dtype),
+            "ln_s": jnp.ones((cfg.d_model,), jnp.float32),
+            "slstm": ssm.init_slstm(ks, cfg.d_model, cfg.n_heads,
+                                    cfg.head_dim, dtype),
+        }
+
+    def _init_mamba_group(self, key, dtype):
+        cfg = self.cfg
+        gkeys = jax.random.split(key, cfg.attn_every)
+        return {
+            "ln": jnp.ones((cfg.attn_every, cfg.d_model), jnp.float32),
+            "mamba": jax.vmap(
+                lambda k: ssm.init_mamba2(k, cfg.d_model, cfg.ssm_state,
+                                          cfg.conv_width, dtype)
+            )(gkeys),
+        }
+
+    # ------------------------------------------------------------ embed
+
+    def _embed(self, params, tokens, positions):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if not cfg.use_rope:
+            x = x + jnp.take(params["pos_emb"], positions, axis=0)
+        return shard(x, "batch", "seq", "embed")
+
+    def head_matrix(self, params):
+        return (
+            params["embed"].T if self.cfg.tie_embeddings
+            else params["lm_head"]
+        )
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x, self.head_matrix(params))
+        return shard(logits, "batch", "seq", "vocab")
+
+    # ------------------------------------------------------------ train
+
+    def hidden(self, params, batch: dict) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Training forward up to the FINAL NORM (no vocab projection).
+
+        Returns (normed hidden states over the token positions, moe aux).
+        The training loss projects to the vocab in chunks
+        (training.chunked_lm_loss) — materializing full (B,S,V) logits does
+        not fit HBM for the 4k/32k shapes."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s_tok = tokens.shape
+        aux = jnp.float32(0.0)
+
+        if cfg.kind == "encdec":
+            enc = batch["embeds"].astype(_dtype(cfg))
+            enc = enc + params["enc_pos"][None, : enc.shape[1]]
+            enc = self._run_encoder(params, enc)
+            positions = jnp.broadcast_to(jnp.arange(s_tok)[None], (b, s_tok))
+            x = self._embed(params, tokens, positions)
+            x, aux = self._run_decoder_train(params, x, positions, enc)
+        elif cfg.kind == "vlm" and "embeds" in batch:
+            img = batch["embeds"].astype(_dtype(cfg))
+            n_img = img.shape[1]
+            positions = jnp.broadcast_to(
+                jnp.arange(n_img + s_tok)[None], (b, n_img + s_tok)
+            )
+            x_tok = jnp.take(params["embed"], tokens, axis=0)
+            x = jnp.concatenate([img, x_tok], axis=1)
+            x = shard(x, "batch", "seq", "embed")
+            x, aux = self._run_stack_train(params, x, positions)
+            x = x[:, n_img:]
+        else:
+            positions = jnp.broadcast_to(jnp.arange(s_tok)[None], (b, s_tok))
+            x = self._embed(params, tokens, positions)
+            x, aux = self._run_stack_train(params, x, positions)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, aux
+
+    def forward(self, params, batch: dict) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Training forward returning full logits (small configs only)."""
+        x, aux = self.hidden(params, batch)
+        logits = jnp.einsum("bsd,dv->bsv", x, self.head_matrix(params))
+        return shard(logits, "batch", "seq", "vocab"), aux
+
+    def _run_stack_train(self, params, x, positions, remat: bool = True):
+        cfg = self.cfg
+        if cfg.kind in ("dense", "moe", "vlm"):
+            def body(carry, lp):
+                h, aux = carry
+                h, (_, _, a) = dense_block_train(lp, h, positions, cfg)
+                return (h, aux + a), None
+
+            if remat:
+                body = jax.checkpoint(body)
+            (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                       params["blocks"])
+            return x, aux
+        if cfg.kind == "ssm":
+            def body(carry, lp):
+                h = carry
+                hm = rms_norm(h, lp["ln_m"], cfg.norm_eps)
+                y, _ = ssm.mlstm_forward_chunked(lp["mlstm"], hm)
+                h = h + y
+                hs = rms_norm(h, lp["ln_s"], cfg.norm_eps)
+                y2, _ = ssm.slstm_forward(lp["slstm"], hs)
+                return h + y2, None
+
+            if remat:
+                body = jax.checkpoint(body)
+            x, _ = jax.lax.scan(body, x, params["xlstm_pairs"])
+            return x, jnp.float32(0.0)
+        if cfg.kind == "hybrid":
+            shared = params["shared_attn"]
+
+            def body(carry, lp):
+                h = carry
+
+                @jax.checkpoint
+                def mamba_one(hc, mp_ln):
+                    mp, ln = mp_ln
+                    hin = rms_norm(hc, ln, cfg.norm_eps)
+                    y, _ = ssm.mamba2_forward_chunked(mp, hin)
+                    return hc + y, None
+
+                h, _ = jax.lax.scan(mamba_one, h, (lp["mamba"], lp["ln"]))
+                h, _ = dense_block_train(shared, h, positions, cfg)[0], None
+                return h, None
+
+            if remat:
+                body = jax.checkpoint(body)
+            x, _ = jax.lax.scan(body, x, params["super_blocks"])
+            return x, jnp.float32(0.0)
+        raise ValueError(cfg.kind)
+
+    def _run_encoder(self, params, enc):
+        cfg = self.cfg
+        b, f, _ = enc.shape
+        positions = jnp.broadcast_to(jnp.arange(f)[None], (b, f))
+
+        def body(h, lp):
+            # bidirectional: no causal mask -> use kv_valid trick with a
+            # huge q_pos so every key passes the causal comparison
+            hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+            q, k, v = attention_qkv(lp["attn"], hn, positions,
+                                    cfg.rope_theta, False)
+            att = gqa_attention(
+                q, k, v,
+                q_positions=jnp.full((b, f), f + 1, jnp.int32),
+                kv_positions=positions,
+            )
+            h = h + attention_out(lp["attn"], att)
+            h2 = rms_norm(h, lp["ln2"], cfg.norm_eps)
+            return h + gated_mlp(lp["mlp"], h2), None
+
+        enc, _ = jax.lax.scan(body, enc, params["enc_blocks"])
+        return rms_norm(enc, params["enc_final_norm"], cfg.norm_eps)
+
+    def _run_decoder_train(self, params, x, positions, enc):
+        cfg = self.cfg
+        b, f = enc.shape[0], enc.shape[1]
+        enc_pos = jnp.broadcast_to(jnp.arange(f)[None], (b, f))
+
+        def body(h, lp):
+            hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+            q, k, v = attention_qkv(lp["attn"], hn, positions,
+                                    cfg.rope_theta, cfg.use_rope)
+            att = attention_any(q, k, v, q_positions=positions,
+                                kv_positions=positions)
+            h = h + attention_out(lp["attn"], att)
+            hx = rms_norm(h, lp["ln_x"], cfg.norm_eps)
+            qx, kx, vx = (
+                jnp.einsum("bsd,dnh->bsnh", hx, lp["xattn"]["wq"]),
+                jnp.einsum("bsd,dnh->bsnh", enc, lp["xattn"]["wk"]),
+                jnp.einsum("bsd,dnh->bsnh", enc, lp["xattn"]["wv"]),
+            )
+            xat = attention_any(
+                qx, kx, vx,
+                q_positions=jnp.full_like(positions, f + 1),
+                kv_positions=enc_pos,
+            )
+            h = h + attention_out(lp["xattn"], xat)
+            h2 = rms_norm(h, lp["ln2"], cfg.norm_eps)
+            return h + gated_mlp(lp["mlp"], h2), None
+
+        x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+        return x, jnp.float32(0.0)
+
+    # ------------------------------------------------------------ serve
+
+    def init_cache(self, params, batch: int, cache_len: int) -> dict:
+        """Allocate an empty decode cache (kv_pos = -1 -> invalid)."""
+        cfg = self.cfg
+        dtype = _dtype(cfg)
+        t = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+        kv = lambda n: jnp.zeros((n, batch, t, cfg.n_kv_heads, cfg.head_dim),
+                                 dtype)
+        pos = lambda n: jnp.full((n, batch, t), -1, jnp.int32)
+        if cfg.kind in ("dense", "moe", "vlm"):
+            return {"k": kv(cfg.n_layers), "v": kv(cfg.n_layers),
+                    "kv_pos": pos(cfg.n_layers)}
+        if cfg.kind == "encdec":
+            nl = cfg.n_layers
+            f = cfg.n_audio_frames
+            cross = jnp.zeros((nl, batch, f, cfg.n_kv_heads, cfg.head_dim),
+                              dtype)
+            return {"k": kv(nl), "v": kv(nl), "kv_pos": pos(nl),
+                    "cross_k": cross, "cross_v": cross,
+                    "enc_len": jnp.zeros((batch,), jnp.int32)}
+        if cfg.kind == "ssm":
+            n_pairs = cfg.n_layers // cfg.slstm_every
+            nh, hd = cfg.n_heads, cfg.head_dim
+            z = lambda *s: jnp.zeros((n_pairs, batch, *s), jnp.float32)
+            return {
+                "mlstm_c": z(nh, hd, hd), "mlstm_n": z(nh, hd),
+                "mlstm_m": jnp.full((n_pairs, batch, nh), -1e30, jnp.float32),
+                "slstm_c": z(nh, hd), "slstm_n": z(nh, hd),
+                "slstm_h": z(nh, hd),
+                "slstm_m": jnp.full((n_pairs, batch, nh, hd), -1e30,
+                                    jnp.float32),
+            }
+        if cfg.kind == "hybrid":
+            n_super = cfg.n_layers // cfg.attn_every
+            d_inner, pdim, h, n = ssm.mamba2_dims(cfg.d_model, cfg.ssm_state)
+            w = cfg.conv_width
+            return {
+                "mamba_h": jnp.zeros(
+                    (n_super, cfg.attn_every, batch, h, pdim, n), jnp.float32
+                ),
+                "mamba_conv": jnp.zeros(
+                    (n_super, cfg.attn_every, batch, w - 1, d_inner + 2 * n),
+                    _dtype(cfg),
+                ),
+                "k": kv(n_super), "v": kv(n_super), "kv_pos": pos(n_super),
+            }
+        raise ValueError(cfg.kind)
+
+    def prefill(self, params, batch: dict, cache_len: int):
+        """Process the full prompt; returns (last-position logits, cache).
+
+        batch: {"tokens": (B,S), optional "embeds", optional "lens": (B,)}.
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        lens = batch.get("lens", jnp.full((b,), s, jnp.int32))
+        cache = self.init_cache(params, b, cache_len)
+
+        if cfg.kind in ("dense", "moe", "vlm"):
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+            x = self._embed(params, tokens, positions)
+            if cfg.kind == "vlm" and "embeds" in batch:
+                img = batch["embeds"].astype(_dtype(cfg))
+                x = jnp.concatenate([img, jnp.take(params["embed"], tokens,
+                                                   axis=0)], axis=1)
+                x = shard(x, "batch", "seq", "embed")
+                s = x.shape[1]
+                positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+                lens = lens + img.shape[1]  # prompt = image tokens + text
+
+            def body(carry, lp):
+                h = carry
+                h, (k, v, _) = dense_block_train(lp, h, positions, cfg,
+                                                 attn_mask_lens=lens)
+                return h, (k, v)
+
+            x, (ks, vs) = jax.lax.scan(body, x, params["blocks"])
+            cache = self._fill_kv(cache, ks, vs, lens, s)
+            logits = self._logits(params, _gather_last(x, lens))
+            return logits, cache
+
+        if cfg.kind == "encdec":
+            enc = batch["embeds"].astype(_dtype(cfg))
+            enc = enc + params["enc_pos"][None, : enc.shape[1]]
+            enc = self._run_encoder(params, enc)
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+            x = self._embed(params, tokens, positions)
+            f = enc.shape[1]
+            enc_pos = jnp.broadcast_to(jnp.arange(f)[None], (b, f))
+
+            def body(carry, lp):
+                h = carry
+                hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+                q, k, v = attention_qkv(lp["attn"], hn, positions,
+                                        cfg.rope_theta, cfg.use_rope)
+                att = attention_any(q, k, v, q_positions=positions,
+                                    kv_positions=positions)
+                h = h + attention_out(lp["attn"], att)
+                hx = rms_norm(h, lp["ln_x"], cfg.norm_eps)
+                kx = jnp.einsum("bsd,dnh->bsnh", enc, lp["xattn"]["wk"])
+                vx = jnp.einsum("bsd,dnh->bsnh", enc, lp["xattn"]["wv"])
+                qx = jnp.einsum("bsd,dnh->bsnh", hx, lp["xattn"]["wq"])
+                xat = attention_any(
+                    qx, kx, vx,
+                    q_positions=jnp.full_like(positions, f + 1),
+                    kv_positions=enc_pos,
+                )
+                h = h + attention_out(lp["xattn"], xat)
+                h2 = rms_norm(h, lp["ln2"], cfg.norm_eps)
+                return h + gated_mlp(lp["mlp"], h2), (k, v, kx, vx)
+
+            x, (ks, vs, kxs, vxs) = jax.lax.scan(body, x,
+                                                 params["dec_blocks"])
+            cache = self._fill_kv(cache, ks, vs, lens, s)
+            cache["cross_k"], cache["cross_v"] = kxs, vxs
+            logits = self._logits(params, _gather_last(x, lens))
+            return logits, cache
+
+        if cfg.kind == "ssm":
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+            x = self._embed(params, tokens, positions)
+
+            def body(carry, lp):
+                h = carry
+                hm = rms_norm(h, lp["ln_m"], cfg.norm_eps)
+                y, m_state = ssm.mlstm_forward_chunked(lp["mlstm"], hm)
+                h = h + y
+                hs = rms_norm(h, lp["ln_s"], cfg.norm_eps)
+                y2, sl_state = ssm.slstm_forward(lp["slstm"], hs)
+                return h + y2, (m_state, sl_state)
+
+            x, (m_states, sl_states) = jax.lax.scan(body, x,
+                                                    params["xlstm_pairs"])
+            cache["mlstm_c"], cache["mlstm_n"], cache["mlstm_m"] = m_states
+            cache["slstm_c"], cache["slstm_n"] = sl_states[0], sl_states[1]
+            cache["slstm_h"], cache["slstm_m"] = sl_states[2], sl_states[3]
+            logits = self._logits(params, _gather_last(x, lens))
+            return logits, cache
+
+        if cfg.kind == "hybrid":
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+            x = self._embed(params, tokens, positions)
+            shared = params["shared_attn"]
+
+            def body(carry, lp):
+                h = carry
+
+                def mamba_one(hc, mp_ln):
+                    mp, ln = mp_ln
+                    hin = rms_norm(hc, ln, cfg.norm_eps)
+                    y, st = ssm.mamba2_forward_chunked(mp, hin)
+                    return hc + y, st
+
+                h, m_states = jax.lax.scan(mamba_one, h,
+                                           (lp["mamba"], lp["ln"]))
+                h, (k, v, _) = dense_block_train(shared, h, positions, cfg,
+                                                 attn_mask_lens=lens)
+                return h, (m_states, k, v)
+
+            x, (m_states, ks, vs) = jax.lax.scan(body, x,
+                                                 params["super_blocks"])
+            cache = self._fill_kv(cache, ks, vs, lens, s)
+            cache["mamba_h"], cache["mamba_conv"] = m_states
+            logits = self._logits(params, _gather_last(x, lens))
+            return logits, cache
+
+        raise ValueError(cfg.kind)
+
+    def _fill_kv(self, cache, ks, vs, lens, s):
+        """Copy prefill K/V (L,B,S,n,h) into the cache's first S slots."""
+        cfg = self.cfg
+        t = cache["k"].shape[2]
+        if cfg.sliding_window and t < s:
+            # ring buffer smaller than the prompt: keep the last t tokens
+            ks, vs = ks[:, :, -t:], vs[:, :, -t:]
+            kvp = jnp.arange(s - t, s, dtype=jnp.int32)
+            kvp = jnp.broadcast_to(kvp[None, None], ks.shape[:3])
+        else:
+            pad = t - ks.shape[2]
+            ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            kvp = jnp.pad(
+                jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, None],
+                                 (ks.shape[0], ks.shape[1], s)),
+                ((0, 0), (0, 0), (0, pad)), constant_values=-1,
+            )
+        # mask out slots beyond each row's true prompt length
+        valid = kvp < lens[None, :, None]
+        kvp = jnp.where(valid, kvp, -1)
+        cache["k"], cache["v"], cache["kv_pos"] = ks, vs, kvp
+        return cache
+
+    def decode(self, params, cache: dict, tokens, pos):
+        """One decode step.  tokens: (B,1) int32; pos: (B,) positions of the
+        new token.  Returns (logits (B,1,V), updated cache)."""
+        cfg = self.cfg
+        b = tokens.shape[0]
+        x = self._embed(params, tokens, pos[:, None])
+        ring = bool(cfg.sliding_window) and (
+            "k" in cache and cache["k"].shape[2] == cfg.sliding_window
+        )
+
+        if cfg.kind in ("dense", "moe", "vlm"):
+            def body(carry, xs):
+                h = carry
+                lp, kc, vc, kp = xs
+                h, kc, vc, kp = dense_block_decode(lp, h, pos, kc, vc, kp,
+                                                   cfg, ring)
+                return h, (kc, vc, kp)
+
+            x, (ks, vs, kps) = jax.lax.scan(
+                body, x, (params["blocks"], cache["k"], cache["v"],
+                          cache["kv_pos"])
+            )
+            cache = dict(cache, k=ks, v=vs, kv_pos=kps)
+            return self._logits(params, x), cache
+
+        if cfg.kind == "encdec":
+            f = cache["cross_k"].shape[2]
+            enc_pos = jnp.broadcast_to(jnp.arange(f)[None], (b, f))
+
+            def body(carry, xs):
+                h = carry
+                lp, kc, vc, kp, ckx, cvx = xs
+                h2, kc, vc, kp = dense_block_decode_selfonly(
+                    lp, h, pos, kc, vc, kp, cfg
+                )
+                hx = rms_norm(h2, lp["ln_x"], cfg.norm_eps)
+                qx = jnp.einsum("bsd,dnh->bsnh", hx, lp["xattn"]["wq"])
+                xat = gqa_attention(
+                    qx, ckx, cvx,
+                    q_positions=jnp.full((b, 1), f + 1, jnp.int32),
+                    kv_positions=enc_pos,
+                )
+                h2 = h2 + attention_out(lp["xattn"], xat)
+                hm = rms_norm(h2, lp["ln2"], cfg.norm_eps)
+                h2 = h2 + gated_mlp(lp["mlp"], hm)
+                return h2, (kc, vc, kp)
+
+            x, (ks, vs, kps) = jax.lax.scan(
+                body, x,
+                (params["dec_blocks"], cache["k"], cache["v"],
+                 cache["kv_pos"], cache["cross_k"], cache["cross_v"]),
+            )
+            cache = dict(cache, k=ks, v=vs, kv_pos=kps)
+            return self._logits(params, x), cache
+
+        if cfg.kind == "ssm":
+            def body(carry, xs):
+                h = carry
+                lp, mc, mn, mm, sc, sn, sh, sm = xs
+                hm = rms_norm(h, lp["ln_m"], cfg.norm_eps)
+                y, (mc, mn, mm) = ssm.mlstm_decode(lp["mlstm"], hm,
+                                                   (mc, mn, mm))
+                h = h + y
+                hs = rms_norm(h, lp["ln_s"], cfg.norm_eps)
+                y2, (sc, sn, sh, sm) = ssm.slstm_decode(lp["slstm"], hs,
+                                                        (sc, sn, sh, sm))
+                return h + y2, (mc, mn, mm, sc, sn, sh, sm)
+
+            x, states = jax.lax.scan(
+                body, x,
+                (params["xlstm_pairs"], cache["mlstm_c"], cache["mlstm_n"],
+                 cache["mlstm_m"], cache["slstm_c"], cache["slstm_n"],
+                 cache["slstm_h"], cache["slstm_m"]),
+            )
+            cache = dict(
+                cache,
+                mlstm_c=states[0], mlstm_n=states[1], mlstm_m=states[2],
+                slstm_c=states[3], slstm_n=states[4], slstm_h=states[5],
+                slstm_m=states[6],
+            )
+            return self._logits(params, x), cache
+
+        if cfg.kind == "hybrid":
+            shared = params["shared_attn"]
+
+            def body(carry, xs):
+                h = carry
+                lp, mh, mconv, kc, vc, kp = xs
+
+                def mamba_one(hc, packed):
+                    mp, ln, st, cv = packed
+                    hin = rms_norm(hc, ln, cfg.norm_eps)
+                    y, (st, cv) = ssm.mamba2_decode(mp, hin, st, cv)
+                    return hc + y, (st, cv)
+
+                h, (mh, mconv) = jax.lax.scan(
+                    mamba_one, h, (lp["mamba"], lp["ln"], mh, mconv)
+                )
+                h, kc, vc, kp = dense_block_decode(shared, h, pos, kc, vc,
+                                                   kp, cfg, ring)
+                return h, (mh, mconv, kc, vc, kp)
+
+            x, (mh, mconv, ks, vs, kps) = jax.lax.scan(
+                body, x,
+                (params["super_blocks"], cache["mamba_h"],
+                 cache["mamba_conv"], cache["k"], cache["v"],
+                 cache["kv_pos"]),
+            )
+            cache = dict(cache, mamba_h=mh, mamba_conv=mconv, k=ks, v=vs,
+                         kv_pos=kps)
+            return self._logits(params, x), cache
+
+        raise ValueError(cfg.kind)
+
+
+def _gather_last(x, lens):
+    """x: (B,S,D); lens: (B,) true lengths -> (B,1,D) at position lens-1."""
+    b = x.shape[0]
+    idx = jnp.clip(lens - 1, 0, x.shape[1] - 1)
+    return x[jnp.arange(b), idx][:, None, :]
+
+
+def dense_block_decode_selfonly(p, x, pos, k_cache, v_cache, kv_pos,
+                                cfg: ModelConfig):
+    """Self-attention part of a decoder block (cross-attn handled outside)."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k_new, v_new = attention_qkv(
+        p["attn"], h, pos[:, None], cfg.rope_theta, cfg.use_rope
+    )
+    k_cache = update_cache(k_cache, k_new, pos)
+    v_cache = update_cache(v_cache, v_new, pos)
+    kv_pos = update_pos(kv_pos, pos, 1)
+    att = gqa_attention(
+        q, k_cache, v_cache,
+        q_positions=pos[:, None],
+        kv_positions=kv_pos,
+        kv_valid=kv_pos >= 0,
+    )
+    return x + attention_out(p["attn"], att), k_cache, v_cache, kv_pos
+
+

@@ -1,0 +1,22 @@
+"""MLP-based agent demand prediction (paper §4.2) + heavy baseline."""
+
+from repro.predictor.heavy import HeavyPredictor
+from repro.predictor.mlp import MlpCostModel, init_mlp_params, mlp_apply
+from repro.predictor.service import (
+    AgentCostPredictor,
+    TrainedClassModel,
+    relative_error,
+)
+from repro.predictor.tfidf import TfidfVectorizer, tokenize
+
+__all__ = [
+    "HeavyPredictor",
+    "MlpCostModel",
+    "init_mlp_params",
+    "mlp_apply",
+    "AgentCostPredictor",
+    "TrainedClassModel",
+    "relative_error",
+    "TfidfVectorizer",
+    "tokenize",
+]

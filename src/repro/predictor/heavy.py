@@ -1,0 +1,134 @@
+"""Heavy single-model predictor baseline (Table 1's DistilBERT/S3 stand-in).
+
+A small-from-scratch transformer encoder regressor trained on the *pooled*
+corpus (one model for every agent class — the S3 design the paper argues
+against).  No pretrained weights exist offline, so this is a size/latency-
+faithful substitute: it is two orders of magnitude more compute per
+prediction than the MLP and lacks the per-class prior, which is exactly the
+comparison axis of Table 1 (accuracy, inference overhead, JCT impact,
+training time).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.predictor.tfidf import tokenize
+
+VOCAB = 4096
+MAX_LEN = 128
+
+
+def _hash_tokens(prompt: str) -> np.ndarray:
+    ids = [(hash(t) % (VOCAB - 2)) + 2 for t in tokenize(prompt)[:MAX_LEN]]
+    out = np.zeros(MAX_LEN, np.int32)
+    out[: len(ids)] = ids
+    return out
+
+
+def init_encoder_params(key, d: int = 256, n_layers: int = 4, n_heads: int = 4):
+    params = {"embed": None, "pos": None, "layers": [], "head": None}
+    key, k1, k2 = jax.random.split(key, 3)
+    params["embed"] = jax.random.normal(k1, (VOCAB, d)) * 0.02
+    params["pos"] = jax.random.normal(k2, (MAX_LEN, d)) * 0.02
+    for _ in range(n_layers):
+        key, *ks = jax.random.split(key, 7)
+        params["layers"].append(
+            {
+                "wq": jax.random.normal(ks[0], (d, d)) * (d ** -0.5),
+                "wk": jax.random.normal(ks[1], (d, d)) * (d ** -0.5),
+                "wv": jax.random.normal(ks[2], (d, d)) * (d ** -0.5),
+                "wo": jax.random.normal(ks[3], (d, d)) * (d ** -0.5),
+                "w1": jax.random.normal(ks[4], (d, 4 * d)) * (d ** -0.5),
+                "w2": jax.random.normal(ks[5], (4 * d, d)) * ((4 * d) ** -0.5),
+            }
+        )
+    key, kh = jax.random.split(key)
+    params["head"] = jax.random.normal(kh, (d, 1)) * (d ** -0.5)
+    return params
+
+
+N_HEADS = 4
+
+
+def encoder_apply(params, ids, n_heads: int = N_HEADS):
+    x = params["embed"][ids] + params["pos"][None, : ids.shape[1]]
+    mask = (ids > 0)[..., None]
+    for lyr in params["layers"]:
+        b, s, d = x.shape
+        hd = d // n_heads
+
+        def split(h):
+            return h.reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+
+        q, k, v = split(x @ lyr["wq"]), split(x @ lyr["wk"]), split(x @ lyr["wv"])
+        att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(hd)
+        att = jax.nn.softmax(att, axis=-1)
+        o = (att @ v).transpose(0, 2, 1, 3).reshape(b, s, d)
+        x = x + o @ lyr["wo"]
+        x = x + jax.nn.gelu(x @ lyr["w1"]) @ lyr["w2"]
+        x = x * mask
+    pooled = x.sum(1) / jnp.maximum(mask.sum(1), 1)
+    return (pooled @ params["head"])[..., 0]
+
+
+def _loss(params, ids, y):
+    return jnp.mean((encoder_apply(params, ids) - y) ** 2)
+
+
+@jax.jit
+def _sgd_step(params, ids, y, lr):
+    grads = jax.grad(_loss)(params, ids, y)
+    return jax.tree.map(
+        lambda p, g: p - lr * g if isinstance(p, jnp.ndarray) else p,
+        params,
+        grads,
+        is_leaf=lambda x: not isinstance(x, (dict, list)),
+    )
+
+
+@dataclasses.dataclass
+class HeavyPredictor:
+    params: dict
+
+    @classmethod
+    def train(
+        cls,
+        prompts: Sequence[str],
+        costs: Sequence[float],
+        *,
+        seed: int = 0,
+        epochs: int = 30,
+        batch: int = 32,
+        lr: float = 3e-4,
+    ) -> "HeavyPredictor":
+        ids = np.stack([_hash_tokens(p) for p in prompts])
+        y = np.log1p(np.asarray(costs, np.float32))
+        params = init_encoder_params(jax.random.PRNGKey(seed))
+        rng = np.random.default_rng(seed)
+        n = len(prompts)
+        for _ in range(epochs):
+            order = rng.permutation(n)
+            for s in range(0, n, batch):
+                idx = order[s : s + batch]
+                params = _sgd_step(
+                    params, jnp.asarray(ids[idx]), jnp.asarray(y[idx]),
+                    jnp.float32(lr),
+                )
+        return cls(params=params)
+
+    def predict(self, prompt: str) -> float:
+        ids = jnp.asarray(_hash_tokens(prompt)[None])
+        logc = float(encoder_apply(self.params, ids)[0])
+        return float(np.expm1(np.clip(logc, 0.0, 30.0)))
+
+    def predict_batch(self, prompts: Sequence[str]) -> np.ndarray:
+        ids = jnp.asarray(np.stack([_hash_tokens(p) for p in prompts]))
+        logc = np.asarray(encoder_apply(self.params, ids))
+        return np.expm1(np.clip(logc, 0.0, 30.0))

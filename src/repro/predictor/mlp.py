@@ -1,0 +1,154 @@
+"""Per-agent-type cost predictor: 4-layer MLP in pure JAX (paper §4.2).
+
+One model per agent class (the agent type is the prior that makes prediction
+accurate — App. A's demand stability).  Trained on ~100 samples with MSE +
+L2 via Adam; the first hidden width is proportional to the input feature
+width, mirroring the paper's "number of neurons in the first layer is
+proportional to the average agent input size".
+
+Targets are log-transformed: agent KV token-time spans ~4 orders of
+magnitude across classes, and relative (not absolute) error is what the
+scheduler cares about.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_mlp_params(key, in_dim: int, widths: Sequence[int]) -> list[dict]:
+    params = []
+    dims = [in_dim, *widths, 1]
+    for i, (a, b) in enumerate(zip(dims, dims[1:])):
+        key, sub = jax.random.split(key)
+        params.append(
+            {
+                "w": jax.random.normal(sub, (a, b), jnp.float32)
+                * jnp.sqrt(2.0 / a),
+                "b": jnp.zeros((b,), jnp.float32),
+            }
+        )
+    return params
+
+
+def mlp_apply(params, x):
+    h = x
+    for layer in params[:-1]:
+        h = jax.nn.relu(h @ layer["w"] + layer["b"])
+    out = h @ params[-1]["w"] + params[-1]["b"]
+    return out[..., 0]
+
+
+def _loss(params, x, y, l2: float):
+    pred = mlp_apply(params, x)
+    mse = jnp.mean((pred - y) ** 2)
+    reg = sum(jnp.sum(p["w"] ** 2) for p in params)
+    return mse + l2 * reg
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "l2"))
+def _adam_step(params, opt_state, x, y, step, lr: float, l2: float):
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    grads = jax.grad(_loss)(params, x, y, l2)
+    m, v = opt_state
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, v, grads)
+    mhat = jax.tree.map(lambda m_: m_ / (1 - b1 ** step), m)
+    vhat = jax.tree.map(lambda v_: v_ / (1 - b2 ** step), v)
+    params = jax.tree.map(
+        lambda p, m_, v_: p - lr * m_ / (jnp.sqrt(v_) + eps), params, mhat, vhat
+    )
+    return params, (m, v)
+
+
+@dataclasses.dataclass
+class MlpCostModel:
+    """log-cost regressor for one agent class.
+
+    Predictions are clipped to the (slightly widened) range of the training
+    targets: App. A's *demand stability* means an agent class's cost lives in
+    a narrow band across runs, so out-of-band extrapolations of a small MLP
+    are never trusted.  With the log-space target this also bounds the worst
+    multiplicative error — which is the robustness knob Fig. 10 studies.
+    """
+
+    params: list[dict]
+    x_mean: np.ndarray
+    x_std: np.ndarray
+    y_mean: float
+    y_lo: float
+    y_hi: float
+
+    @classmethod
+    def train(
+        cls,
+        x: np.ndarray,
+        cost: np.ndarray,
+        *,
+        seed: int = 0,
+        epochs: int = 800,
+        lr: float = 3e-3,
+        l2: float = 3e-4,
+        width_factor: float = 1.0,
+    ) -> "MlpCostModel":
+        x = np.asarray(x, np.float32)
+        y = np.log1p(np.asarray(cost, np.float32))
+        # center the target: a ReLU net initialized near zero should learn
+        # the *deviation* from the class-mean log cost, not the ~e^12 scale
+        y_mean = float(y.mean())
+        y = y - y_mean
+        x_mean = x.mean(axis=0)
+        # floor the scale: near-constant training features must not explode
+        # on unseen inputs (a word seen once in training has std ~0)
+        x_std = np.maximum(x.std(axis=0), 1e-2)
+        xn = (x - x_mean) / x_std
+        in_dim = x.shape[1]
+        # 4-layer MLP; first width proportional to the input size (paper)
+        w1 = max(16, int(in_dim * width_factor))
+        widths = [w1, max(8, w1 // 2), max(8, w1 // 4)]
+        params = init_mlp_params(jax.random.PRNGKey(seed), in_dim, widths)
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        opt_state = (zeros, jax.tree.map(jnp.zeros_like, params))
+        # 80/20 train/validation split with early stopping: with ~100
+        # samples a small MLP memorizes quickly; the val split picks the
+        # epoch with the best generalization (then we keep those weights)
+        n = xn.shape[0]
+        perm = np.random.default_rng(seed).permutation(n)
+        n_val = max(1, n // 5)
+        vi, ti = perm[:n_val], perm[n_val:]
+        xj, yj = jnp.asarray(xn[ti]), jnp.asarray(y[ti])
+        xv, yv = jnp.asarray(xn[vi]), jnp.asarray(y[vi])
+        best_val, best_params, since_best = np.inf, params, 0
+        for step in range(1, epochs + 1):
+            params, opt_state = _adam_step(
+                params, opt_state, xj, yj, step, lr, l2
+            )
+            if step % 5 == 0:
+                val = float(jnp.mean((mlp_apply(params, xv) - yv) ** 2))
+                if val < best_val - 1e-5:
+                    best_val, best_params, since_best = val, params, 0
+                else:
+                    since_best += 5
+                    if since_best >= 60:
+                        break
+        params = best_params
+        margin = 0.25  # ~ +/- 28% beyond the observed band
+        return cls(
+            params=jax.device_get(params),
+            x_mean=x_mean,
+            x_std=x_std,
+            y_mean=y_mean,
+            y_lo=float(y.min() + y_mean - margin),
+            y_hi=float(y.max() + y_mean + margin),
+        )
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        x = (np.asarray(x, np.float32) - self.x_mean) / self.x_std
+        logc = np.asarray(mlp_apply(self.params, jnp.asarray(x))) + self.y_mean
+        return np.expm1(np.clip(logc, self.y_lo, self.y_hi))

@@ -1,0 +1,21 @@
+"""Discrete-event cluster simulator + metrics (paper-scale experiments)."""
+
+from repro.sim.cluster import ClusterSim, SimAgent, SimResult
+from repro.sim.metrics import (
+    FairnessStats,
+    JctStats,
+    fair_ratios,
+    fairness_stats,
+    jct_stats,
+)
+
+__all__ = [
+    "ClusterSim",
+    "SimAgent",
+    "SimResult",
+    "FairnessStats",
+    "JctStats",
+    "fair_ratios",
+    "fairness_stats",
+    "jct_stats",
+]

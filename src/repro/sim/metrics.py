@@ -1,0 +1,78 @@
+"""Metrics for the paper's evaluation (§5.1 Metrics).
+
+Efficiency: average / P90 job completion time (JCT).
+Fairness: finish-time fair ratio — a job's completion time under a reference
+fair scheduler (VTC in the paper's Fig. 8; GPS for the theorem check)
+divided by its realistic completion time.  Ratio >= 1 means the job was not
+delayed relative to the fair reference.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class JctStats:
+    mean: float
+    p50: float
+    p90: float
+    p99: float
+    n: int
+
+    def row(self) -> str:
+        return (
+            f"mean={self.mean:.1f}s p50={self.p50:.1f}s "
+            f"p90={self.p90:.1f}s p99={self.p99:.1f}s n={self.n}"
+        )
+
+
+def jct_stats(jct: Mapping[int, float]) -> JctStats:
+    v = np.asarray(sorted(jct.values()), dtype=np.float64)
+    if v.size == 0:
+        return JctStats(0.0, 0.0, 0.0, 0.0, 0)
+    return JctStats(
+        mean=float(v.mean()),
+        p50=float(np.percentile(v, 50)),
+        p90=float(np.percentile(v, 90)),
+        p99=float(np.percentile(v, 99)),
+        n=int(v.size),
+    )
+
+
+def fair_ratios(
+    realistic_jct: Mapping[int, float], reference_jct: Mapping[int, float]
+) -> dict[int, float]:
+    """finish-time fair ratio per agent: reference / realistic (higher=better)."""
+    out = {}
+    for k, real in realistic_jct.items():
+        ref = reference_jct.get(k)
+        if ref is None or real <= 0:
+            continue
+        out[k] = ref / real
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class FairnessStats:
+    frac_not_delayed: float      # ratio >= 1 (within tolerance)
+    worst_delay_pct: float       # max relative delay among delayed agents
+    mean_delay_pct_of_delayed: float
+    n: int
+
+
+def fairness_stats(ratios: Mapping[int, float], tol: float = 1e-6) -> FairnessStats:
+    r = np.asarray(list(ratios.values()), dtype=np.float64)
+    if r.size == 0:
+        return FairnessStats(1.0, 0.0, 0.0, 0)
+    delayed = r[r < 1.0 - tol]
+    delay_pct = (1.0 / np.maximum(delayed, 1e-12) - 1.0) * 100.0
+    return FairnessStats(
+        frac_not_delayed=float((r >= 1.0 - tol).mean()),
+        worst_delay_pct=float(delay_pct.max()) if delayed.size else 0.0,
+        mean_delay_pct_of_delayed=float(delay_pct.mean()) if delayed.size else 0.0,
+        n=int(r.size),
+    )

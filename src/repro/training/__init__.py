@@ -1,0 +1,29 @@
+"""Training substrate: AdamW, LM loss/train step, data pipeline, ckpt."""
+
+from repro.training.checkpoint import restore_checkpoint, save_checkpoint
+from repro.training.data import DataConfig, SyntheticLM, data_iterator
+from repro.training.optimizer import (
+    AdamState,
+    AdamWConfig,
+    adamw_update,
+    init_adamw,
+    lr_schedule,
+)
+from repro.training.train import chunked_lm_loss, lm_loss, make_eval_step, make_train_step
+
+__all__ = [
+    "restore_checkpoint",
+    "save_checkpoint",
+    "DataConfig",
+    "SyntheticLM",
+    "data_iterator",
+    "AdamState",
+    "AdamWConfig",
+    "adamw_update",
+    "init_adamw",
+    "lr_schedule",
+    "chunked_lm_loss",
+    "lm_loss",
+    "make_eval_step",
+    "make_train_step",
+]

@@ -1,0 +1,69 @@
+"""Msgpack checkpointing for param/optimizer pytrees (orbax-free).
+
+Trees are flattened to (path, array) pairs; arrays are serialized with
+dtype/shape headers.  Works for any pytree of jnp/np arrays + scalars.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _key_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    payload = {"step": step, "arrays": {}}
+    for kpath, leaf in flat:
+        arr = np.asarray(jax.device_get(leaf))
+        payload["arrays"][_key_str(kpath)] = {
+            "dtype": str(arr.dtype),
+            "shape": list(arr.shape),
+            "data": arr.tobytes(),
+        }
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def restore_checkpoint(path: str, tree_like: Any) -> tuple[Any, int]:
+    """Restore into the structure of ``tree_like`` (shapes must match)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    arrays = payload["arrays"]
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    for kpath, leaf in flat:
+        k = _key_str(kpath)
+        if k not in arrays:
+            raise KeyError(f"checkpoint missing leaf {k}")
+        rec = arrays[k]
+        arr = np.frombuffer(rec["data"], dtype=rec["dtype"]).reshape(
+            rec["shape"]
+        )
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(
+                f"shape mismatch for {k}: ckpt {arr.shape} vs {np.shape(leaf)}"
+            )
+        leaves.append(arr)
+    return (
+        jax.tree_util.tree_unflatten(treedef, leaves),
+        int(payload["step"]),
+    )

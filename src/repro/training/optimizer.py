@@ -1,0 +1,89 @@
+"""AdamW from scratch (no optax offline) with a linear-warmup cosine decay.
+
+State is a pytree mirroring the params (m, v) plus a scalar step; everything
+shards with the same PartitionSpecs as the parameters (ZeRO-style: optimizer
+states live wherever the parameter shard lives).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray          # ()
+    m: Any                     # pytree like params
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    grad_clip: float = 1.0
+
+
+def init_adamw(params) -> AdamState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamState(
+        step=jnp.zeros((), jnp.int32),
+        m=zeros,
+        v=jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params),
+    )
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    prog = jnp.clip(
+        (step - cfg.warmup_steps)
+        / max(1, cfg.total_steps - cfg.warmup_steps),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(cfg: AdamWConfig, grads, state: AdamState, params):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    m = jax.tree.map(
+        lambda m_, g: cfg.b1 * m_ + (1 - cfg.b1) * g, state.m, grads
+    )
+    v = jax.tree.map(
+        lambda v_, g: cfg.b2 * v_ + (1 - cfg.b2) * g * g, state.v, grads
+    )
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+    lr = lr_schedule(cfg, step)
+
+    def upd(p, m_, v_):
+        u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + cfg.eps)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, AdamState(step=step, m=m, v=v), {
+        "grad_norm": gnorm,
+        "lr": lr,
+    }

@@ -1,0 +1,31 @@
+"""Agent workload suite: the paper's 9 agent classes + arrival synthesis."""
+
+from repro.workloads.agents import (
+    AGENT_CLASSES,
+    SIZE_BUCKETS,
+    SIZE_PROBS,
+    AgentClass,
+    SampledAgent,
+    sample_agent,
+    sample_mixed_suite,
+    skew_normal,
+)
+from repro.workloads.arrivals import (
+    DENSITY_WINDOWS_S,
+    arrivals_for_density,
+    mooncake_like_arrivals,
+)
+
+__all__ = [
+    "AGENT_CLASSES",
+    "SIZE_BUCKETS",
+    "SIZE_PROBS",
+    "AgentClass",
+    "SampledAgent",
+    "sample_agent",
+    "sample_mixed_suite",
+    "skew_normal",
+    "DENSITY_WINDOWS_S",
+    "arrivals_for_density",
+    "mooncake_like_arrivals",
+]

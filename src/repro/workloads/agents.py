@@ -1,0 +1,223 @@
+"""The paper's 9-class agent workload suite (§5.1 Workloads).
+
+Classes: (a) MapReduce Summarization (MRS), (b) Plan-and-Execution (PE),
+(c) Code Checking (CC), (d) KBQA Verification (KBQAV), (e) Equation
+Verification (EV), (f) Fact Verification (FV), (g) ALFWorld Interaction
+(ALFWI), (h) Document Merging (DM), (i) Self Consistency (SC).
+
+Sampling probabilities follow the paper: small 72%, medium 26%, large 2%
+(small = EV, FV, CC, ALFWI, KBQAV; medium = PE, SC; large = DM, MRS — the
+paper's "CG" in the medium list is its own enumeration's CC).
+
+Per Appendix A, each inference stage of an agent class has a *stable*
+demand distribution across trial runs, modeled as a skew-normal over
+prefill/decode token lengths.  Each sampled agent also carries a synthetic
+prompt whose token statistics encode the latent demand (length and keyword
+counts correlate with cost), which is what makes the per-class TF-IDF→MLP
+predictor learnable exactly as the paper exploits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.cost import InferenceSpec, MemoryFamily, agent_cost
+
+
+def skew_normal(
+    rng: np.random.Generator, loc: float, scale: float, alpha: float, size=None
+):
+    """Azzalini skew-normal sampler (scipy-free)."""
+    delta = alpha / math.sqrt(1.0 + alpha * alpha)
+    z0 = np.abs(rng.standard_normal(size))
+    z1 = rng.standard_normal(size)
+    x = delta * z0 + math.sqrt(1.0 - delta * delta) * z1
+    return loc + scale * x
+
+
+@dataclasses.dataclass(frozen=True)
+class StageTemplate:
+    """One stage of an agent's task graph."""
+
+    n_parallel: tuple[int, int]          # [lo, hi] parallel inferences
+    prefill: tuple[float, float, float]  # skew-normal (loc, scale, alpha)
+    decode: tuple[float, float, float]
+    # prefill of this stage scales with outputs of the previous stage
+    # (e.g. MapReduce's reduce step reads all the map summaries)
+    prefill_from_prev_outputs: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class AgentClass:
+    name: str
+    size: str                            # small / medium / large
+    stages: tuple[StageTemplate, ...]
+    keywords: tuple[str, ...]
+    # latent complexity multiplies decode lengths; the prompt encodes it
+    complexity_spread: float = 0.35
+
+
+@dataclasses.dataclass
+class SampledAgent:
+    cls: AgentClass
+    stages: list[list[InferenceSpec]]
+    prompt: str
+    true_cost: float
+    family: MemoryFamily = MemoryFamily.DENSE
+
+    @property
+    def name(self) -> str:
+        return self.cls.name
+
+
+# --------------------------------------------------------------------------
+# The nine classes.  Token budgets chosen so that, at the simulator's default
+# 30 tok/s/seq decode rate, solo JCTs land in the paper's buckets
+# (small < 1 min, medium 1–10 min, large > 10 min).
+
+AGENT_CLASSES: dict[str, AgentClass] = {
+    "EV": AgentClass(
+        "EV", "small",
+        (StageTemplate((2, 4), (180, 40, 2.0), (60, 20, 2.0)),),
+        ("equation", "verify", "algebra", "derivation", "lhs", "rhs"),
+    ),
+    "FV": AgentClass(
+        "FV", "small",
+        (
+            StageTemplate((1, 1), (350, 15, 1.0), (90, 25, 2.0)),   # gen queries
+            StageTemplate((2, 5), (260, 60, 2.0), (80, 25, 2.0)),   # verify claims
+        ),
+        ("fact", "claim", "evidence", "source", "citation", "react"),
+    ),
+    "CC": AgentClass(
+        "CC", "small",
+        (StageTemplate((2, 6), (420, 90, 2.5), (110, 35, 2.0)),),
+        ("code", "lint", "bug", "unittest", "stacktrace", "patch"),
+    ),
+    "ALFWI": AgentClass(
+        "ALFWI", "small",
+        (
+            StageTemplate((1, 2), (240, 50, 1.5), (50, 15, 1.5)),
+            StageTemplate((1, 3), (280, 50, 1.5), (60, 15, 1.5)),
+        ),
+        ("household", "navigate", "pickup", "drawer", "goal", "action"),
+    ),
+    "KBQAV": AgentClass(
+        "KBQAV", "small",
+        (StageTemplate((2, 5), (300, 70, 2.0), (70, 20, 2.0)),),
+        ("knowledge", "entity", "triple", "sparql", "answer", "wikidata"),
+    ),
+    "PE": AgentClass(
+        "PE", "medium",
+        (
+            StageTemplate((1, 1), (500, 100, 2.0), (250, 60, 2.0)),  # plan
+            StageTemplate((3, 8), (450, 120, 2.0), (450, 140, 2.5)), # execute
+            StageTemplate((1, 1), (300, 60, 1.0), (200, 60, 2.0),
+                          prefill_from_prev_outputs=1.0),            # report
+        ),
+        ("plan", "subtask", "tool", "execute", "huggingface", "schedule"),
+    ),
+    "SC": AgentClass(
+        "SC", "medium",
+        (StageTemplate((8, 16), (380, 80, 2.0), (620, 180, 2.5)),),
+        ("reasoning", "chain", "math", "vote", "consistency", "solution"),
+    ),
+    "DM": AgentClass(
+        "DM", "large",
+        (
+            StageTemplate((6, 12), (2400, 500, 2.5), (700, 180, 2.0)),  # merge
+            StageTemplate((6, 12), (900, 200, 2.0), (120, 40, 2.0)),    # score
+            StageTemplate((1, 2), (1200, 250, 2.0), (800, 200, 2.0),
+                          prefill_from_prev_outputs=0.5),               # final
+        ),
+        ("document", "merge", "paragraph", "outline", "dedupe", "graph"),
+    ),
+    "MRS": AgentClass(
+        "MRS", "large",
+        (
+            StageTemplate((16, 40), (2600, 600, 2.5), (380, 100, 2.0)),  # map
+            StageTemplate((1, 1), (500, 100, 1.0), (900, 220, 2.0),
+                          prefill_from_prev_outputs=1.0),                # reduce
+        ),
+        ("summarize", "chunk", "mapreduce", "section", "digest", "corpus"),
+    ),
+}
+
+SIZE_BUCKETS = {
+    "small": ["EV", "FV", "CC", "ALFWI", "KBQAV"],
+    "medium": ["PE", "SC"],
+    "large": ["DM", "MRS"],
+}
+SIZE_PROBS = {"small": 0.72, "medium": 0.26, "large": 0.02}
+
+_FILLER = (
+    "the of and to in that it for with as on be at this by from or an are "
+    "was but not have had they you his her its which will one all would "
+    "there what about out up into than them can only other time new some"
+).split()
+
+
+def _synth_prompt(
+    rng: np.random.Generator, cls: AgentClass, complexity: float, total_prefill: int
+) -> str:
+    """Prompt whose statistics encode the latent demand.
+
+    Length tracks total prefill; per-class keyword *counts* track the
+    complexity multiplier, so TF-IDF features carry the cost signal.
+    """
+    n_words = max(12, int(total_prefill / 14))
+    n_kw = max(2, int(6 * complexity))
+    words = list(rng.choice(_FILLER, size=n_words))
+    for _ in range(n_kw):
+        words.insert(int(rng.integers(0, len(words))), str(rng.choice(cls.keywords)))
+    return " ".join(words)
+
+
+def sample_agent(
+    rng: np.random.Generator,
+    cls_name: str,
+    family: MemoryFamily = MemoryFamily.DENSE,
+) -> SampledAgent:
+    cls = AGENT_CLASSES[cls_name]
+    complexity = float(
+        np.clip(np.exp(rng.normal(0.0, cls.complexity_spread)), 0.4, 3.0)
+    )
+    stages: list[list[InferenceSpec]] = []
+    prev_outputs = 0.0
+    total_prefill = 0
+    for st in cls.stages:
+        n = int(rng.integers(st.n_parallel[0], st.n_parallel[1] + 1))
+        specs = []
+        for _ in range(n):
+            p = st.prefill_from_prev_outputs * prev_outputs / max(1, n)
+            p += float(np.clip(skew_normal(rng, *st.prefill), 16, 65536))
+            p = min(p, 4096.0)  # context-window clamp (single inference)
+            d = complexity * float(np.clip(skew_normal(rng, *st.decode), 4, 8192))
+            specs.append(InferenceSpec(prefill=int(p), decode=max(1, int(d))))
+        prev_outputs = float(sum(s.decode for s in specs))
+        total_prefill += int(sum(s.prefill for s in specs))
+        stages.append(specs)
+    flat = [s for st in stages for s in st]
+    cost = agent_cost(flat, family)
+    prompt = _synth_prompt(rng, cls, complexity, total_prefill)
+    return SampledAgent(
+        cls=cls, stages=stages, prompt=prompt, true_cost=cost, family=family
+    )
+
+
+def sample_mixed_suite(
+    rng: np.random.Generator, n_agents: int
+) -> list[SampledAgent]:
+    """The paper's 300-agent mixed suite (72/26/2 small/medium/large)."""
+    out = []
+    sizes = rng.choice(
+        list(SIZE_PROBS), size=n_agents, p=list(SIZE_PROBS.values())
+    )
+    for s in sizes:
+        cls_name = str(rng.choice(SIZE_BUCKETS[str(s)]))
+        out.append(sample_agent(rng, cls_name))
+    return out

@@ -1,0 +1,122 @@
+"""Unit + property tests for the memory-centric cost model (paper §4.1)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    InferenceSpec,
+    MemoryFamily,
+    agent_cost,
+    encdec_kv_token_time,
+    hybrid_kv_token_time,
+    inference_cost,
+    kv_token_time,
+    ssm_token_time,
+    swa_kv_token_time,
+    vtc_cost,
+)
+
+tok = st.integers(min_value=0, max_value=4096)
+pos_tok = st.integers(min_value=1, max_value=4096)
+
+
+def brute_force_cost(p: int, d: int) -> float:
+    return float(sum(p + i for i in range(1, d + 1)))
+
+
+def brute_force_swa(p: int, d: int, w: int) -> float:
+    return float(sum(min(p + i, w) for i in range(1, d + 1)))
+
+
+@given(p=tok, d=tok)
+def test_kv_token_time_matches_discrete_sum(p, d):
+    assert kv_token_time(p, d) == pytest.approx(brute_force_cost(p, d))
+
+
+@given(p=tok, d=tok, w=pos_tok)
+def test_swa_cost_matches_discrete_sum(p, d, w):
+    assert swa_kv_token_time(p, d, w) == pytest.approx(brute_force_swa(p, d, w))
+
+
+@given(p=tok, d=pos_tok)
+def test_cost_monotone_in_prefill(p, d):
+    assert kv_token_time(p + 1, d) > kv_token_time(p, d)
+
+
+@given(p=tok, d=tok)
+def test_cost_monotone_in_decode(p, d):
+    assert kv_token_time(p, d + 1) > kv_token_time(p, d)
+
+
+@given(p=tok, d=tok)
+def test_quadratic_in_decode(p, d):
+    """Doubling d more than doubles cost (superlinear) once d >= 1."""
+    if d >= 1:
+        assert kv_token_time(p, 2 * d) > 2 * kv_token_time(p, d)
+
+
+@given(p=tok, d=tok, w=pos_tok)
+def test_swa_never_exceeds_dense(p, d, w):
+    assert swa_kv_token_time(p, d, w) <= kv_token_time(p, d) + 1e-9
+
+
+@given(p=tok, d=tok)
+def test_swa_with_huge_window_equals_dense(p, d):
+    assert swa_kv_token_time(p, d, 10**9) == pytest.approx(kv_token_time(p, d))
+
+
+@given(d=tok, s=st.floats(min_value=0.0, max_value=1e4, allow_nan=False))
+def test_ssm_cost_linear(d, s):
+    assert ssm_token_time(d, s) == pytest.approx(s * d)
+    assert ssm_token_time(2 * d, s) == pytest.approx(2 * ssm_token_time(d, s))
+
+
+@given(p=tok, d=tok)
+def test_hybrid_interpolates(p, d):
+    full = hybrid_kv_token_time(p, d, 1.0, 0.0)
+    none = hybrid_kv_token_time(p, d, 0.0, 0.0)
+    assert full == pytest.approx(kv_token_time(p, d))
+    assert none == 0.0
+
+
+@given(pe=tok, pd_=tok, d=tok)
+def test_encdec_adds_constant_cross_attn(pe, pd_, d):
+    c = encdec_kv_token_time(pe, pd_, d)
+    assert c == pytest.approx(kv_token_time(pd_, d) + pe * d)
+
+
+@given(specs=st.lists(st.tuples(tok, tok), min_size=0, max_size=20))
+def test_agent_cost_additive(specs):
+    infs = [InferenceSpec(p, d) for p, d in specs]
+    total = agent_cost(infs)
+    assert total == pytest.approx(sum(kv_token_time(p, d) for p, d in specs))
+
+
+@given(p=tok, d=tok)
+def test_vtc_cost_linear_baseline(p, d):
+    assert vtc_cost(p, d) == pytest.approx(p + 2 * d)
+
+
+def test_inference_cost_dispatch():
+    s = InferenceSpec(100, 50)
+    assert inference_cost(s, MemoryFamily.DENSE) == kv_token_time(100, 50)
+    assert inference_cost(
+        s, MemoryFamily.SLIDING_WINDOW, window=64
+    ) == swa_kv_token_time(100, 50, 64)
+    assert inference_cost(s, MemoryFamily.SSM, state_tokens=32.0) == 32.0 * 50
+    assert inference_cost(
+        s, MemoryFamily.HYBRID, attn_fraction=0.25, state_tokens=8.0
+    ) == pytest.approx(0.25 * kv_token_time(100, 50) + 8.0 * 50)
+    assert inference_cost(
+        s, MemoryFamily.ENCDEC, prefill_enc=1500
+    ) == pytest.approx(kv_token_time(100, 50) + 1500 * 50)
+
+
+def test_negative_spec_rejected():
+    with pytest.raises(ValueError):
+        InferenceSpec(-1, 5)
+    with pytest.raises(ValueError):
+        InferenceSpec(5, -1)

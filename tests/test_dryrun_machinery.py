@@ -1,0 +1,117 @@
+"""Multi-pod dry-run machinery tests.
+
+Runs the REAL build_dryrun -> lower -> compile path in a subprocess with 8
+forced host devices (mesh 2x4 / 2x2x2) on reduced configs — the full
+512-device production matrix lives in sweep.sh / dryrun_results.jsonl; this
+guards the plumbing (sharding specs, input specs, both mesh ranks, the
+optimized scheme, and the HLO roofline analyzer) inside the test suite
+without polluting the in-process jax device count.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, dataclasses
+    import jax, numpy as np
+    from jax.sharding import Mesh
+    from repro.configs import get_config
+    from repro.launch.specs import build_dryrun, lower_plan
+    from repro.launch.hlo_analysis import total_stats
+
+    results = {}
+    cases = [
+        ("granite-3-2b", "train_4k", 256, 8, (2, 4), ("data", "model"), False),
+        ("mixtral-8x7b", "decode_32k", 512, 8, (2, 4), ("data", "model"), False),
+        ("zamba2-2.7b", "long_500k", 2048, 1, (2, 4), ("data", "model"), False),
+        ("whisper-tiny", "prefill_32k", 512, 4, (2, 2, 2),
+         ("pod", "data", "model"), False),
+        ("granite-3-2b", "decode_32k", 512, 8, (2, 4), ("data", "model"), True),
+    ]
+    for arch, shape, seq, b, mshape, axes, opt in cases:
+        cfg0 = get_config(arch, shape=shape)
+        cfg = dataclasses.replace(
+            cfg0, n_layers=2, d_model=256, n_heads=4, n_kv_heads=2,
+            head_dim=64, d_ff=512 if cfg0.d_ff else 0, max_position=8192,
+            n_enc_layers=2 if cfg0.n_enc_layers else 0,
+            n_audio_frames=16 if cfg0.n_enc_layers else 1500,
+            sliding_window=256 if cfg0.sliding_window else 0,
+            attn_every=min(cfg0.attn_every, 2) if cfg0.attn_every else 0,
+            n_experts=min(cfg0.n_experts, 4) if cfg0.n_experts else 0,
+            top_k=min(cfg0.top_k, 2) if cfg0.top_k else 0,
+            ssm_state=min(cfg0.ssm_state, 16) if cfg0.ssm_state else 0,
+            dtype="float32",
+        )
+        n = int(np.prod(mshape))
+        mesh = Mesh(np.asarray(jax.devices()[:n]).reshape(mshape), axes)
+        plan = build_dryrun(arch, shape, mesh, batch_override=b,
+                            cfg_override=cfg, seq_override=seq,
+                            optimized=opt)
+        lowered = lower_plan(plan, mesh)
+        compiled = lowered.compile()
+        st = total_stats(compiled.as_text())
+        key = f"{arch}|{shape}|{'x'.join(map(str, mshape))}|opt={opt}"
+        results[key] = {
+            "mode": plan.mode,
+            "flops": st.flops,
+            "coll_bytes": st.coll_bytes,
+            "args": compiled.memory_analysis().argument_size_in_bytes,
+        }
+    print("RESULTS::" + json.dumps(results))
+""")
+
+
+@pytest.fixture(scope="module")
+def dryrun_results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True, text=True, timeout=900, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULTS::")]
+    assert line, proc.stdout[-2000:]
+    return json.loads(line[0][len("RESULTS::"):])
+
+
+def test_all_reduced_pairs_compile(dryrun_results):
+    assert len(dryrun_results) == 5
+    for key, rec in dryrun_results.items():
+        assert rec["flops"] > 0, key
+        assert rec["args"] > 0, key
+
+
+def test_modes_resolved(dryrun_results):
+    modes = {k.split("|")[1]: v["mode"] for k, v in dryrun_results.items()}
+    assert modes["train_4k"] == "train"
+    assert modes["prefill_32k"] == "prefill"
+    assert modes["decode_32k"] == "decode"
+    assert modes["long_500k"] == "decode"
+
+
+def test_sharded_compile_produces_collectives(dryrun_results):
+    """A 2x4-sharded train step must contain real collectives (grad
+    all-reduce at minimum)."""
+    key = [k for k in dryrun_results if k.startswith("granite-3-2b|train")][0]
+    assert dryrun_results[key]["coll_bytes"] > 0
+
+
+def test_optimized_decode_reduces_collectives(dryrun_results):
+    """O2/O3 must strictly reduce decode collective bytes vs baseline
+    at the same scale (here vs the mixtral baseline decode as a sanity
+    proxy is NOT comparable; instead assert the optimized granite decode
+    has fewer collective bytes than the sharded TRAIN step, which is
+    always true when weight gathers are gone)."""
+    opt = [k for k in dryrun_results if "opt=True" in k][0]
+    train = [k for k in dryrun_results if "train" in k][0]
+    assert dryrun_results[opt]["coll_bytes"] < dryrun_results[train]["coll_bytes"]

@@ -1,0 +1,164 @@
+"""End-to-end serving engine tests (real JAX model, tiny config) and
+block-allocator property tests."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.core import InferenceSpec, agent_cost, make_scheduler
+from repro.engine import EngineAgent, ServeEngine
+from repro.kvcache import BlockAllocator, OutOfBlocks
+from repro.models import Model
+
+VOCAB = 256
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("granite-3-2b").reduced(vocab=VOCAB)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def mk_agent(rng, aid, n_inf, p, d, arrival=0, stages=1):
+    sts = []
+    for _ in range(stages):
+        sts.append([(rng.integers(0, VOCAB, size=p), d) for _ in range(n_inf)])
+    specs = [InferenceSpec(p, d)] * (n_inf * stages)
+    return EngineAgent(aid, arrival, sts, agent_cost(specs))
+
+
+def run_engine(model, params, sched_name, agents, **kw):
+    kw.setdefault("pool_tokens", 2048)
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("cache_len", 256)
+    sched = make_scheduler(sched_name, float(kw["pool_tokens"]))
+    eng = ServeEngine(model, params, sched, **kw)
+    for a in agents:
+        eng.submit_agent(a)
+    done = eng.run_until_idle()
+    eng.alloc.check_invariants()
+    return eng, done
+
+
+def test_all_agents_complete_and_tokens_counted(tiny_model):
+    model, params = tiny_model
+    rng = np.random.default_rng(0)
+    agents = [
+        mk_agent(rng, 0, 2, 64, 32),
+        mk_agent(rng, 1, 1, 32, 16),
+        mk_agent(rng, 2, 1, 16, 8, stages=2),
+    ]
+    eng, done = run_engine(model, params, "justitia", agents)
+    assert set(done) == {0, 1, 2}
+    # 2*32 + 1*16 + 2*8 = 96 decode tokens
+    assert eng.metrics["tokens"] == 96
+    assert eng.metrics["prefills"] == 5
+
+
+def test_memory_pressure_triggers_swap_and_still_completes(tiny_model):
+    model, params = tiny_model
+    rng = np.random.default_rng(1)
+    agents = [mk_agent(rng, i, 2, 60, 40) for i in range(3)]
+    eng, done = run_engine(
+        model, params, "justitia", agents, pool_tokens=320, max_batch=4
+    )
+    assert set(done) == {0, 1, 2}
+    assert eng.metrics["swaps"] + eng.alloc.swap_events > 0
+    assert eng.metrics["tokens"] == 3 * 2 * 40
+
+
+def test_justitia_unblocks_mouse_fcfs_does_not(tiny_model):
+    """Head-of-line blocking: under FCFS the mouse waits for the elephant's
+    queued inferences; under Justitia (earlier GPS finish) it jumps them."""
+    model, params = tiny_model
+
+    def agents():
+        rng = np.random.default_rng(2)
+        eleph = mk_agent(rng, 0, 6, 100, 100)    # 6 infs, only a few fit
+        mouse = mk_agent(rng, 1, 1, 16, 8)
+        return [eleph, mouse]
+
+    _, done_j = run_engine(model, params, "justitia", agents(),
+                           pool_tokens=512, max_batch=2, cache_len=256)
+    _, done_f = run_engine(model, params, "vllm-fcfs", agents(),
+                           pool_tokens=512, max_batch=2, cache_len=256)
+    assert done_j[1] < done_f[1] / 2  # mouse much earlier under Justitia
+    assert done_j[1] < done_j[0]
+
+
+def test_engine_rejects_oversized_request(tiny_model):
+    model, params = tiny_model
+    rng = np.random.default_rng(3)
+    sched = make_scheduler("justitia", 2048.0)
+    eng = ServeEngine(model, params, sched, pool_tokens=2048, max_batch=2,
+                      cache_len=128)
+    with pytest.raises(ValueError):
+        eng.submit_agent(mk_agent(rng, 0, 1, 200, 50))
+
+
+# ------------------------------------------------------------ allocator
+
+
+def test_allocator_basic():
+    a = BlockAllocator(total_tokens=160, block_size=16)
+    assert a.n_blocks == 10
+    s = a.admit(1, 33)   # 3 blocks
+    assert s.n_blocks == 3 and a.free_blocks == 7
+    for _ in range(15):
+        assert a.append_token(1)
+    assert a.seq(1).n_tokens == 48
+    a.release(1)
+    assert a.free_blocks == 10
+    a.check_invariants()
+
+
+def test_allocator_swap_cycle():
+    a = BlockAllocator(total_tokens=64, block_size=16)
+    a.admit(1, 30)
+    a.admit(2, 30)
+    with pytest.raises(OutOfBlocks):
+        a.admit(3, 40)
+    freed = a.swap_out(1)
+    assert freed == 2 and a.free_blocks == 2
+    assert a.admit(3, 30)
+    assert not a.swap_in(1)        # no room while 2,3 live
+    a.release(3)
+    assert a.swap_in(1)
+    assert a.seq(1).n_tokens == 30
+    a.check_invariants()
+
+
+@given(
+    ops=st.lists(
+        st.tuples(st.sampled_from(["admit", "grow", "release", "swap"]),
+                  st.integers(0, 7), st.integers(1, 90)),
+        max_size=120,
+    )
+)
+@settings(max_examples=120, deadline=None)
+def test_allocator_invariants_random_ops(ops):
+    """No double allocation, no leaks, occupancy bounded — whatever the
+    operation sequence."""
+    a = BlockAllocator(total_tokens=256, block_size=16)
+    live = {}
+    for op, sid, n in ops:
+        try:
+            if op == "admit" and sid not in live:
+                a.admit(sid, n)
+                live[sid] = True
+            elif op == "grow" and sid in live and not a.seq(sid).swapped:
+                a.append_token(sid)
+            elif op == "release" and sid in live:
+                a.release(sid)
+                del live[sid]
+            elif op == "swap" and sid in live and not a.seq(sid).swapped:
+                a.swap_out(sid)
+        except OutOfBlocks:
+            pass
+        a.check_invariants()
+        assert a.used_tokens <= 256

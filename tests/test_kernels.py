@@ -1,0 +1,215 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret=True executes the kernel bodies on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (
+    flash_attention_ref,
+    flash_prefill,
+    paged_attention_ref,
+    paged_gqa_decode,
+)
+
+TOL = {jnp.float32: dict(atol=2e-5, rtol=2e-5),
+       jnp.bfloat16: dict(atol=3e-2, rtol=3e-2)}
+
+
+def _paged_ref(q, kp, vp, tables, lengths):
+    b, nh, hd = q.shape
+    nkv = kp.shape[2]
+    qg = (q.astype(jnp.float32) * hd ** -0.5).reshape(b, nkv, nh // nkv, hd)
+    return paged_attention_ref(
+        qg, kp.astype(jnp.float32), vp.astype(jnp.float32), tables, lengths
+    ).reshape(b, nh, hd)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,nh,nkv,hd,bs,pages,max_pages",
+    [
+        (1, 4, 4, 64, 16, 8, 4),       # MHA
+        (3, 8, 2, 64, 16, 32, 6),      # GQA 4:1
+        (2, 8, 1, 128, 16, 16, 8),     # MQA
+        (2, 6, 2, 80, 16, 16, 5),      # h2o-danube head_dim 80
+        (1, 4, 2, 256, 32, 8, 3),      # xlstm-like wide heads, bs 32
+    ],
+)
+def test_paged_attention_sweep(dtype, b, nh, nkv, hd, bs, pages, max_pages):
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(keys[0], (b, nh, hd), dtype)
+    kp = jax.random.normal(keys[1], (pages, bs, nkv, hd), dtype)
+    vp = jax.random.normal(keys[2], (pages, bs, nkv, hd), dtype)
+    tables = jax.random.randint(keys[3], (b, max_pages), 0, pages)
+    # lengths cover: tiny, partial page, full
+    lengths = jnp.asarray(
+        np.linspace(1, max_pages * bs, b).astype(np.int32)
+    )
+    out = paged_gqa_decode(q, kp, vp, tables, lengths, block_size=bs,
+                           interpret=True)
+    ref = _paged_ref(q, kp, vp, tables, lengths)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        **TOL[dtype],
+    )
+
+
+def test_paged_attention_length_edge_cases():
+    b, nh, nkv, hd, bs, pages, mp = 4, 4, 2, 64, 16, 8, 4
+    keys = jax.random.split(jax.random.PRNGKey(1), 4)
+    q = jax.random.normal(keys[0], (b, nh, hd))
+    kp = jax.random.normal(keys[1], (pages, bs, nkv, hd))
+    vp = jax.random.normal(keys[2], (pages, bs, nkv, hd))
+    tables = jax.random.randint(keys[3], (b, mp), 0, pages)
+    lengths = jnp.array([1, bs, bs + 1, mp * bs], jnp.int32)
+    out = paged_gqa_decode(q, kp, vp, tables, lengths, block_size=bs,
+                           interpret=True)
+    ref = _paged_ref(q, kp, vp, tables, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,nh,nkv,hd,bq,bk,window",
+    [
+        (2, 256, 4, 2, 64, 64, 64, 0),
+        (1, 256, 8, 8, 64, 128, 128, 0),     # MHA
+        (2, 256, 4, 1, 128, 64, 64, 0),      # MQA
+        (2, 256, 4, 2, 64, 64, 64, 96),      # SWA
+        (1, 512, 2, 2, 80, 128, 64, 128),    # SWA, head_dim 80, rect blocks
+    ],
+)
+def test_flash_prefill_sweep(dtype, b, s, nh, nkv, hd, bq, bk, window):
+    keys = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(keys[0], (b, s, nh, hd), dtype)
+    k = jax.random.normal(keys[1], (b, s, nkv, hd), dtype)
+    v = jax.random.normal(keys[2], (b, s, nkv, hd), dtype)
+    out = flash_prefill(q, k, v, window=window, block_q=bq, block_k=bk,
+                        interpret=True)
+    ref = jnp.swapaxes(
+        flash_attention_ref(
+            jnp.swapaxes(q.astype(jnp.float32) * hd ** -0.5, 1, 2),
+            jnp.swapaxes(k.astype(jnp.float32), 1, 2),
+            jnp.swapaxes(v.astype(jnp.float32), 1, 2),
+            window=window,
+        ), 1, 2,
+    )
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        **TOL[dtype],
+    )
+
+
+def test_flash_rejects_misaligned_seq():
+    q = jnp.zeros((1, 100, 2, 64))
+    with pytest.raises(ValueError):
+        flash_prefill(q, q[:, :, :2], q[:, :, :2], block_q=64, block_k=64,
+                      interpret=True)
+
+
+def test_paged_matches_model_decode_attention():
+    """The paged kernel must agree with the engine's dense-cache attention
+    path (gqa_attention with kv_pos masking) on the same content."""
+    from repro.models.layers import gqa_attention
+
+    b, nh, nkv, hd, bs, mp = 2, 4, 2, 64, 16, 4
+    t = mp * bs
+    keys = jax.random.split(jax.random.PRNGKey(3), 4)
+    q = jax.random.normal(keys[0], (b, nh, hd))
+    kc = jax.random.normal(keys[1], (b, t, nkv, hd))
+    vc = jax.random.normal(keys[2], (b, t, nkv, hd))
+    lengths = jnp.array([17, 50], jnp.int32)
+
+    # dense path
+    kv_pos = jnp.where(jnp.arange(t)[None] < lengths[:, None],
+                       jnp.arange(t)[None], -1)
+    dense = gqa_attention(
+        q[:, None], kc, vc,
+        q_positions=lengths[:, None] - 1 + 1,  # querying at position len
+        kv_positions=kv_pos, kv_valid=kv_pos >= 0,
+    )[:, 0]
+
+    # paged path: lay the same cache out as contiguous pages per sequence
+    kp = kc.reshape(b * mp, bs, nkv, hd)
+    vp = vc.reshape(b * mp, bs, nkv, hd)
+    tables = jnp.arange(b * mp).reshape(b, mp)
+    paged = paged_gqa_decode(q, kp, vp, tables, lengths, block_size=bs,
+                             interpret=True)
+    np.testing.assert_allclose(np.asarray(paged), np.asarray(dense),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------------------------------- chunkwise mLSTM
+
+
+def _mlstm_ref(q, k, v, i_raw, log_f):
+    """Per-step recurrence oracle (matches repro.models.ssm.mlstm_forward)."""
+    import math
+
+    b, h, s, hd = q.shape
+    c = jnp.zeros((b, h, hd, hd))
+    n = jnp.zeros((b, h, hd))
+    m = jnp.full((b, h), -1e30)
+    outs = []
+    for t in range(s):
+        m_new = jnp.maximum(log_f[:, :, t] + m, i_raw[:, :, t])
+        alpha = jnp.exp(log_f[:, :, t] + m - m_new)
+        beta = jnp.exp(i_raw[:, :, t] - m_new)
+        kf = k[:, :, t] / math.sqrt(hd)
+        c = c * alpha[..., None, None] + beta[..., None, None] * jnp.einsum(
+            "bhk,bhv->bhkv", kf, v[:, :, t]
+        )
+        n = n * alpha[..., None] + beta[..., None] * kf
+        num = jnp.einsum("bhk,bhkv->bhv", q[:, :, t], c)
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhk,bhk->bh", q[:, :, t], n)),
+            jnp.exp(-m_new),
+        )
+        outs.append(num / den[..., None])
+        m = m_new
+    return jnp.stack(outs, axis=2)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,s,hd,chunk",
+    [
+        (2, 2, 64, 32, 16),
+        (1, 3, 128, 64, 32),
+        (1, 1, 96, 128, 32),     # non-power-of-two chunk count
+        (2, 1, 64, 256, 64),     # xlstm-350m head_dim, single chunk
+    ],
+)
+def test_mlstm_chunk_kernel_sweep(dtype, b, h, s, hd, chunk):
+    from repro.kernels import mlstm_chunk_kernel
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    q = (jax.random.normal(ks[0], (b, h, s, hd)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (b, h, s, hd)) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (b, h, s, hd)) * 0.5).astype(dtype)
+    i_raw = (jax.random.normal(ks[3], (b, h, s)) * 0.5).astype(dtype)
+    log_f = (
+        -jax.nn.softplus(-jax.random.normal(ks[4], (b, h, s)) * 0.5 - 2.0)
+    ).astype(dtype)
+    out = mlstm_chunk_kernel(q, k, v, i_raw, log_f, chunk=chunk,
+                             interpret=True)
+    ref = _mlstm_ref(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        v.astype(jnp.float32), i_raw.astype(jnp.float32),
+        log_f.astype(jnp.float32),
+    )
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref), **TOL[dtype]
+    )
+
+
+def test_mlstm_chunk_kernel_rejects_misaligned():
+    from repro.kernels import mlstm_chunk_kernel
+
+    q = jnp.zeros((1, 1, 100, 32))
+    g = jnp.zeros((1, 1, 100))
+    with pytest.raises(ValueError):
+        mlstm_chunk_kernel(q, q, q, g, g, chunk=64, interpret=True)

@@ -1,0 +1,238 @@
+"""Model correctness properties:
+
+  * prefill + incremental decode == teacher-forced forward (per arch);
+  * mLSTM parallel form == recurrent scan form (short sequences);
+  * SWA ring-buffer decode == full-cache decode with a window mask;
+  * ragged prompts: per-row lens mask the cache correctly.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.models import Model
+from repro.models import ssm as ssm_mod
+
+B, S, EXTRA = 2, 12, 3
+
+
+def _cfg(arch):
+    cfg = get_config(arch).reduced()
+    if cfg.is_moe:
+        # dropless capacity so decode (cap=1/token) matches teacher forcing
+        cfg = dataclasses.replace(cfg, capacity_factor=4.0)
+    return cfg
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_decode_matches_teacher_forcing(arch):
+    cfg = _cfg(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(
+        jax.random.PRNGKey(1), (B, S + EXTRA), 0, cfg.vocab
+    ).astype(jnp.int32)
+    extra, n_off = {}, 0
+    if cfg.kind == "encdec":
+        extra["embeds"] = (
+            jax.random.normal(jax.random.PRNGKey(2),
+                              (B, cfg.n_audio_frames, cfg.d_model)) * 0.1
+        )
+    if cfg.kind == "vlm":
+        extra["embeds"] = (
+            jax.random.normal(jax.random.PRNGKey(2),
+                              (B, cfg.n_image_tokens, cfg.d_model)) * 0.1
+        )
+        n_off = cfg.n_image_tokens
+
+    full, _ = model.forward(params, {"tokens": toks, **extra})
+    lg, cache = model.prefill(
+        params, {"tokens": toks[:, :S], **extra}, cache_len=n_off + S + 8
+    )
+    np.testing.assert_allclose(
+        np.asarray(lg[:, 0], np.float32),
+        np.asarray(full[:, S - 1], np.float32),
+        atol=2e-2, rtol=1e-2,
+    )
+    for i in range(EXTRA):
+        pos = jnp.full((B,), n_off + S + i, jnp.int32)
+        lg, cache = model.decode(params, cache, toks[:, S + i : S + i + 1], pos)
+        np.testing.assert_allclose(
+            np.asarray(lg[:, 0], np.float32),
+            np.asarray(full[:, S + i], np.float32),
+            atol=2e-2, rtol=1e-2,
+        )
+
+
+def test_mlstm_parallel_equals_recurrent():
+    key = jax.random.PRNGKey(0)
+    p = ssm_mod.init_mlstm(key, 64, 2, 32, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 10, 64)) * 0.5
+    y_par = ssm_mod.mlstm_parallel(p, x)
+    y_rec, _ = ssm_mod.mlstm_forward(p, x)
+    np.testing.assert_allclose(
+        np.asarray(y_par), np.asarray(y_rec), atol=1e-4, rtol=1e-3
+    )
+
+
+def test_mlstm_decode_continues_forward():
+    key = jax.random.PRNGKey(0)
+    p = ssm_mod.init_mlstm(key, 64, 2, 32, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 11, 64)) * 0.5
+    y_all, _ = ssm_mod.mlstm_forward(p, x)
+    y10, st = ssm_mod.mlstm_forward(p, x[:, :10])
+    y_last, _ = ssm_mod.mlstm_decode(p, x[:, 10:11], st)
+    np.testing.assert_allclose(
+        np.asarray(y_all[:, 10]), np.asarray(y_last[:, 0]),
+        atol=1e-4, rtol=1e-3,
+    )
+
+
+def test_mamba2_decode_continues_forward():
+    key = jax.random.PRNGKey(0)
+    p = ssm_mod.init_mamba2(key, 64, 16, 4, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 11, 64)) * 0.5
+    y_all, _ = ssm_mod.mamba2_forward(p, x)
+    y10, (st, conv) = ssm_mod.mamba2_forward(p, x[:, :10])
+    y_last, _ = ssm_mod.mamba2_decode(p, x[:, 10:11], st, conv)
+    np.testing.assert_allclose(
+        np.asarray(y_all[:, 10]), np.asarray(y_last[:, 0]),
+        atol=1e-4, rtol=1e-3,
+    )
+
+
+def test_swa_ring_buffer_matches_windowed_full_cache():
+    """h2o-danube reduced: decode with the ring cache (T=window) must equal
+    decode with a big full cache — SWA masking makes them equivalent."""
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    assert cfg.sliding_window == 64
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_steps = 8
+    toks = jax.random.randint(
+        jax.random.PRNGKey(1), (B, S + n_steps), 0, cfg.vocab
+    ).astype(jnp.int32)
+
+    # ring cache: cache_len > window -> ring of size window
+    _, ring_cache = model.prefill(
+        params, {"tokens": toks[:, :S]}, cache_len=cfg.sliding_window + 16
+    )
+    assert ring_cache["k"].shape[2] == cfg.sliding_window
+    # full cache: cache_len < window -> plain cache
+    cfg_full = dataclasses.replace(cfg, sliding_window=64)
+    model_full = Model(cfg_full)
+    _, full_cache = model_full.prefill(
+        params, {"tokens": toks[:, :S]}, cache_len=S + n_steps
+    )
+    assert full_cache["k"].shape[2] == S + n_steps
+
+    for i in range(n_steps):
+        pos = jnp.full((B,), S + i, jnp.int32)
+        lg_r, ring_cache = model.decode(
+            params, ring_cache, toks[:, S + i : S + i + 1], pos
+        )
+        lg_f, full_cache = model_full.decode(
+            params, full_cache, toks[:, S + i : S + i + 1], pos
+        )
+        np.testing.assert_allclose(
+            np.asarray(lg_r, np.float32), np.asarray(lg_f, np.float32),
+            atol=2e-2, rtol=1e-2,
+        )
+
+
+def test_ragged_prompt_lens_respected():
+    """Row 1's prompt is shorter; its cache slots beyond lens are masked, so
+    its decode output must equal an unpadded run of the same prompt."""
+    cfg = get_config("granite-3-2b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, S), 0, cfg.vocab
+                              ).astype(jnp.int32)
+    short = 7
+    # batched run: row0 full prompt, row1 short prompt padded with junk
+    toks2 = jnp.concatenate(
+        [toks, jnp.concatenate([toks[:, :short],
+                                jnp.full((1, S - short), 5, jnp.int32)], 1)]
+    )
+    lens = jnp.array([S, short], jnp.int32)
+    lg_b, cache_b = model.prefill(
+        params, {"tokens": toks2, "lens": lens}, cache_len=S + 4
+    )
+    # solo run of the short prompt
+    lg_s, _ = model.prefill(
+        params, {"tokens": toks[:, :short]}, cache_len=S + 4
+    )
+    # prefill returns logits at the LAST padded position for row 1; instead
+    # compare a decode step conditioned on the masked cache
+    nxt = jnp.full((2, 1), 9, jnp.int32)
+    pos = jnp.array([S, short], jnp.int32)
+    lg_step, _ = model.decode(params, cache_b, nxt, pos)
+    _, cache_s = model.prefill(
+        params, {"tokens": toks[:, :short]}, cache_len=S + 4
+    )
+    lg_solo, _ = model.decode(
+        params, cache_s, nxt[1:], jnp.array([short], jnp.int32)
+    )
+    np.testing.assert_allclose(
+        np.asarray(lg_step[1], np.float32),
+        np.asarray(lg_solo[0], np.float32),
+        atol=2e-2, rtol=1e-2,
+    )
+
+
+def test_mamba2_chunked_equals_sequential():
+    key = jax.random.PRNGKey(0)
+    p = ssm_mod.init_mamba2(key, 64, 16, 4, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 48, 64)) * 0.5
+    y_seq, (st_seq, _) = ssm_mod.mamba2_forward(p, x)
+    y_ch, (st_ch, _) = ssm_mod.mamba2_forward_chunked(p, x, chunk=16)
+    np.testing.assert_allclose(np.asarray(y_seq), np.asarray(y_ch),
+                               atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_seq), np.asarray(st_ch),
+                               atol=1e-5, rtol=1e-4)
+
+
+def test_mlstm_chunked_equals_sequential():
+    key = jax.random.PRNGKey(0)
+    p = ssm_mod.init_mlstm(key, 64, 2, 32, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 48, 64)) * 0.5
+    y_seq, (c1, n1, m1) = ssm_mod.mlstm_forward(p, x)
+    y_ch, (c2, n2, m2) = ssm_mod.mlstm_forward_chunked(p, x, chunk=16)
+    np.testing.assert_allclose(np.asarray(y_seq), np.asarray(y_ch),
+                               atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2),
+                               atol=1e-5, rtol=1e-4)
+
+
+def test_chunked_attention_equals_full():
+    from repro.models.layers import chunked_gqa_attention, gqa_attention
+
+    key = jax.random.PRNGKey(0)
+    b, s, nh, nkv, hd = 2, 64, 4, 2, 32
+    q = jax.random.normal(key, (b, s, nh, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, nkv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, nkv, hd))
+    for window in (0, 24):
+        full = gqa_attention(q, k, v, window=window)
+        ch = chunked_gqa_attention(q, k, v, window=window,
+                                   chunk_q=16, chunk_k=16)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(ch),
+                                   atol=1e-5, rtol=1e-4)
+
+
+def test_chunked_lm_loss_equals_plain():
+    from repro.training import chunked_lm_loss, lm_loss
+
+    key = jax.random.PRNGKey(0)
+    b, s, d, v = 2, 24, 16, 64
+    x = jax.random.normal(key, (b, s, d))
+    head = jax.random.normal(jax.random.PRNGKey(1), (d, v)) * 0.1
+    toks = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0, v)
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    plain = lm_loss(logits, toks)
+    chunked = chunked_lm_loss(x, head, toks, chunk=8)
+    np.testing.assert_allclose(float(plain), float(chunked), rtol=1e-5)

@@ -1,0 +1,108 @@
+"""Unit tests for the scheduler policies (Justitia + the five baselines)."""
+
+import pytest
+
+from repro.core import (
+    ALL_SCHEDULERS,
+    InferenceSpec,
+    JustitiaScheduler,
+    Request,
+    make_scheduler,
+)
+
+
+def req(agent_id, rid, t=0.0, p=100, d=50, pred=0.0):
+    return Request(
+        agent_id=agent_id,
+        rid=rid,
+        spec=InferenceSpec(p, d),
+        submit_time=t,
+        pred_cost=pred,
+    )
+
+
+def test_factory_covers_all():
+    for name in ALL_SCHEDULERS:
+        s = make_scheduler(name, 1000.0)
+        assert s.name == name
+    with pytest.raises(ValueError):
+        make_scheduler("nope", 1.0)
+
+
+def test_fcfs_orders_by_submit_time():
+    s = make_scheduler("vllm-fcfs", 1000.0)
+    s.on_agent_arrival(1, 0.0, 10.0)
+    s.on_agent_arrival(2, 1.0, 10.0)
+    assert s.request_key(req(1, 0, t=0.0), 2.0) < s.request_key(req(2, 1, t=1.0), 2.0)
+
+
+def test_sjf_orders_by_predicted_cost():
+    s = make_scheduler("vllm-sjf", 1000.0)
+    s.on_agent_arrival(1, 0.0, 10.0)
+    s.on_agent_arrival(2, 0.0, 10.0)
+    assert s.request_key(req(2, 1, pred=5.0), 1.0) < s.request_key(
+        req(1, 0, pred=50.0), 1.0
+    )
+
+
+def test_parrot_groups_by_agent_arrival():
+    s = make_scheduler("parrot", 1000.0)
+    s.on_agent_arrival(1, 0.0, 10.0)
+    s.on_agent_arrival(2, 1.0, 1.0)
+    # agent 1 arrived first: ALL its requests outrank agent 2's
+    assert s.request_key(req(1, 5), 2.0) < s.request_key(req(2, 1), 2.0)
+
+
+def test_vtc_prefers_least_serviced_and_lifts_on_arrival():
+    s = make_scheduler("vtc", 1000.0)
+    s.on_agent_arrival(1, 0.0, 10.0)
+    s.on_service(1, prefill_tokens=100, decode_tokens=50)  # counter = 200
+    s.on_agent_arrival(2, 1.0, 10.0)  # lifted to min(live) = 200
+    assert s.agents[2].serviced_vtc == pytest.approx(200.0)
+    s.on_service(2, decode_tokens=10)  # 220
+    assert s.request_key(req(1, 0), 2.0) < s.request_key(req(2, 1), 2.0)
+
+
+def test_srjf_uses_remaining_predicted_cost():
+    s = make_scheduler("srjf", 1000.0)
+    s.on_agent_arrival(1, 0.0, 1000.0)
+    s.on_agent_arrival(2, 0.0, 600.0)
+    assert s.request_key(req(2, 1), 0.0) < s.request_key(req(1, 0), 0.0)
+    s.on_service(1, kv_token_time=900.0)  # remaining 100 < 600
+    assert s.request_key(req(1, 0), 0.0) < s.request_key(req(2, 1), 0.0)
+
+
+def test_justitia_priority_is_static_virtual_finish():
+    s = JustitiaScheduler(total_kv=100.0)
+    s.on_agent_arrival(1, 0.0, 500.0)
+    s.on_agent_arrival(2, 0.0, 300.0)   # same V(0): smaller cost wins
+    k1 = s.request_key(req(1, 0), 0.0)
+    k2 = s.request_key(req(2, 1), 0.0)
+    assert k2 < k1
+    # service amounts do NOT change Justitia's order (static pampering order)
+    s.on_service(1, kv_token_time=499.0)
+    assert s.request_key(req(2, 1), 5.0) < s.request_key(req(1, 0), 5.0)
+
+
+def test_justitia_late_small_agent_does_not_jump_started_queue():
+    """An agent arriving after much virtual time has passed gets a later F_j
+    than an equal-cost agent that arrived early (no gaming by arriving late)."""
+    s = JustitiaScheduler(total_kv=10.0)
+    s.on_agent_arrival(1, 0.0, 1000.0)
+    s.on_agent_arrival(2, 50.0, 1000.0)  # V(50) = 500 (solo rate 10)
+    assert s.agents[1].virtual_finish < s.agents[2].virtual_finish
+
+
+def test_all_inferences_of_one_agent_consecutive_under_justitia():
+    s = JustitiaScheduler(total_kv=100.0)
+    s.on_agent_arrival(1, 0.0, 500.0)
+    s.on_agent_arrival(2, 0.0, 400.0)
+    keys = [
+        s.request_key(req(2, 10), 1.0),
+        s.request_key(req(1, 11), 1.0),
+        s.request_key(req(2, 12), 1.0),
+        s.request_key(req(1, 13), 1.0),
+    ]
+    order = sorted(range(4), key=lambda i: keys[i])
+    # agent 2's requests (idx 0, 2) strictly precede agent 1's (idx 1, 3)
+    assert order == [0, 2, 1, 3]

@@ -1,0 +1,141 @@
+"""Unit tests: logical-axis sharding helpers + the loop-aware HLO analyzer
++ workload statistics (the paper's 72/26/2 size mix)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.shardlib import (
+    active_rules,
+    logical_to_spec,
+    param_spec,
+    shard,
+    use_sharding,
+)
+
+
+def test_shard_is_noop_without_mesh():
+    x = jnp.ones((4, 8))
+    assert shard(x, "batch", "embed") is x
+    assert active_rules() is None
+
+
+def test_shard_rank_mismatch_raises():
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("data",))
+    with use_sharding(mesh, {"batch": "data"}):
+        with pytest.raises(ValueError):
+            shard(jnp.ones((4, 8)), "batch")
+
+
+def test_logical_to_spec_mapping():
+    from jax.sharding import PartitionSpec as P
+
+    rules = {"batch": ("pod", "data"), "ffn": "model", "embed": None}
+    spec = logical_to_spec(["batch", None, "ffn"], rules)
+    assert spec == P(("pod", "data"), None, "model")
+
+
+def test_use_sharding_nests_and_restores():
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("data",))
+    with use_sharding(mesh, {"batch": "data"}):
+        assert active_rules()[1] == {"batch": "data"}
+        with use_sharding(mesh, {"batch": None}):
+            assert active_rules()[1] == {"batch": None}
+        assert active_rules()[1] == {"batch": "data"}
+    assert active_rules() is None
+
+
+# -------------------------------------------------------- hlo analysis
+
+
+def test_hlo_analysis_scales_loop_trip_counts():
+    """A scan of 10 matmuls must count 10x one matmul's FLOPs."""
+    from repro.launch.hlo_analysis import total_stats
+
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    comp = jax.jit(f).lower(
+        jnp.ones((128, 128)), jnp.ones((128, 128))
+    ).compile()
+    st = total_stats(comp.as_text())
+    expect = 10 * 2 * 128 ** 3
+    assert st.flops == pytest.approx(expect, rel=0.01)
+
+
+def test_hlo_analysis_nested_loops_multiply():
+    from repro.launch.hlo_analysis import total_stats
+
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            ci, _ = jax.lax.scan(inner, c, None, length=4)
+            return ci, None
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+
+    comp = jax.jit(f).lower(
+        jnp.ones((64, 64)), jnp.ones((64, 64))
+    ).compile()
+    st = total_stats(comp.as_text())
+    expect = 12 * 2 * 64 ** 3
+    assert st.flops == pytest.approx(expect, rel=0.01)
+
+
+# ------------------------------------------------------------- workloads
+
+
+def test_size_mix_matches_paper():
+    """72/26/2 small/medium/large sampling probabilities (paper §5.1)."""
+    from repro.workloads import SIZE_BUCKETS, sample_mixed_suite
+
+    rng = np.random.default_rng(0)
+    suite = sample_mixed_suite(rng, 2000)
+    by_size = {"small": 0, "medium": 0, "large": 0}
+    for a in suite:
+        for size, names in SIZE_BUCKETS.items():
+            if a.name in names:
+                by_size[size] += 1
+    n = len(suite)
+    assert abs(by_size["small"] / n - 0.72) < 0.04
+    assert abs(by_size["medium"] / n - 0.26) < 0.04
+    assert abs(by_size["large"] / n - 0.02) < 0.015
+
+
+def test_agent_demand_stability():
+    """App. A: within-class demand spread is narrow relative to the
+    across-class spread (what makes per-class prediction work)."""
+    from repro.workloads import AGENT_CLASSES, sample_agent
+
+    rng = np.random.default_rng(1)
+    class_means = {}
+    within_cv = []
+    for cls in AGENT_CLASSES:
+        costs = np.array([sample_agent(rng, cls).true_cost
+                          for _ in range(40)])
+        class_means[cls] = costs.mean()
+        within_cv.append(costs.std() / costs.mean())
+    means = np.array(list(class_means.values()))
+    across_spread = means.max() / means.min()
+    assert across_spread > 50          # classes span orders of magnitude
+    assert np.mean(within_cv) < 1.0    # within-class is comparatively tight
+
+
+def test_arrivals_sorted_within_window():
+    from repro.workloads import DENSITY_WINDOWS_S, arrivals_for_density
+
+    rng = np.random.default_rng(2)
+    for density in (1, 2, 3):
+        t = arrivals_for_density(rng, 300, density)
+        assert len(t) == 300
+        assert (np.diff(t) >= 0).all()
+        assert t.min() >= 0 and t.max() <= DENSITY_WINDOWS_S[density]

@@ -1,0 +1,157 @@
+"""Behavioural tests for the discrete-event cluster simulator."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import InferenceSpec, make_scheduler
+from repro.sim import ClusterSim, SimAgent, jct_stats
+from repro.workloads import sample_mixed_suite, arrivals_for_density
+
+
+def one_shot_agent(agent_id, arrival, specs, cost=None):
+    from repro.core import agent_cost
+
+    c = cost if cost is not None else agent_cost(specs)
+    return SimAgent(
+        agent_id=agent_id,
+        arrival=arrival,
+        stages=[list(specs)],
+        predicted_cost=c,
+        true_cost=c,
+    )
+
+
+def run(name, agents, m=2000.0, **kw):
+    decode_rate = kw.get("decode_rate", 30.0)
+    sim = ClusterSim(make_scheduler(name, m, service_rate=decode_rate), m, **kw)
+    return sim.run(agents)
+
+
+def test_single_agent_completes_at_solo_time():
+    # p=100, d=300 at 30 tok/s decode, 4000 tok/s prefill
+    a = one_shot_agent(0, 0.0, [InferenceSpec(100, 300)])
+    res = run("justitia", [a])
+    expect = 100 / 4000.0 + 300 / 30.0
+    assert res.jct[0] == pytest.approx(expect, rel=1e-6)
+
+
+def test_parallel_inferences_overlap():
+    specs = [InferenceSpec(100, 300)] * 4  # fits in pool together
+    a = one_shot_agent(0, 0.0, specs)
+    res = run("justitia", [a], m=100000.0)
+    # all four run concurrently: JCT == single-inference time
+    expect = 100 / 4000.0 + 300 / 30.0
+    assert res.jct[0] == pytest.approx(expect, rel=1e-6)
+
+
+def test_staged_agent_serializes_stages():
+    stages = [[InferenceSpec(100, 300)], [InferenceSpec(100, 300)]]
+    a = SimAgent(0, 0.0, stages, predicted_cost=1.0, true_cost=1.0)
+    res = run("justitia", [a], m=100000.0)
+    expect = 2 * (100 / 4000.0 + 300 / 30.0)
+    assert res.jct[0] == pytest.approx(expect, rel=1e-6)
+
+
+def test_every_agent_finishes():
+    rng = np.random.default_rng(7)
+    suite = sample_mixed_suite(rng, 60)
+    arr = arrivals_for_density(rng, 60, 3)
+    agents = [
+        SimAgent(i, float(t), [list(s) for s in a.stages], a.true_cost, a.true_cost)
+        for i, (a, t) in enumerate(zip(suite, arr))
+    ]
+    for name in ["justitia", "vtc", "vllm-fcfs", "srjf"]:
+        res = run(name, [SimAgent(x.agent_id, x.arrival,
+                                  [list(s) for s in x.stages],
+                                  x.predicted_cost, x.true_cost)
+                         for x in agents], m=16384.0)
+        assert len(res.jct) == 60
+        assert all(v > 0 for v in res.jct.values())
+
+
+def test_justitia_pampering_beats_vtc_under_contention():
+    """Fig. 3 in miniature: competing large agents, pampering wins on mean
+    JCT without delaying the later-finishing agent."""
+    specs = [InferenceSpec(200, 600)] * 6
+    a0 = one_shot_agent(0, 0.0, specs)
+    a1 = one_shot_agent(1, 0.0, specs)
+    m = 3000.0  # forces contention: both can't run saturated together
+    r_vtc = run("vtc", [a0, a1], m=m)
+    a0b = one_shot_agent(0, 0.0, specs)
+    a1b = one_shot_agent(1, 0.0, specs)
+    r_jus = run("justitia", [a0b, a1b], m=m)
+    mean_vtc = np.mean(list(r_vtc.jct.values()))
+    mean_jus = np.mean(list(r_jus.jct.values()))
+    assert mean_jus < mean_vtc  # pampering reduces average JCT
+    # the slower (unpampered) agent finishes no later than under fair share
+    assert max(r_jus.jct.values()) <= max(r_vtc.jct.values()) * 1.05
+
+
+def test_head_of_line_blocking_under_fcfs_not_justitia():
+    """Elephant first, mouse second: FCFS blocks the mouse; Justitia lets the
+    mouse (earlier GPS finish) go first."""
+    elephant = one_shot_agent(0, 0.0, [InferenceSpec(1800, 2000)] * 3)
+    mouse = one_shot_agent(1, 0.1, [InferenceSpec(50, 30)])
+    m = 2500.0
+    r_f = run("vllm-fcfs", [elephant, mouse], m=m)
+    elephant2 = one_shot_agent(0, 0.0, [InferenceSpec(1800, 2000)] * 3)
+    mouse2 = one_shot_agent(1, 0.1, [InferenceSpec(50, 30)])
+    r_j = run("justitia", [elephant2, mouse2], m=m)
+    assert r_j.jct[1] < r_f.jct[1] / 5  # mouse unblocked by Justitia
+
+
+def test_non_preemption_running_not_interrupted():
+    """A tiny high-priority agent arriving mid-flight must wait for memory,
+    not preempt: with ample memory it starts instantly; the running elephant
+    inference is never rolled back (its JCT equals solo time)."""
+    elephant = one_shot_agent(0, 0.0, [InferenceSpec(100, 3000)])
+    mouse = one_shot_agent(1, 10.0, [InferenceSpec(50, 30)])
+    res = run("justitia", [elephant, mouse], m=100000.0)
+    solo_elephant = 100 / 4000.0 + 3000 / 30.0
+    assert res.jct[0] == pytest.approx(solo_elephant, rel=1e-6)
+
+
+def test_swap_preserves_progress():
+    """Pool pressure forces swaps; swapped sequences resume (everything
+    still completes, with swap count > 0)."""
+    agents = [
+        one_shot_agent(i, i * 0.01, [InferenceSpec(400, 800)] * 3)
+        for i in range(6)
+    ]
+    res = run("justitia", agents, m=2000.0)
+    assert len(res.jct) == 6
+    assert res.swaps > 0
+
+
+def test_work_conservation_reasonable_makespan():
+    """Total service demanded / max service rate lower-bounds makespan; a
+    work-conserving backend should be within ~2x of it for saturated loads."""
+    rng = np.random.default_rng(3)
+    suite = sample_mixed_suite(rng, 40)
+    m = 8192.0
+    agents = [
+        SimAgent(i, 0.0, [list(s) for s in a.stages], a.true_cost, a.true_cost)
+        for i, a in enumerate(suite)
+    ]
+    total_cost = sum(a.true_cost for a in agents)  # KV token-iterations
+    res = run("justitia", agents, m=m)
+    lower_bound_s = total_cost / (m * 30.0)  # pool * decode_rate
+    assert res.makespan >= 0.5 * lower_bound_s
+
+
+def test_simulator_deterministic():
+    rng = np.random.default_rng(11)
+    suite = sample_mixed_suite(rng, 30)
+    arr = arrivals_for_density(np.random.default_rng(11), 30, 2)
+
+    def go():
+        agents = [
+            SimAgent(i, float(t), [list(s) for s in a.stages],
+                     a.true_cost, a.true_cost)
+            for i, (a, t) in enumerate(zip(suite, arr))
+        ]
+        return run("justitia", agents, m=8192.0).jct
+
+    assert go() == go()
