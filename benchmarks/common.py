@@ -1,7 +1,9 @@
 """Shared benchmark plumbing: workload construction, predictor training,
-scheduler sweeps.  All experiments run the SAME scheduler code the engine
-uses, on the calibrated discrete-event backend (DESIGN.md §2 explains why
-paper-scale runs are simulated on this CPU-only container).
+scheduler sweeps.  All experiments drive the unified serving facade
+(``repro.api.AgentService``) over the calibrated discrete-event backend —
+the same facade the engine launcher uses, so every figure exercises the
+production serving surface (DESIGN.md §2 explains why paper-scale runs are
+simulated on this CPU-only container).
 
 Calibration: decode 30 tok/s/seq, prefill 4000 tok/s, pool M = 16384
 KV-token units — chosen so the paper's small/medium/large agent classes land
@@ -15,15 +17,9 @@ import time
 
 import numpy as np
 
-from repro.core import make_scheduler
+from repro.api import AgentService, AgentSpec, ServiceResult
 from repro.predictor import AgentCostPredictor, relative_error
-from repro.sim import (
-    ClusterSim,
-    SimAgent,
-    fair_ratios,
-    fairness_stats,
-    jct_stats,
-)
+from repro.sim import fair_ratios, fairness_stats, jct_stats
 from repro.workloads import (
     AGENT_CLASSES,
     arrivals_for_density,
@@ -71,19 +67,18 @@ def build_workload(
     return Workload(agents=agents, arrivals=arrivals, predicted=predicted)
 
 
-def to_sim_agents(w: Workload, *, cost_override=None) -> list[SimAgent]:
+def to_agent_specs(w: Workload, *, cost_override=None) -> list[AgentSpec]:
     costs = cost_override if cost_override is not None else w.predicted
     return [
-        SimAgent(
-            agent_id=i,
-            arrival=float(t),
+        AgentSpec(
             stages=[list(s) for s in a.stages],
+            arrival=float(t),
             predicted_cost=float(c),
             true_cost=a.true_cost,
             family=a.family,
             name=a.name,
         )
-        for i, (a, t, c) in enumerate(zip(w.agents, w.arrivals, costs))
+        for a, t, c in zip(w.agents, w.arrivals, costs)
     ]
 
 
@@ -94,10 +89,14 @@ def run_scheduler(
     m: float = M_TOKENS,
     decode_rate: float = DECODE_RATE,
     cost_override=None,
-):
-    sched = make_scheduler(name, m, service_rate=decode_rate)
-    sim = ClusterSim(sched, m, decode_rate=decode_rate)
-    return sim.run(to_sim_agents(w, cost_override=cost_override))
+) -> ServiceResult:
+    # record_events=False: paper-scale sweeps only need aggregate JCTs,
+    # not thousands of retained per-event objects
+    service = AgentService.sim(
+        name, total_kv=m, decode_rate=decode_rate, record_events=False
+    )
+    service.submit_many(to_agent_specs(w, cost_override=cost_override))
+    return service.drain()
 
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:

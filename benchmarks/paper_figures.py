@@ -19,14 +19,9 @@ from benchmarks.common import (
     run_scheduler,
     train_predictor,
 )
-from repro.core import (
-    ALL_SCHEDULERS,
-    InferenceSpec,
-    agent_cost,
-    make_scheduler,
-    vtc_agent_cost,
-)
-from repro.sim import ClusterSim, SimAgent, fair_ratios, fairness_stats, jct_stats
+from repro.api import AgentService, AgentSpec
+from repro.core import InferenceSpec, scheduler_names, vtc_agent_cost
+from repro.sim import fair_ratios, fairness_stats, jct_stats
 from repro.workloads import AGENT_CLASSES, sample_agent
 
 
@@ -40,22 +35,26 @@ def fig3_pampering(seed: int = 0):
     out_csv, out = [], []
 
     def make():
-        agents = []
-        for i in range(2):
+        specs = []
+        for _ in range(2):
             a = sample_agent(rng, "DM")
-            agents.append(
-                SimAgent(i, 0.0, [list(s) for s in a.stages],
-                         a.true_cost, a.true_cost)
+            specs.append(
+                AgentSpec(stages=[list(s) for s in a.stages], arrival=0.0,
+                          predicted_cost=a.true_cost, true_cost=a.true_cost)
             )
-        return agents
+        return specs
 
     m = 4096.0  # tight pool: the two DM agents contend, as in Fig. 3
     workload = make()
-    r_vtc = ClusterSim(make_scheduler("vtc", m, service_rate=DECODE_RATE),
-                       m).run([SimAgent(**vars(x)) for x in workload])
-    r_jus = ClusterSim(make_scheduler("justitia", m,
-                                      service_rate=DECODE_RATE),
-                       m).run([SimAgent(**vars(x)) for x in workload])
+
+    def run(name):
+        service = AgentService.sim(name, total_kv=m,
+                                   decode_rate=DECODE_RATE)
+        service.submit_many(workload)
+        return service.drain()
+
+    r_vtc = run("vtc")
+    r_jus = run("justitia")
     avg_vtc = np.mean(list(r_vtc.jct.values()))
     avg_jus = np.mean(list(r_jus.jct.values()))
     worst_delay = max(
@@ -83,7 +82,8 @@ def fig7_jct(seed: int = 0, n_agents: int = 300):
     for density in (1, 2, 3):
         w = build_workload(seed + density, n_agents, density, predictor=pred)
         stats = {}
-        for name in ALL_SCHEDULERS:
+        # scheduler_names() at call time: registered plugins join the sweep
+        for name in scheduler_names():
             res = run_scheduler(name, w)
             stats[name] = jct_stats(res.jct)
         base = stats["vtc"].mean
@@ -154,19 +154,21 @@ def fig9_starvation(seed: int = 0):
 
     def workload(n_mice):
         es = [InferenceSpec(300, 400)] * 6
-        agents = [SimAgent(0, 0.0, [es], agent_cost(es), agent_cost(es))]
+        specs = [AgentSpec(stages=[es], arrival=0.0, name="elephant")]
         for i in range(n_mice):
             s = [InferenceSpec(250, 150)]
-            agents.append(SimAgent(1 + i, 1.0 + i * 2.5, [s],
-                                   agent_cost(s), agent_cost(s)))
-        return agents
+            specs.append(
+                AgentSpec(stages=[s], arrival=1.0 + i * 2.5, name="mouse")
+            )
+        return specs
 
     for name in ("srjf", "justitia"):
         jcts = []
         for n in (30, 60, 120, 240):
-            sim = ClusterSim(make_scheduler(name, m, service_rate=DECODE_RATE),
-                             m)
-            jcts.append(sim.run(workload(n)).jct[0])
+            service = AgentService.sim(name, total_kv=m,
+                                       decode_rate=DECODE_RATE)
+            service.submit_many(workload(n))
+            jcts.append(service.drain().jct[0])
         out.append(
             f"fig9 {name:9s} elephant JCT vs mice "
             + " ".join(f"{n}:{j:.0f}s" for n, j in

@@ -1,29 +1,31 @@
-"""Starvation-avoidance demo (paper Fig. 9) on the paper-scale simulator.
+"""Starvation-avoidance demo (paper Fig. 9) via the unified AgentService.
 
     PYTHONPATH=src python examples/fairness_demo.py
 
 An "elephant" agent arrives first; "mice" keep arriving.  Under SRJF the
 elephant's completion grows without bound as mice multiply; under Justitia
 it plateaus: once the GPS virtual time passes the elephant's virtual finish
-time, later mice queue BEHIND it regardless of their size.
+time, later mice queue BEHIND it regardless of their size.  The workload is
+expressed once as backend-agnostic ``AgentSpec``s and served through
+``AgentService.sim`` — swap ``.sim`` for ``.engine(model, params, ...)`` to
+replay it on the real JAX backend.
 """
 
-import numpy as np
-
-from repro.core import InferenceSpec, agent_cost, make_scheduler
-from repro.sim import ClusterSim, SimAgent
+from repro.api import AgentService, AgentSpec
+from repro.core import InferenceSpec, agent_cost
 
 M = 1000.0
 
 
 def workload(n_mice):
     es = [InferenceSpec(300, 400)] * 6
-    agents = [SimAgent(0, 0.0, [es], agent_cost(es), agent_cost(es))]
+    specs = [AgentSpec(stages=[es], arrival=0.0, name="elephant")]
     for i in range(n_mice):
         s = [InferenceSpec(250, 150)]
-        agents.append(SimAgent(1 + i, 1.0 + i * 2.5, [s],
-                               agent_cost(s), agent_cost(s)))
-    return agents
+        specs.append(
+            AgentSpec(stages=[s], arrival=1.0 + i * 2.5, name="mouse")
+        )
+    return specs
 
 
 def main():
@@ -32,8 +34,10 @@ def main():
     for n in (30, 60, 120, 240, 480):
         row = []
         for name in ("srjf", "justitia"):
-            sim = ClusterSim(make_scheduler(name, M, service_rate=30.0), M)
-            row.append(sim.run(workload(n)).jct[0])
+            service = AgentService.sim(name, total_kv=M, decode_rate=30.0)
+            handles = service.submit_many(workload(n))
+            service.drain()
+            row.append(handles[0].jct)   # the elephant
         print(f"{n:6d} {row[0]:17.0f}s {row[1]:21.0f}s")
     print("\nSRJF grows unboundedly; Justitia is bounded "
           "(Theorem B.1: delay <= 2c_max + C_max/M).")

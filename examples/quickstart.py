@@ -1,33 +1,32 @@
-"""Quickstart: serve a tiny model with the Justitia scheduler.
+"""Quickstart for the unified serving API (``repro.api.AgentService``).
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds a reduced granite-family model, submits two competing agents (an
-elephant and a mouse), and shows selective pampering in action: the mouse
-(earlier GPS virtual finish) completes long before the elephant even though
-it arrived second.
+Builds a reduced granite-family model, wraps it in an ``AgentService`` over
+the real continuous-batching engine backend, and submits two competing
+agents (an elephant and a mouse) as backend-agnostic ``AgentSpec``s.  The
+service resolves the scheduler by registry name, streams lifecycle events
+(admissions, per-token generation, completions) to the agent handles, and
+shows selective pampering in action: the mouse (earlier GPS virtual finish)
+completes long before the elephant even though it was submitted second.
+Swap ``AgentService.engine(...)`` for ``AgentService.sim(...)`` to run the
+same two specs on the discrete-event cluster.
 """
 
 import jax
-import numpy as np
 
+from repro.api import AgentService, AgentSpec
 from repro.configs import get_config
-from repro.core import InferenceSpec, agent_cost, make_scheduler
-from repro.engine import EngineAgent, ServeEngine
+from repro.core import InferenceSpec
 from repro.models import Model
 
 VOCAB = 256
 
 
-def make_agent(rng, aid, n_inferences, prompt_len, decode_len):
-    stage = [
-        (rng.integers(0, VOCAB, size=prompt_len), decode_len)
-        for _ in range(n_inferences)
-    ]
-    specs = [InferenceSpec(prompt_len, decode_len)] * n_inferences
-    return EngineAgent(
-        agent_id=aid, arrival_iter=0, stages=[stage],
-        predicted_cost=agent_cost(specs),
+def make_spec(n_inferences, prompt_len, decode_len, name):
+    return AgentSpec(
+        stages=[[InferenceSpec(prompt_len, decode_len)] * n_inferences],
+        name=name,
     )
 
 
@@ -35,23 +34,23 @@ def main():
     cfg = get_config("granite-3-2b").reduced(vocab=VOCAB)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
 
-    scheduler = make_scheduler("justitia", total_kv=512.0)
-    engine = ServeEngine(
-        model, params, scheduler,
+    service = AgentService.engine(
+        model, params, "justitia",
         pool_tokens=512, block_size=16, max_batch=2, cache_len=256,
     )
+    elephant = service.submit(
+        make_spec(6, prompt_len=100, decode_len=100, name="elephant")
+    )
+    mouse = service.submit(
+        make_spec(1, prompt_len=16, decode_len=8, name="mouse")
+    )
 
-    engine.submit_agent(make_agent(rng, 0, n_inferences=6,
-                                   prompt_len=100, decode_len=100))
-    engine.submit_agent(make_agent(rng, 1, n_inferences=1,
-                                   prompt_len=16, decode_len=8))
-
-    completions = engine.run_until_idle()
-    print("agent completion iterations:", completions)
-    print("engine metrics:", engine.metrics)
-    assert completions[1] < completions[0], "mouse should finish first"
+    result = service.drain()
+    print("agent completion iterations:", result.finish)
+    print("mouse generated tokens:", mouse.tokens)
+    print("engine metrics:", result.metrics)
+    assert mouse.finish < elephant.finish, "mouse should finish first"
     print("OK: the mouse was pampered past the elephant "
           "(earlier GPS virtual finish time)")
 

@@ -1,90 +1,84 @@
-"""End-to-end driver: serve a mixed agent workload with batched requests.
+"""End-to-end driver: one workload spec, two backends, one AgentService.
 
-    PYTHONPATH=src python examples/serve_agents.py [--scheduler justitia]
+    PYTHONPATH=src python examples/serve_agents.py --backend engine
+    PYTHONPATH=src python examples/serve_agents.py --backend sim
 
-The full production path in miniature: the 9-class agent workload sampler
-generates task-parallel agents with synthetic prompts; the per-class
-TF-IDF+MLP predictor (trained on 60 samples/class here) predicts each
-agent's KV token-time at arrival; the Justitia scheduler computes one-shot
-virtual finish times; the continuous-batching engine runs REAL model
-prefill/decode steps with paged KV accounting, swap-on-pressure, and
-non-preemptive admission.
+The full production path in miniature, now behind the unified serving API:
+the 9-class agent workload sampler generates task-parallel agents with
+synthetic prompts and bursty (Mooncake-like) arrival times; the per-class
+TF-IDF+MLP predictor predicts each agent's KV token-time at arrival; the
+scheduler (any name registered with ``@register_scheduler``) computes its
+priority keys; and :class:`repro.api.AgentService` streams the agents into
+the chosen backend *online* — agents are submitted with future arrival
+times and enter the system mid-run, exactly like live traffic.
+
+``--backend engine`` runs REAL model prefill/decode steps (paged KV
+accounting, swap-on-pressure, non-preemptive admission); ``--backend sim``
+runs the identical AgentSpec list on the discrete-event cluster.
 """
 
 import argparse
 import time
 
-import jax
 import numpy as np
 
-from repro.configs import get_config
-from repro.core import make_scheduler
-from repro.engine import EngineAgent, ServeEngine
-from repro.models import Model
+from repro.api import AgentHooks, service_for_backend, specs_from_classes
+from repro.api.workload import DEFAULT_CLASSES
+from repro.core import scheduler_names
 from repro.predictor import AgentCostPredictor
-from repro.workloads import AGENT_CLASSES, sample_agent
-
-VOCAB = 512
+from repro.workloads import sample_agent
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--scheduler", default="justitia")
+    ap.add_argument("--backend", default="engine",
+                    choices=("engine", "sim"))
+    ap.add_argument("--scheduler", default="justitia",
+                    choices=scheduler_names())
     ap.add_argument("--n-agents", type=int, default=8)
+    ap.add_argument("--window-s", type=float, default=30.0)
     args = ap.parse_args()
 
-    cfg = get_config("h2o-danube-1.8b").reduced(vocab=VOCAB)
-    model = Model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
 
     # train the per-class cost predictor on a small history
     print("training per-class MLP cost predictors...")
     samples = {}
-    for cls in ("EV", "FV", "CC", "KBQAV"):
+    for cls in DEFAULT_CLASSES:
         hist = [sample_agent(rng, cls) for _ in range(60)]
         samples[cls] = ([a.prompt for a in hist],
                         [a.true_cost for a in hist])
     predictor = AgentCostPredictor(max_features=48)
     predictor.fit(samples, epochs=300)
 
-    pool = 4096
-    engine = ServeEngine(
-        model, params,
-        make_scheduler(args.scheduler, float(pool)),
-        pool_tokens=pool, block_size=16, max_batch=4, cache_len=512,
+    specs = specs_from_classes(
+        rng, args.n_agents, args.window_s, predictor=predictor
+    )
+    service = service_for_backend(
+        args.backend, args.scheduler, arch="h2o-danube-1.8b",
+        pool_tokens=4096,
     )
 
-    # sample small agents, scale their token demands to engine scale
-    print(f"submitting {args.n_agents} agents "
-          f"({args.scheduler} scheduler)...")
+    print(f"streaming {args.n_agents} agents into the {args.backend} "
+          f"backend ({args.scheduler} scheduler, online arrivals over "
+          f"{args.window_s:.0f}s)...")
     t0 = time.time()
-    for aid in range(args.n_agents):
-        cls = ("EV", "FV", "CC", "KBQAV")[aid % 4]
-        a = sample_agent(rng, cls)
-        stages = [
-            [
-                (rng.integers(0, VOCAB, size=max(8, s.prefill // 8)),
-                 max(4, s.decode // 8))
-                for s in stage
-            ]
-            for stage in a.stages
-        ]
-        pred_cost = predictor.predict(cls, a.prompt)
-        engine.submit_agent(EngineAgent(
-            agent_id=aid, arrival_iter=engine.now, stages=stages,
-            predicted_cost=pred_cost / 64.0,  # match the 1/8 token scaling
-        ))
-
-    completions = engine.run_until_idle()
+    hooks = AgentHooks(
+        on_complete=lambda ev: print(
+            f"  t={ev.time:7.1f}s agent {ev.agent_id} done "
+            f"(jct {ev.jct:.1f}s)"
+        )
+    )
+    for spec in specs:
+        service.submit(spec, hooks=hooks)
+    result = service.drain()
     wall = time.time() - t0
-    engine.alloc.check_invariants()
-    jcts = sorted(completions.values())
-    print(f"served {args.n_agents} agents / "
-          f"{engine.metrics['tokens']} tokens in {wall:.1f}s wall")
-    print(f"completion iterations: mean={np.mean(jcts):.0f} "
-          f"p90={np.percentile(jcts, 90):.0f}")
-    print("engine metrics:", engine.metrics)
+
+    print(f"served {args.n_agents} agents on backend={result.backend} "
+          f"in {wall:.1f}s wall")
+    print("jct:", result.stats.row())
+    print("events:", result.event_counts)
+    print("backend metrics:", result.metrics)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# CI entry: tier-1 test suite + a short CPU smoke of the serving launcher
+# on BOTH backends of the unified AgentService API.
+#
+#   scripts/ci.sh            # full tier-1 + smokes
+#   scripts/ci.sh --smoke    # smokes only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+# ~30s CPU smoke first: the same workload spec through both backends.
+# (Runs before tier-1 so a pre-existing test failure — the container has
+# known Pallas-on-CPU gaps in tests/test_kernels.py — cannot mask a broken
+# serving path.)
+echo "== smoke: repro.launch.serve --backend sim =="
+python -m repro.launch.serve --backend sim --n-agents 4 --window-s 10
+
+echo "== smoke: repro.launch.serve --backend engine =="
+python -m repro.launch.serve --backend engine --n-agents 3 --window-s 10 \
+    --pool-tokens 2048 --max-batch 2
+
+if [[ "${1:-}" != "--smoke" ]]; then
+    echo "== tier-1: pytest =="
+    python -m pytest -x -q
+fi
+
+echo "CI OK"

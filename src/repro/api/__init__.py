@@ -1,0 +1,62 @@
+"""Unified serving API: one facade over the simulator and the JAX engine.
+
+    from repro.api import AgentService, AgentSpec
+
+    service = AgentService.sim(scheduler="justitia")          # or .engine(...)
+    handle = service.submit(AgentSpec(stages=[[InferenceSpec(300, 80)]]))
+    result = service.drain()
+
+See ``repro.api.service`` for the facade, ``repro.api.backend`` for the
+``Backend`` protocol and how to add a backend, ``repro.api.events`` for the
+streamed lifecycle events, and ``repro.core.registry`` for the scheduler
+plugin registry the facade resolves policy names through.
+"""
+
+from repro.api.backend import (
+    AgentSpec,
+    Backend,
+    BackendResult,
+    EngineBackend,
+    SimBackend,
+)
+from repro.api.events import (
+    AgentArrived,
+    AgentCompleted,
+    AgentEvent,
+    AgentHooks,
+    RequestAdmitted,
+    RequestSwappedIn,
+    RequestSwappedOut,
+    StageCompleted,
+    TokenGenerated,
+)
+from repro.api.service import (
+    AgentHandle,
+    AgentService,
+    MetricsRecorder,
+    ServiceResult,
+)
+from repro.api.workload import specs_from_classes, service_for_backend
+
+__all__ = [
+    "AgentSpec",
+    "Backend",
+    "BackendResult",
+    "EngineBackend",
+    "SimBackend",
+    "AgentArrived",
+    "AgentCompleted",
+    "AgentEvent",
+    "AgentHooks",
+    "RequestAdmitted",
+    "RequestSwappedIn",
+    "RequestSwappedOut",
+    "StageCompleted",
+    "TokenGenerated",
+    "AgentHandle",
+    "AgentService",
+    "MetricsRecorder",
+    "ServiceResult",
+    "specs_from_classes",
+    "service_for_backend",
+]

@@ -1,0 +1,300 @@
+"""The ``Backend`` protocol and its two implementations.
+
+A backend is anything that can accept :class:`AgentSpec` submissions with
+arrival times, advance a clock, and drain to completion — the
+:class:`repro.api.AgentService` facade drives simulator and engine through
+this one surface, so a workload script switches backend with one flag.
+
+Contract (all times in *workload seconds*):
+
+  * ``submit(spec, agent_id)`` registers an agent arriving at
+    ``max(spec.arrival, now)``; submissions may happen at any point, also
+    interleaved with ``run`` — both backends support online arrivals.
+  * ``run(until)`` advances the backend clock to ``until`` (the simulator
+    is event-driven and advances lazily at drain; the engine really steps).
+  * ``drain(max_time)`` runs everything submitted so far to completion and
+    returns a :class:`BackendResult`.
+  * ``set_listener(listener)`` installs the duck-typed lifecycle callback
+    receiver (``on_arrival``/``on_admit``/``on_swap_out``/``on_swap_in``/
+    ``on_token``/``on_stage_complete``/``on_agent_complete``) in backend-
+    native time; ``to_workload_time`` converts those stamps back to seconds.
+
+To add a backend: implement this protocol over your runtime, map workload
+seconds onto its native clock, and forward its scheduler interactions to a
+``repro.core.SchedulerPolicy`` — see ROADMAP.md "Serving API".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from repro.core import make_scheduler
+from repro.core.cost import InferenceSpec, MemoryFamily, agent_cost
+from repro.core.schedulers import AgentScheduler
+from repro.engine import EngineAgent, ServeEngine
+from repro.sim import ClusterSim, SimAgent
+
+
+@dataclasses.dataclass
+class AgentSpec:
+    """Backend-agnostic description of one task-parallel agent.
+
+    ``stages`` uses the cost model's :class:`InferenceSpec` (full-scale
+    token counts, as the paper's workload suite samples them); backends map
+    them onto their own granularity (the engine divides by its
+    ``token_scale``).  ``prompts`` optionally pins exact engine prompt
+    token arrays per stage, used verbatim (already engine-scale); decode
+    budgets still come from ``stages`` and are scaled.  When ``prompts``
+    is absent the engine synthesizes prompts of the scaled lengths.
+    """
+
+    stages: list[list[InferenceSpec]]
+    arrival: float = 0.0
+    predicted_cost: Optional[float] = None   # default: true memory-centric cost
+    true_cost: Optional[float] = None
+    family: MemoryFamily = MemoryFamily.DENSE
+    name: str = "agent"
+    prompts: Optional[list[list[np.ndarray]]] = None
+
+    def flat_specs(self) -> list[InferenceSpec]:
+        return [s for stage in self.stages for s in stage]
+
+    def resolved_costs(self) -> tuple[float, float]:
+        """(predicted, true) cost with defaults filled from the cost model."""
+        true = self.true_cost
+        if true is None:
+            true = agent_cost(self.flat_specs(), self.family)
+        pred = self.predicted_cost
+        if pred is None:
+            pred = true
+        return float(pred), float(true)
+
+
+@dataclasses.dataclass
+class BackendResult:
+    """What a drained backend hands back, in workload seconds."""
+
+    finish: dict[int, float]              # agent_id -> absolute completion
+    jct: dict[int, float]                 # agent_id -> completion - arrival
+    makespan: float
+    swaps: int = 0
+    sched_decisions: int = 0
+    sched_time: float = 0.0               # wall-clock spent in scheduler code
+    metrics: dict = dataclasses.field(default_factory=dict)
+
+
+@runtime_checkable
+class Backend(Protocol):
+    name: str
+
+    @property
+    def now(self) -> float: ...
+
+    def set_listener(self, listener: Any) -> None: ...
+
+    def to_workload_time(self, t: float) -> float: ...
+
+    def submit(self, spec: AgentSpec, agent_id: int) -> float: ...
+
+    def run(self, until: float) -> None: ...
+
+    def drain(self) -> BackendResult: ...
+
+
+def _resolve_scheduler(
+    scheduler: "str | AgentScheduler", total_kv: float, service_rate: float
+) -> AgentScheduler:
+    if isinstance(scheduler, str):
+        return make_scheduler(scheduler, total_kv, service_rate)
+    return scheduler
+
+
+class SimBackend:
+    """Discrete-event cluster simulator behind the ``Backend`` protocol.
+
+    The simulator replays arrival times exactly, so ``run`` only has to
+    remember the clock floor: all scheduling happens inside ``drain``.
+    """
+
+    name = "sim"
+
+    def __init__(
+        self,
+        scheduler: "str | AgentScheduler" = "justitia",
+        *,
+        total_kv: float = 16384.0,
+        decode_rate: float = 30.0,
+        prefill_rate: float = 4000.0,
+        swap_penalty: float = 0.2,
+    ):
+        sched = _resolve_scheduler(scheduler, total_kv, decode_rate)
+        self.sim = ClusterSim(
+            sched,
+            total_kv,
+            decode_rate=decode_rate,
+            prefill_rate=prefill_rate,
+            swap_penalty=swap_penalty,
+        )
+        self.scheduler = sched
+        self._agents: list[SimAgent] = []
+        self._now = 0.0
+
+    @property
+    def now(self) -> float:
+        return self._now
+
+    def set_listener(self, listener: Any) -> None:
+        self.sim.listener = listener
+
+    def to_workload_time(self, t: float) -> float:
+        return float(t)
+
+    def submit(self, spec: AgentSpec, agent_id: int) -> float:
+        pred, true = spec.resolved_costs()
+        arrival = max(float(spec.arrival), self._now)
+        self._agents.append(
+            SimAgent(
+                agent_id=agent_id,
+                arrival=arrival,
+                stages=[list(s) for s in spec.stages],
+                predicted_cost=pred,
+                true_cost=true,
+                family=spec.family,
+                name=spec.name,
+            )
+        )
+        return arrival
+
+    def run(self, until: float) -> None:
+        self._now = max(self._now, float(until))
+
+    def drain(self) -> BackendResult:
+        res = self.sim.run(self._agents)
+        self._agents = []
+        self._now = max(self._now, res.makespan)
+        return BackendResult(
+            finish=dict(res.finish),
+            jct=dict(res.jct),
+            makespan=res.makespan,
+            swaps=res.swaps,
+            sched_decisions=res.sched_decisions,
+            sched_time=res.sched_time,
+            metrics={"swaps": res.swaps},
+        )
+
+
+class EngineBackend:
+    """Real JAX continuous-batching engine behind the ``Backend`` protocol.
+
+    ``token_scale`` divides the workload's token demands down to engine
+    scale (predicted KV token-time costs scale by ``token_scale**2`` since
+    cost is quadratic-ish in token counts); ``time_scale`` maps workload
+    seconds onto engine iterations for arrival scheduling and converts
+    event/finish stamps back.
+    """
+
+    name = "engine"
+
+    def __init__(
+        self,
+        model,
+        params,
+        scheduler: "str | AgentScheduler" = "justitia",
+        *,
+        pool_tokens: int = 4096,
+        block_size: int = 16,
+        max_batch: int = 8,
+        cache_len: int = 512,
+        prefill_chunk: int = 512,
+        token_scale: int = 1,
+        time_scale: float = 1.0,
+        seed: int = 0,
+        max_iters: int = 200_000,
+    ):
+        sched = _resolve_scheduler(scheduler, float(pool_tokens), 1.0)
+        self.engine = ServeEngine(
+            model,
+            params,
+            sched,
+            pool_tokens=pool_tokens,
+            block_size=block_size,
+            max_batch=max_batch,
+            cache_len=cache_len,
+            prefill_chunk=prefill_chunk,
+        )
+        self.scheduler = sched
+        self.token_scale = int(token_scale)
+        self.time_scale = float(time_scale)
+        self.max_iters = int(max_iters)
+        self._vocab = int(model.cfg.vocab)
+        self._rng = np.random.default_rng(seed)
+
+    @property
+    def now(self) -> float:
+        return self.engine.now / self.time_scale
+
+    def set_listener(self, listener: Any) -> None:
+        self.engine.listener = listener
+
+    def to_workload_time(self, t: float) -> float:
+        return float(t) / self.time_scale
+
+    def _engine_stages(
+        self, spec: AgentSpec
+    ) -> list[list[tuple[np.ndarray, int]]]:
+        stages = []
+        for i, stage in enumerate(spec.stages):
+            reqs = []
+            for j, s in enumerate(stage):
+                # decode budgets always come from the (full-scale) spec and
+                # are scaled down; pinned prompts are used verbatim (they
+                # are engine tokens already), synthesized ones are scaled
+                d = max(1, int(round(s.decode / self.token_scale)))
+                if spec.prompts is not None:
+                    prompt = np.asarray(spec.prompts[i][j])
+                else:
+                    p = max(1, int(round(s.prefill / self.token_scale)))
+                    prompt = self._rng.integers(0, self._vocab, size=p)
+                reqs.append((prompt, d))
+            stages.append(reqs)
+        return stages
+
+    def submit(self, spec: AgentSpec, agent_id: int) -> float:
+        pred, _ = spec.resolved_costs()
+        arrival_iter = max(
+            self.engine.now, int(round(spec.arrival * self.time_scale))
+        )
+        self.engine.submit_agent(
+            EngineAgent(
+                agent_id=agent_id,
+                arrival_iter=arrival_iter,
+                stages=self._engine_stages(spec),
+                predicted_cost=pred / (self.token_scale * self.token_scale),
+            )
+        )
+        return arrival_iter / self.time_scale
+
+    def run(self, until: float) -> None:
+        self.engine.run(int(round(until * self.time_scale)))
+
+    def drain(self) -> BackendResult:
+        completions = self.engine.run_until_idle(max_iters=self.max_iters)
+        self.engine.alloc.check_invariants()
+        finish = {
+            aid: it / self.time_scale for aid, it in completions.items()
+        }
+        jct = {
+            aid: (completions[aid] - self.engine.agents[aid].arrival_iter)
+            / self.time_scale
+            for aid in completions
+        }
+        return BackendResult(
+            finish=finish,
+            jct=jct,
+            makespan=self.now,
+            swaps=self.engine.metrics["swaps"],
+            metrics=dict(self.engine.metrics),
+        )

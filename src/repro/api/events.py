@@ -1,0 +1,76 @@
+"""Typed lifecycle events streamed by :class:`repro.api.AgentService`.
+
+Both backends (the discrete-event simulator and the real JAX engine) emit
+the same duck-typed callbacks; the service's dispatcher normalizes them into
+these frozen dataclasses with ``time`` in *workload seconds* regardless of
+the backend's native clock (the engine counts iterations internally).
+
+``TokenGenerated`` is engine-only: the simulator models decoding as a
+continuous rate and has no per-token instants.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class AgentEvent:
+    agent_id: int
+    time: float
+
+
+@dataclasses.dataclass(frozen=True)
+class AgentArrived(AgentEvent):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestAdmitted(AgentEvent):
+    rid: int
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestSwappedOut(AgentEvent):
+    rid: int
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestSwappedIn(AgentEvent):
+    rid: int
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenGenerated(AgentEvent):
+    rid: int
+    token: int
+
+
+@dataclasses.dataclass(frozen=True)
+class StageCompleted(AgentEvent):
+    stage: int
+
+
+@dataclasses.dataclass(frozen=True)
+class AgentCompleted(AgentEvent):
+    jct: float
+
+
+Hook = Optional[Callable[[AgentEvent], None]]
+
+
+@dataclasses.dataclass
+class AgentHooks:
+    """Per-agent lifecycle callbacks, each invoked with the typed event.
+
+    Any subset may be set; ``on_swap`` fires for both swap-out and swap-in
+    (inspect the event type to distinguish).  ``on_token`` only fires on the
+    engine backend.
+    """
+
+    on_admit: Hook = None
+    on_swap: Hook = None
+    on_stage_complete: Hook = None
+    on_complete: Hook = None
+    on_token: Hook = None

@@ -1,0 +1,272 @@
+"""``AgentService`` — the single serving facade over every backend.
+
+This is how launchers, examples, benchmarks, and tests drive serving::
+
+    service = AgentService.sim(scheduler="justitia", total_kv=16384.0)
+    # or: AgentService.engine(model, params, scheduler="justitia", ...)
+    for spec in workload:                      # AgentSpec, arrival in seconds
+        handle = service.submit(spec)          # online: at any time
+    service.run(until=30.0)                    # interleave with more submits
+    result = service.drain()                   # ServiceResult
+
+Each submission returns an :class:`AgentHandle` that streams the agent's
+lifecycle (admission, swaps, per-stage completions, per-token events on the
+engine backend) and accepts :class:`repro.api.events.AgentHooks` callbacks.
+A :class:`MetricsRecorder` built on ``repro.sim.metrics`` aggregates JCT
+statistics and event counts uniformly across backends.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional
+
+from repro.api.backend import AgentSpec, Backend, BackendResult
+from repro.api.events import (
+    AgentArrived,
+    AgentCompleted,
+    AgentEvent,
+    AgentHooks,
+    RequestAdmitted,
+    RequestSwappedIn,
+    RequestSwappedOut,
+    StageCompleted,
+    TokenGenerated,
+)
+from repro.sim.metrics import JctStats, fair_ratios, fairness_stats, jct_stats
+
+
+@dataclasses.dataclass
+class AgentHandle:
+    """Live view of one submitted agent's session."""
+
+    agent_id: int
+    spec: AgentSpec
+    arrival: float                      # effective arrival, workload seconds
+    hooks: AgentHooks
+    status: str = "pending"             # pending -> active -> done
+    record_events: bool = True          # retain events/tokens on the handle
+    finish: Optional[float] = None
+    jct: Optional[float] = None
+    stage_finish: dict[int, float] = dataclasses.field(default_factory=dict)
+    tokens: list[int] = dataclasses.field(default_factory=list)
+    events: list[AgentEvent] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return self.status == "done"
+
+    def _record(self, ev: AgentEvent) -> None:
+        if self.record_events:
+            self.events.append(ev)
+        if isinstance(ev, AgentArrived):
+            self.status = "active"
+            self.arrival = ev.time
+        elif isinstance(ev, RequestAdmitted):
+            if self.hooks.on_admit:
+                self.hooks.on_admit(ev)
+        elif isinstance(ev, (RequestSwappedOut, RequestSwappedIn)):
+            if self.hooks.on_swap:
+                self.hooks.on_swap(ev)
+        elif isinstance(ev, TokenGenerated):
+            if self.record_events:
+                self.tokens.append(ev.token)
+            if self.hooks.on_token:
+                self.hooks.on_token(ev)
+        elif isinstance(ev, StageCompleted):
+            self.stage_finish[ev.stage] = ev.time
+            if self.hooks.on_stage_complete:
+                self.hooks.on_stage_complete(ev)
+        elif isinstance(ev, AgentCompleted):
+            self.status = "done"
+            self.finish = ev.time
+            self.jct = ev.jct
+            if self.hooks.on_complete:
+                self.hooks.on_complete(ev)
+
+
+class MetricsRecorder:
+    """Uniform serving metrics across backends (on ``repro.sim.metrics``)."""
+
+    def __init__(self) -> None:
+        self.jct: dict[int, float] = {}
+        self.finish: dict[int, float] = {}
+        self.event_counts: dict[str, int] = {}
+
+    def record(self, ev: AgentEvent) -> None:
+        kind = type(ev).__name__
+        self.event_counts[kind] = self.event_counts.get(kind, 0) + 1
+        if isinstance(ev, AgentCompleted):
+            self.jct[ev.agent_id] = ev.jct
+            self.finish[ev.agent_id] = ev.time
+
+    def jct_stats(self) -> JctStats:
+        return jct_stats(self.jct)
+
+    def fairness_vs(self, reference_jct: dict[int, float]):
+        """Finish-time fair ratios against a reference run (paper §5.1)."""
+        return fairness_stats(fair_ratios(self.jct, reference_jct))
+
+
+@dataclasses.dataclass
+class ServiceResult:
+    """What ``drain`` returns: per-agent outcomes + aggregate stats."""
+
+    finish: dict[int, float]
+    jct: dict[int, float]
+    stats: JctStats
+    makespan: float
+    swaps: int
+    sched_decisions: int
+    sched_time: float
+    backend: str
+    metrics: dict
+    event_counts: dict
+
+
+class _Dispatcher:
+    """Translates backend-native callbacks into typed workload-time events."""
+
+    def __init__(self, service: "AgentService") -> None:
+        self.svc = service
+
+    def _push(self, agent_id: int, ev: AgentEvent) -> None:
+        self.svc.recorder.record(ev)
+        handle = self.svc.handles.get(agent_id)
+        if handle is not None:
+            handle._record(ev)
+
+    def _t(self, t: float) -> float:
+        return self.svc.backend.to_workload_time(t)
+
+    def on_arrival(self, agent_id: int, t: float) -> None:
+        self._push(agent_id, AgentArrived(agent_id, self._t(t)))
+
+    def on_admit(self, agent_id: int, rid: int, t: float) -> None:
+        self._push(agent_id, RequestAdmitted(agent_id, self._t(t), rid))
+
+    def on_swap_out(self, agent_id: int, rid: int, t: float) -> None:
+        self._push(agent_id, RequestSwappedOut(agent_id, self._t(t), rid))
+
+    def on_swap_in(self, agent_id: int, rid: int, t: float) -> None:
+        self._push(agent_id, RequestSwappedIn(agent_id, self._t(t), rid))
+
+    def on_token(self, agent_id: int, rid: int, token: int, t: float) -> None:
+        self._push(agent_id, TokenGenerated(agent_id, self._t(t), rid, token))
+
+    def on_stage_complete(self, agent_id: int, stage: int, t: float) -> None:
+        self._push(agent_id, StageCompleted(agent_id, self._t(t), stage))
+
+    def on_agent_complete(self, agent_id: int, t: float) -> None:
+        tw = self._t(t)
+        handle = self.svc.handles.get(agent_id)
+        arrival = handle.arrival if handle is not None else 0.0
+        self._push(agent_id, AgentCompleted(agent_id, tw, tw - arrival))
+
+
+class AgentService:
+    """Backend-agnostic serving facade (see module docstring)."""
+
+    def __init__(self, backend: Backend, *, record_events: bool = True):
+        """``record_events=False`` keeps only aggregate counts and JCTs —
+        per-event objects are not retained on the handles, which matters
+        for paper-scale benchmark sweeps (thousands of admissions/tokens).
+        Hooks and status/stage bookkeeping still work either way."""
+        self.backend = backend
+        self.handles: dict[int, AgentHandle] = {}
+        self.recorder = MetricsRecorder()
+        self.record_events = record_events
+        self._next_id = 0
+        backend.set_listener(_Dispatcher(self))
+
+    # ------------------------------------------------------- constructors
+
+    @classmethod
+    def sim(
+        cls, scheduler: str = "justitia", *, record_events: bool = True, **kw
+    ) -> "AgentService":
+        """Service over the discrete-event simulator (paper-scale runs)."""
+        from repro.api.backend import SimBackend
+
+        return cls(SimBackend(scheduler, **kw), record_events=record_events)
+
+    @classmethod
+    def engine(
+        cls, model, params, scheduler: str = "justitia", *,
+        record_events: bool = True, **kw
+    ) -> "AgentService":
+        """Service over the real JAX continuous-batching engine."""
+        from repro.api.backend import EngineBackend
+
+        return cls(
+            EngineBackend(model, params, scheduler, **kw),
+            record_events=record_events,
+        )
+
+    # --------------------------------------------------------- lifecycle
+
+    @property
+    def now(self) -> float:
+        return self.backend.now
+
+    def submit(
+        self, spec: AgentSpec, *, hooks: Optional[AgentHooks] = None
+    ) -> AgentHandle:
+        """Submit one agent; arrival is ``max(spec.arrival, now)``.
+
+        May be called at any point — before, between, or after ``run``
+        calls — on both backends (online arrivals).
+        """
+        agent_id = self._next_id
+        self._next_id += 1
+        # register the handle BEFORE the backend sees the spec: an agent
+        # arriving at or before `now` is released inside submit() and its
+        # AgentArrived event must find the handle
+        handle = AgentHandle(
+            agent_id=agent_id,
+            spec=spec,
+            arrival=float(spec.arrival),
+            hooks=hooks or AgentHooks(),
+            record_events=self.record_events,
+        )
+        self.handles[agent_id] = handle
+        try:
+            arrival = self.backend.submit(spec, agent_id)
+        except Exception:
+            del self.handles[agent_id]
+            raise
+        if handle.status == "pending":   # arrival lies in the future
+            handle.arrival = arrival
+        return handle
+
+    def submit_many(
+        self, specs: Iterable[AgentSpec]
+    ) -> list[AgentHandle]:
+        return [self.submit(s) for s in specs]
+
+    def run(self, until: float) -> None:
+        """Advance serving time to ``until`` (workload seconds)."""
+        self.backend.run(until)
+
+    def drain(self) -> ServiceResult:
+        """Serve everything submitted so far to completion."""
+        res: BackendResult = self.backend.drain()
+        # the recorder's jct view is authoritative (it uses true arrival
+        # stamps); fall back to the backend's numbers for any agent whose
+        # events were not observed (e.g. a listener installed late)
+        jct = dict(res.jct)
+        jct.update(self.recorder.jct)
+        finish = dict(res.finish)
+        finish.update(self.recorder.finish)
+        return ServiceResult(
+            finish=finish,
+            jct=jct,
+            stats=jct_stats(jct),
+            makespan=res.makespan,
+            swaps=res.swaps,
+            sched_decisions=res.sched_decisions,
+            sched_time=res.sched_time,
+            backend=self.backend.name,
+            metrics=res.metrics,
+            event_counts=dict(self.recorder.event_counts),
+        )

@@ -1,0 +1,103 @@
+"""Shared workload/service builders for the CLI launchers and examples.
+
+Both ``repro.launch.serve`` and ``examples/serve_agents.py`` stream the
+paper's sampled agent classes into an :class:`AgentService` with bursty
+(Mooncake-like) arrival times; the spec construction and the sim-vs-engine
+service wiring live here so calibration constants exist in exactly one
+place.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.api.backend import AgentSpec
+from repro.api.service import AgentService
+from repro.workloads import mooncake_like_arrivals, sample_agent
+
+#: default small-agent mix used by the CLI drivers
+DEFAULT_CLASSES = ("EV", "FV", "CC", "KBQAV")
+
+#: engine serves token demands divided by this (predicted costs by its
+#: square, since KV token-time is ~quadratic in token counts)
+DEFAULT_TOKEN_SCALE = 8
+
+
+def specs_from_classes(
+    rng: np.random.Generator,
+    n_agents: int,
+    window_s: float,
+    *,
+    classes: Sequence[str] = DEFAULT_CLASSES,
+    predictor=None,
+) -> list[AgentSpec]:
+    """Sample one backend-agnostic AgentSpec list with online arrivals.
+
+    ``predictor`` (an ``AgentCostPredictor``) supplies predicted costs from
+    each agent's synthetic prompt; without one, ground-truth costs are used.
+    """
+    arrivals = mooncake_like_arrivals(rng, n_agents, window_s)
+    specs = []
+    for aid in range(n_agents):
+        cls = classes[aid % len(classes)]
+        a = sample_agent(rng, cls)
+        pred = (
+            float(predictor.predict(cls, a.prompt))
+            if predictor is not None
+            else a.true_cost
+        )
+        specs.append(
+            AgentSpec(
+                stages=[list(s) for s in a.stages],
+                arrival=float(arrivals[aid]),
+                predicted_cost=pred,
+                true_cost=a.true_cost,
+                name=cls,
+            )
+        )
+    return specs
+
+
+def service_for_backend(
+    backend: str,
+    scheduler: str,
+    *,
+    arch: str = "granite-3-2b",
+    vocab: int = 512,
+    pool_tokens: int = 4096,
+    max_batch: int = 4,
+    cache_len: int = 512,
+    token_scale: int = DEFAULT_TOKEN_SCALE,
+    sim_kv_factor: float = 4.0,
+    decode_rate: float = 30.0,
+    seed: int = 0,
+) -> AgentService:
+    """Build an AgentService for ``backend`` in {"sim", "engine"}.
+
+    The sim pool is ``pool_tokens * sim_kv_factor`` KV units: the simulator
+    serves full-scale token demands while the engine serves them divided by
+    ``token_scale``, so its pool is proportionally wider.
+    """
+    if backend == "sim":
+        return AgentService.sim(
+            scheduler,
+            total_kv=float(pool_tokens) * sim_kv_factor,
+            decode_rate=decode_rate,
+        )
+    if backend != "engine":
+        raise ValueError(f"unknown backend {backend!r} (sim|engine)")
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import Model
+
+    cfg = get_config(arch).reduced(vocab=vocab)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    return AgentService.engine(
+        model, params, scheduler,
+        pool_tokens=pool_tokens, max_batch=max_batch, cache_len=cache_len,
+        token_scale=token_scale, time_scale=1.0,
+    )

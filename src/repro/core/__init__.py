@@ -15,8 +15,14 @@ from repro.core.cost import (
     vtc_cost,
 )
 from repro.core.gps import GpsAgent, gps_finish_times
+from repro.core.registry import (
+    SchedulerPolicy,
+    register_scheduler,
+    resolve_scheduler,
+    scheduler_names,
+    unregister_scheduler,
+)
 from repro.core.schedulers import (
-    ALL_SCHEDULERS,
     AgentRecord,
     AgentScheduler,
     JustitiaScheduler,
@@ -29,6 +35,14 @@ from repro.core.schedulers import (
     make_scheduler,
 )
 from repro.core.virtual_time import VirtualClock
+
+
+def __getattr__(attr: str):
+    # live view of the registry (see repro.core.schedulers.__getattr__)
+    if attr == "ALL_SCHEDULERS":
+        return scheduler_names()
+    raise AttributeError(f"module {__name__!r} has no attribute {attr!r}")
+
 
 __all__ = [
     "InferenceSpec",
@@ -55,5 +69,10 @@ __all__ = [
     "VllmSjfScheduler",
     "VtcScheduler",
     "make_scheduler",
+    "SchedulerPolicy",
+    "register_scheduler",
+    "resolve_scheduler",
+    "scheduler_names",
+    "unregister_scheduler",
     "VirtualClock",
 ]

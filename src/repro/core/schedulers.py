@@ -24,6 +24,11 @@ import dataclasses
 from typing import Optional
 
 from repro.core.cost import InferenceSpec
+from repro.core.registry import (
+    register_scheduler,
+    resolve_scheduler,
+    scheduler_names,
+)
 from repro.core.virtual_time import VirtualClock
 
 
@@ -93,13 +98,23 @@ class AgentScheduler:
     def request_key(self, req: Request, t: float) -> tuple:
         return (req.submit_time, req.rid)
 
+    # -- construction -------------------------------------------------------
 
+    @classmethod
+    def build(cls, total_kv: float, service_rate: float = 1.0) -> "AgentScheduler":
+        """Uniform constructor used by the registry-backed factory; policies
+        that need backend capacity parameters (Justitia) override this."""
+        return cls()
+
+
+@register_scheduler("vllm-fcfs", "vllm", "fcfs")
 class VllmFcfsScheduler(AgentScheduler):
     """Baseline (a): vLLM — inference-level First-Come-First-Serve."""
 
     name = "vllm-fcfs"
 
 
+@register_scheduler("vllm-sjf", "sjf")
 class VllmSjfScheduler(AgentScheduler):
     """Baseline (b): vLLM-SJF — inference-level Shortest-Job-First using the
     per-inference predicted cost (the paper uses DistilBERT-predicted
@@ -111,6 +126,7 @@ class VllmSjfScheduler(AgentScheduler):
         return (req.pred_cost, req.submit_time, req.rid)
 
 
+@register_scheduler("parrot", "agent-fcfs")
 class ParrotScheduler(AgentScheduler):
     """Baseline (c): Parrot — agent-level FCFS (all inferences of the
     earliest-arrived agent served consecutively)."""
@@ -122,6 +138,7 @@ class ParrotScheduler(AgentScheduler):
         return (rec.arrival, rec.agent_id, req.rid)
 
 
+@register_scheduler("vtc")
 class VtcScheduler(AgentScheduler):
     """Baseline (d): Virtual Token Counter (Sheng et al., OSDI'24).
 
@@ -150,6 +167,7 @@ class VtcScheduler(AgentScheduler):
         return (rec.serviced_vtc, rec.arrival, req.rid)
 
 
+@register_scheduler("srjf")
 class SrjfScheduler(AgentScheduler):
     """Baseline (e): Shortest-Remaining-Job-First at the *agent* level, on
     the same predicted KV token-time costs Justitia uses."""
@@ -163,6 +181,7 @@ class SrjfScheduler(AgentScheduler):
         return (remaining, rec.arrival, req.rid)
 
 
+@register_scheduler("justitia")
 class JustitiaScheduler(AgentScheduler):
     """The paper: virtual-time fair queuing with selective pampering.
 
@@ -201,29 +220,29 @@ class JustitiaScheduler(AgentScheduler):
         rec = self.agents[req.agent_id]
         return (rec.virtual_finish, rec.arrival, req.rid)
 
+    @classmethod
+    def build(cls, total_kv: float, service_rate: float = 1.0) -> "JustitiaScheduler":
+        return cls(total_kv, service_rate)
+
 
 def make_scheduler(
     name: str, total_kv: float, service_rate: float = 1.0
 ) -> AgentScheduler:
     """Factory used by the simulator, the engine, and the benchmarks.
 
-    ``service_rate`` (decode iterations per second) only matters for
-    Justitia's virtual clock; see JustitiaScheduler.__init__.
+    Resolves ``name`` through the plugin registry
+    (``repro.core.registry``); any policy decorated with
+    ``@register_scheduler`` — including ones defined outside this module —
+    is constructible here.  ``service_rate`` (decode iterations per second)
+    only matters for Justitia's virtual clock; see
+    ``JustitiaScheduler.__init__``.
     """
-    name = name.lower()
-    if name in ("justitia",):
-        return JustitiaScheduler(total_kv, service_rate)
-    if name in ("vtc",):
-        return VtcScheduler()
-    if name in ("vllm", "fcfs", "vllm-fcfs"):
-        return VllmFcfsScheduler()
-    if name in ("vllm-sjf", "sjf"):
-        return VllmSjfScheduler()
-    if name in ("parrot", "agent-fcfs"):
-        return ParrotScheduler()
-    if name in ("srjf",):
-        return SrjfScheduler()
-    raise ValueError(f"unknown scheduler {name!r}")
+    return resolve_scheduler(name).build(total_kv, service_rate)
 
 
-ALL_SCHEDULERS = ["vllm-fcfs", "vllm-sjf", "parrot", "vtc", "srjf", "justitia"]
+def __getattr__(attr: str):
+    # ALL_SCHEDULERS is derived from the registry at access time so that
+    # policies registered after this module imported still show up.
+    if attr == "ALL_SCHEDULERS":
+        return scheduler_names()
+    raise AttributeError(f"module {__name__!r} has no attribute {attr!r}")

@@ -1,5 +1,15 @@
 """Continuous-batching serving engine (vLLM semantics, JAX backend)."""
 
-from repro.engine.engine import EngineAgent, EngineRequest, ServeEngine
+from repro.engine.engine import (
+    EngineAgent,
+    EngineRequest,
+    EngineStalledError,
+    ServeEngine,
+)
 
-__all__ = ["EngineAgent", "EngineRequest", "ServeEngine"]
+__all__ = [
+    "EngineAgent",
+    "EngineRequest",
+    "EngineStalledError",
+    "ServeEngine",
+]

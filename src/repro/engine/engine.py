@@ -15,11 +15,25 @@ non-preemptive semantics (App. C):
 Time is measured in engine iterations (one batched decode step == 1
 iteration; a prefill costs ceil(prompt / prefill_chunk) iterations),
 matching the cost model's token-iteration units (service_rate=1).
+
+Agents arrive *online*: ``submit_agent`` may be called at any point — before
+the first ``step()``, between steps, or with ``arrival_iter`` in the future,
+in which case the agent sits in a pending heap until the engine clock
+reaches it.  ``step()`` is re-entrant with submission, so a driver can
+interleave ``run(until=...)`` with new arrivals; ``repro.api.AgentService``
+builds its online-arrival serving loop on exactly this.
+
+An optional ``listener`` receives lifecycle callbacks (``on_arrival``,
+``on_admit``, ``on_swap_out``, ``on_swap_in``, ``on_token``,
+``on_stage_complete``, ``on_agent_complete``) — duck-typed so this module
+stays independent of the API layer that consumes the events.
 """
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
+import heapq
 from typing import Any, Optional
 
 import jax
@@ -74,6 +88,21 @@ class EngineAgent:
     finish_iter: int = -1
 
 
+class EngineStalledError(RuntimeError):
+    """``run_until_idle`` hit ``max_iters`` before draining.
+
+    Carries the partial results so callers can post-mortem the stall:
+    ``completions`` and ``metrics`` are snapshots of the engine state at the
+    moment it gave up; the message itself describes queue depths, pool
+    occupancy, and per-agent live inference counts.
+    """
+
+    def __init__(self, msg: str, completions: dict[int, int], metrics: dict):
+        super().__init__(msg)
+        self.completions = completions
+        self.metrics = metrics
+
+
 class ServeEngine:
     def __init__(
         self,
@@ -86,10 +115,12 @@ class ServeEngine:
         max_batch: int = 8,
         cache_len: int = 512,
         prefill_chunk: int = 512,
+        listener: Any = None,
     ):
         self.model = model
         self.params = params
         self.sched = scheduler
+        self.listener = listener
         self.alloc = BlockAllocator(pool_tokens, block_size)
         self.max_batch = max_batch
         self.cache_len = cache_len
@@ -104,72 +135,186 @@ class ServeEngine:
         self.waiting: list[EngineRequest] = []
         self.swapped: list[EngineRequest] = []
         self.agents: dict[int, EngineAgent] = {}
+        # future arrivals: (arrival_iter, submit order, agent) min-heap
+        self.pending: list[tuple[int, int, EngineAgent]] = []
         self.now = 0               # iteration counter
         self.completions: dict[int, int] = {}   # agent -> finish iter
         self._rid = 0
+        self._submit_seq = 0
         self.metrics = {"prefills": 0, "decode_steps": 0, "swaps": 0,
-                        "tokens": 0}
+                        "tokens": 0, "sorts": 0}
 
         self._jit_decode = jax.jit(self.model.decode)
         self._jit_prefill = jax.jit(
             self.model.prefill, static_argnames=("cache_len",)
         )
 
+    # ------------------------------------------------------------- events
+
+    def _emit(self, event: str, *args) -> None:
+        if self.listener is not None:
+            fn = getattr(self.listener, event, None)
+            if fn is not None:
+                fn(*args)
+
     # ------------------------------------------------------------- submit
 
     def submit_agent(self, agent: EngineAgent) -> None:
+        """Register an agent with the engine.
+
+        If ``agent.arrival_iter`` lies in the future the agent is parked in
+        the pending heap and released by ``step()`` when the clock reaches
+        it — this is how online (non-upfront) arrivals are driven.  An
+        arrival at or before ``self.now`` takes effect immediately, which
+        matches the old submit-everything-upfront behaviour.
+        """
+        self._validate_stages(agent)
+        if agent.arrival_iter > self.now:
+            heapq.heappush(
+                self.pending, (agent.arrival_iter, self._submit_seq, agent)
+            )
+            self._submit_seq += 1
+            return
+        self._arrive(agent)
+
+    def _validate_stages(self, agent: EngineAgent) -> None:
+        for stage in agent.stages:
+            for prompt, d in stage:
+                if len(prompt) + int(d) + 1 > self.cache_len:
+                    raise ValueError(
+                        f"request p={len(prompt)} d={d} exceeds cache_len "
+                        f"{self.cache_len}"
+                    )
+
+    def _arrive(self, agent: EngineAgent) -> None:
+        agent.arrival_iter = self.now
         self.agents[agent.agent_id] = agent
         self.sched.on_agent_arrival(
             agent.agent_id, float(self.now), agent.predicted_cost
         )
+        self._emit("on_arrival", agent.agent_id, float(self.now))
         self._submit_stage(agent)
+
+    def _release_arrivals(self) -> None:
+        while self.pending and self.pending[0][0] <= self.now:
+            _, _, agent = heapq.heappop(self.pending)
+            self._arrive(agent)
 
     def _submit_stage(self, agent: EngineAgent) -> None:
         stage = agent.stages[agent.next_stage]
         agent.next_stage += 1
         agent.live += len(stage)
         for prompt, d in stage:
-            if len(prompt) + int(d) + 1 > self.cache_len:
-                raise ValueError(
-                    f"request p={len(prompt)} d={d} exceeds cache_len "
-                    f"{self.cache_len}"
-                )
-            self.waiting.append(
+            self._enqueue(
+                self.waiting,
                 EngineRequest(
                     agent_id=agent.agent_id,
                     rid=self._rid,
                     prompt=np.asarray(prompt, np.int32),
                     max_new_tokens=int(d),
                     submit_iter=self.now,
-                )
+                ),
             )
             self._rid += 1
 
     # ----------------------------------------------------------- stepping
 
     def step(self) -> None:
-        """One engine iteration: admit, then one batched decode step."""
+        """One engine iteration: release arrivals, admit, one decode step."""
+        self._release_arrivals()
         self._admit()
         self._decode_once()
         self.now += 1
 
-    def run_until_idle(self, max_iters: int = 200_000) -> dict[int, int]:
-        while (self.waiting or self.swapped or self.slot_req) and (
-            self.now < max_iters
-        ):
+    @property
+    def busy(self) -> bool:
+        """Work is queued or running (pending future arrivals excluded)."""
+        return bool(self.waiting or self.swapped or self.slot_req)
+
+    def run(self, until: int) -> None:
+        """Advance the engine clock to iteration ``until`` (re-entrant).
+
+        Idle stretches (nothing queued and no pending arrival due) are
+        skipped in O(1) rather than stepped through, so a driver can submit
+        agents with sparse future ``arrival_iter``s and simply ``run`` past
+        them.
+        """
+        while self.now < until:
+            if not self.busy:
+                nxt = self.pending[0][0] if self.pending else until
+                if nxt > self.now:
+                    self.now = min(int(nxt), until)
+                    if self.now >= until:
+                        break
+                    continue
             self.step()
-        if self.waiting or self.swapped or self.slot_req:
-            raise RuntimeError("engine did not drain (max_iters hit)")
+
+    def run_until_idle(self, max_iters: int = 200_000) -> dict[int, int]:
+        """Drain every queue (including pending future arrivals).
+
+        ``max_iters`` budgets *executed* steps, not the clock value — idle
+        gaps before scheduled arrivals are jumped in O(1) and don't count.
+        """
+        steps = 0
+        while self.busy or self.pending:
+            if steps >= max_iters:
+                raise EngineStalledError(
+                    self._stall_report(max_iters),
+                    dict(self.completions),
+                    dict(self.metrics),
+                )
+            if not self.busy:
+                # idle gap before the next scheduled arrival: jump the clock
+                self.now = max(self.now, int(self.pending[0][0]))
+            self.step()
+            steps += 1
         return dict(self.completions)
+
+    def _stall_report(self, max_iters: int) -> str:
+        live = {
+            aid: a.live
+            for aid, a in sorted(self.agents.items())
+            if a.finish_iter < 0
+        }
+        return (
+            f"engine did not drain (step budget max_iters={max_iters} "
+            f"exhausted at iteration "
+            f"{self.now}): waiting={len(self.waiting)} "
+            f"swapped={len(self.swapped)} running={len(self.slot_req)} "
+            f"pending_arrivals={len(self.pending)} "
+            f"free_slots={len(self.slot_free)}/{self.max_batch} "
+            f"free_blocks={self.alloc.free_blocks}/{self.alloc.n_blocks} "
+            f"completed_agents={len(self.completions)}/{len(self.agents)} "
+            f"live_per_agent={live}"
+        )
 
     # ----------------------------------------------------------- admission
 
     def _key(self, req: EngineRequest):
         return self.sched.request_key(req.to_sched_request(), float(self.now))
 
+    def _enqueue(self, queue: list[EngineRequest], req: EngineRequest) -> None:
+        """Insert preserving sorted order for static-key schedulers.
+
+        Static policies (``sched.dynamic == False``: Justitia, FCFS, SJF,
+        Parrot) never change a request's key after submission, so the
+        waiting/swapped queues stay sorted by construction and ``_admit``
+        skips the per-iteration O(n log n) re-sort.  Dynamic policies (VTC,
+        SRJF) append here and re-sort at each admission pass.
+        """
+        if self.sched.dynamic:
+            queue.append(req)
+        else:
+            bisect.insort(queue, req, key=self._key)
+
+    def _sort_for_admission(self, queue: list[EngineRequest]) -> None:
+        if self.sched.dynamic and len(queue) > 1:
+            queue.sort(key=self._key)
+            self.metrics["sorts"] += 1
+
     def _admit(self) -> None:
         # swapped queue has absolute priority and blocks the waiting queue
-        self.swapped.sort(key=self._key)
+        self._sort_for_admission(self.swapped)
         while self.swapped and self.slot_free:
             req = self.swapped[0]
             if not self.alloc.swap_in(req.rid):
@@ -178,7 +323,7 @@ class ServeEngine:
             self._restore_slot(req)
         if self.swapped:
             return
-        self.waiting.sort(key=self._key)
+        self._sort_for_admission(self.waiting)
         while self.waiting and self.slot_free:
             req = self.waiting[0]
             if not self.alloc.can_admit(len(req.prompt) + 1):
@@ -186,6 +331,7 @@ class ServeEngine:
             self.waiting.pop(0)
             self.alloc.admit(req.rid, len(req.prompt))
             self._prefill_into_slot(req)
+            self._emit("on_admit", req.agent_id, req.rid, float(self.now))
 
     # ------------------------------------------------------------- prefill
 
@@ -244,6 +390,7 @@ class ServeEngine:
         self.slot_last_tok[slot] = req._last_tok
         self.slot_pos[slot] = len(req.prompt) + req.generated
         self.metrics["swaps"] += 1
+        self._emit("on_swap_in", req.agent_id, req.rid, float(self.now))
 
     def _swap_out_worst(self) -> bool:
         """Evict the running request with the WORST scheduler key."""
@@ -260,7 +407,8 @@ class ServeEngine:
         self.slot_req.pop(slot)
         self.slot_free.append(slot)
         req.slot = -1
-        self.swapped.append(req)
+        self._enqueue(self.swapped, req)
+        self._emit("on_swap_out", req.agent_id, req.rid, float(self.now))
         return True
 
     # -------------------------------------------------------------- decode
@@ -297,6 +445,10 @@ class ServeEngine:
                 continue
             req.generated += 1
             self.metrics["tokens"] += 1
+            self._emit(
+                "on_token", req.agent_id, req.rid, int(nxt[slot]),
+                float(self.now),
+            )
             self.slot_last_tok[slot] = nxt[slot]
             self.slot_pos[slot] += 1
             occ = len(req.prompt) + req.generated
@@ -314,9 +466,16 @@ class ServeEngine:
         agent = self.agents[req.agent_id]
         agent.live -= 1
         if agent.live == 0:
+            self._emit(
+                "on_stage_complete", agent.agent_id, agent.next_stage - 1,
+                float(self.now),
+            )
             if agent.next_stage < len(agent.stages):
                 self._submit_stage(agent)
             else:
                 agent.finish_iter = self.now
                 self.completions[agent.agent_id] = self.now
                 self.sched.on_agent_complete(agent.agent_id, float(self.now))
+                self._emit(
+                    "on_agent_complete", agent.agent_id, float(self.now)
+                )

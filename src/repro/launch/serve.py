@@ -1,11 +1,22 @@
-"""Serving launcher: continuous-batching engine + Justitia scheduling.
+"""Serving launcher: the unified ``AgentService`` API over either backend.
 
     PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-1.8b \
-        [--scheduler justitia] [--n-agents 6]
+        [--backend engine|sim] [--scheduler justitia] [--n-agents 6]
 
-CPU runs the reduced variant end-to-end (real prefill/decode); the full
-configs are validated against the production mesh by the dry-run
-(repro.launch.dryrun), which this launcher shares all sharding policy with.
+One workload spec (the paper's agent-class sampler + bursty arrivals) is
+driven through :class:`repro.api.AgentService`; ``--backend engine`` serves
+it on the real JAX continuous-batching engine (actual prefill/decode on
+device, paged KV accounting, swap-on-pressure), ``--backend sim`` on the
+calibrated discrete-event cluster — same ``AgentSpec`` list, same scheduler
+policy objects, one flag apart.  Scheduler names resolve through the plugin
+registry (``repro.core.registry``), so ``--scheduler`` accepts any
+registered policy.  Agents arrive *online* at their sampled arrival times,
+not upfront.
+
+CPU runs the reduced model variant end-to-end; the full configs are
+validated against the production mesh by the dry-run (repro.launch.dryrun),
+which this launcher shares all sharding policy with.  Installed as the
+``repro-serve`` console entrypoint (see pyproject.toml).
 """
 
 from __future__ import annotations
@@ -13,56 +24,44 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
 import numpy as np
 
-from repro.configs import ALL_ARCHS, get_config
-from repro.core import make_scheduler
-from repro.engine import EngineAgent, ServeEngine
-from repro.models import Model
-from repro.workloads import sample_agent
+from repro.api import service_for_backend, specs_from_classes
+from repro.configs import ALL_ARCHS
+from repro.core import scheduler_names
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b", choices=ALL_ARCHS)
-    ap.add_argument("--scheduler", default="justitia")
+    ap.add_argument("--backend", default="engine", choices=("engine", "sim"))
+    ap.add_argument("--scheduler", default="justitia",
+                    choices=scheduler_names())
     ap.add_argument("--n-agents", type=int, default=6)
     ap.add_argument("--pool-tokens", type=int, default=4096)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--window-s", type=float, default=20.0,
+                    help="arrival window (workload seconds)")
     args = ap.parse_args()
 
-    vocab = 512
-    cfg = get_config(args.arch).reduced(vocab=vocab)
-    model = Model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
-
-    engine = ServeEngine(
-        model, params,
-        make_scheduler(args.scheduler, float(args.pool_tokens)),
-        pool_tokens=args.pool_tokens, max_batch=args.max_batch,
-        cache_len=512,
+    specs = specs_from_classes(rng, args.n_agents, args.window_s)
+    service = service_for_backend(
+        args.backend, args.scheduler,
+        arch=args.arch, pool_tokens=args.pool_tokens,
+        max_batch=args.max_batch,
     )
-    classes = ("EV", "FV", "CC", "KBQAV")
+
     t0 = time.time()
-    for aid in range(args.n_agents):
-        a = sample_agent(rng, classes[aid % len(classes)])
-        stages = [
-            [(rng.integers(0, vocab, size=max(8, s.prefill // 8)),
-              max(4, s.decode // 8)) for s in stage]
-            for stage in a.stages
-        ]
-        engine.submit_agent(EngineAgent(
-            agent_id=aid, arrival_iter=engine.now, stages=stages,
-            predicted_cost=a.true_cost / 64.0,
-        ))
-    done = engine.run_until_idle()
-    engine.alloc.check_invariants()
-    print(f"arch={cfg.name} scheduler={args.scheduler} "
+    service.submit_many(specs)
+    result = service.drain()
+    print(f"backend={result.backend} scheduler={args.scheduler} "
           f"agents={args.n_agents} wall={time.time() - t0:.1f}s")
-    print("completion iterations:", dict(sorted(done.items())))
-    print("metrics:", engine.metrics)
+    print("jct:", result.stats.row())
+    print("completions:",
+          {k: round(v, 1) for k, v in sorted(result.finish.items())})
+    print("events:", result.event_counts)
+    print("metrics:", result.metrics)
 
 
 if __name__ == "__main__":

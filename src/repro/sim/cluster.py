@@ -17,13 +17,19 @@ The scheduler policy objects from ``repro.core.schedulers`` are used
 unmodified — the same classes drive the real JAX engine.  Time unit:
 seconds; service unit: KV token-time (token·seconds scaled by decode_rate
 to match the cost model's token·iterations — see ``kv_unit_scale``).
+
+The simulator emits the same duck-typed lifecycle callbacks as the engine
+(``on_arrival``, ``on_admit``, ``on_swap_out``, ``on_swap_in``,
+``on_stage_complete``, ``on_agent_complete``) to an optional ``listener`` —
+``repro.api`` builds its backend-agnostic event stream on these.  Per-token
+events are not emitted: decoding is continuous here, not discrete.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Optional, Sequence
+from typing import Any, Optional, Sequence
 
 from repro.core.cost import InferenceSpec, MemoryFamily, inference_cost
 from repro.core.schedulers import AgentScheduler, Request
@@ -91,12 +97,20 @@ class ClusterSim:
         decode_rate: float = 30.0,       # tokens/s per running sequence
         prefill_rate: float = 4000.0,    # prompt tokens/s
         swap_penalty: float = 0.2,       # seconds added on re-admission
+        listener: Any = None,
     ):
         self.sched = scheduler
         self.m = float(total_kv)
         self.decode_rate = float(decode_rate)
         self.prefill_rate = float(prefill_rate)
         self.swap_penalty = float(swap_penalty)
+        self.listener = listener
+
+    def _emit(self, event: str, *args) -> None:
+        if self.listener is not None:
+            fn = getattr(self.listener, event, None)
+            if fn is not None:
+                fn(*args)
 
     # ------------------------------------------------------------------ run
 
@@ -167,6 +181,9 @@ class ClusterSim:
         def admit(now: float) -> None:
             """Admission pass: swapped queue first, then waiting (vLLM)."""
             nonlocal _sched_clock, _decisions
+            # listener emits are deferred past the timed window so the
+            # reported scheduler overhead measures policy code only
+            deferred: list[tuple] = []
             t0 = _time.perf_counter()
             free = self.m - occupancy(now)
             # swapped queue has absolute priority and blocks new admissions
@@ -181,6 +198,9 @@ class ClusterSim:
                     r.prefill_done = max(r.prefill_done, now + self.swap_penalty)
                     running.append(r)
                     free -= need
+                    deferred.append(
+                        ("on_swap_in", r.req.agent_id, r.req.rid, now)
+                    )
                 else:
                     break
             if not swapped:
@@ -197,6 +217,7 @@ class ClusterSim:
                     self.sched.on_service(
                         req.agent_id, prefill_tokens=req.spec.prefill
                     )
+                    deferred.append(("on_admit", req.agent_id, req.rid, now))
                     running.append(
                         _Running(
                             req=req,
@@ -217,8 +238,11 @@ class ClusterSim:
                 r.last_account = now
                 r.prefill_done = max(r.prefill_done, now + self.swap_penalty)
                 running.append(r)
+                deferred.append(("on_swap_in", r.req.agent_id, r.req.rid, now))
             _decisions += 1
             _sched_clock += _time.perf_counter() - t0
+            for ev in deferred:
+                self._emit(*ev)
 
         def saturation_time(now: float) -> float:
             """When does pool occupancy hit M at current decode rates?
@@ -275,6 +299,7 @@ class ClusterSim:
                 )
                 _sched_clock += _time.perf_counter() - _t0
                 _decisions += 1
+                self._emit("on_arrival", agent.agent_id, t)
                 submit_stage(agent, t)
                 admit(t)
                 continue
@@ -292,6 +317,10 @@ class ClusterSim:
                     agent = by_id[r.req.agent_id]
                     agent.live_inferences -= 1
                     if agent.live_inferences == 0:
+                        self._emit(
+                            "on_stage_complete", agent.agent_id,
+                            agent.next_stage - 1, t,
+                        )
                         if agent.next_stage < len(agent.stages):
                             submit_stage(agent, t)
                         else:
@@ -301,6 +330,9 @@ class ClusterSim:
                             _t0 = _time.perf_counter()
                             self.sched.on_agent_complete(agent.agent_id, t)
                             _sched_clock += _time.perf_counter() - _t0
+                            self._emit(
+                                "on_agent_complete", agent.agent_id, t
+                            )
                 admit(t)
                 continue
 
@@ -313,6 +345,9 @@ class ClusterSim:
                 victim.swapped = True
                 swapped.append(victim)
                 result.swaps += 1
+                self._emit(
+                    "on_swap_out", victim.req.agent_id, victim.req.rid, t
+                )
                 continue
             if occupancy(t) >= self.m - 1e-6 and len(running) <= 1:
                 # single sequence saturating the pool: let it finish

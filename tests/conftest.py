@@ -1,0 +1,76 @@
+"""Test-suite bootstrap.
+
+The container this repo runs in does not ship ``hypothesis`` (and nothing
+may be pip-installed).  Without it, five test modules fail at *collection*,
+which under ``pytest -x`` aborts the whole tier-1 run.  This conftest
+installs a minimal stand-in when the real package is missing: strategy
+constructors return inert placeholders and ``@given`` replaces the test
+body with an explicit skip, so property tests are reported as skipped while
+every example-based test in the same modules still runs.  When hypothesis
+IS available, this file does nothing.
+"""
+
+from __future__ import annotations
+
+import sys
+import types
+
+try:  # pragma: no cover - exercised only where hypothesis exists
+    import hypothesis  # noqa: F401
+except ImportError:
+    import pytest
+
+    class _Strategy:
+        """Inert placeholder: composes like a strategy, generates nothing."""
+
+        def __init__(self, *args, **kwargs):
+            pass
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def map(self, fn):
+            return self
+
+        def filter(self, fn):
+            return self
+
+        def flatmap(self, fn):
+            return self
+
+    def _make_strategy(*args, **kwargs):
+        return _Strategy()
+
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.__getattr__ = lambda name: _make_strategy
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # zero-arg on purpose: pytest must not mistake the property
+            # test's strategy parameters for fixtures
+            def skipper():
+                pytest.skip("hypothesis not installed (stubbed by conftest)")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return deco
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = lambda *a, **k: True
+    hyp.note = lambda *a, **k: None
+    hyp.strategies = strategies
+    hyp.HealthCheck = types.SimpleNamespace(
+        too_slow=None, data_too_large=None, filter_too_much=None
+    )
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strategies

@@ -1,0 +1,270 @@
+"""Tests for the unified serving API: scheduler registry, online arrivals,
+engine-vs-simulator equivalence through AgentService, and the engine's
+static-key queue fast path / stall diagnostics."""
+
+import jax
+import numpy as np
+import pytest
+
+import repro.core as core
+import repro.core.schedulers as schedulers_mod
+from repro.api import (
+    AgentHooks,
+    AgentService,
+    AgentSpec,
+    EngineBackend,
+    SimBackend,
+)
+from repro.configs import get_config
+from repro.core import (
+    AgentScheduler,
+    InferenceSpec,
+    SchedulerPolicy,
+    make_scheduler,
+    register_scheduler,
+    scheduler_names,
+    unregister_scheduler,
+)
+from repro.engine import EngineAgent, EngineStalledError, ServeEngine
+from repro.models import Model
+
+VOCAB = 256
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("granite-3-2b").reduced(vocab=VOCAB)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+# -------------------------------------------------------------- registry
+
+
+def test_registry_registration_lookup_and_all_schedulers():
+    @register_scheduler("test-rr", "rr-alias")
+    class _RoundRobin(AgentScheduler):
+        pass
+
+    try:
+        s = make_scheduler("test-rr", 10.0)
+        assert isinstance(s, _RoundRobin)
+        assert s.name == "test-rr"
+        assert isinstance(s, SchedulerPolicy)
+        # aliases resolve but are not listed
+        assert isinstance(make_scheduler("rr-alias", 10.0), _RoundRobin)
+        assert "rr-alias" not in scheduler_names()
+        # ALL_SCHEDULERS is auto-derived from the registry, live
+        assert "test-rr" in scheduler_names()
+        assert "test-rr" in core.ALL_SCHEDULERS
+        assert "test-rr" in schedulers_mod.ALL_SCHEDULERS
+    finally:
+        unregister_scheduler("test-rr")
+    assert "test-rr" not in core.ALL_SCHEDULERS
+    with pytest.raises(ValueError):
+        make_scheduler("test-rr", 10.0)
+
+
+def test_registry_unknown_name_and_duplicates():
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        make_scheduler("nope", 1.0)
+    with pytest.raises(ValueError, match="already registered"):
+
+        @register_scheduler("justitia")
+        class _Shadow(AgentScheduler):
+            pass
+
+
+def test_all_schedulers_canonical_order():
+    assert core.ALL_SCHEDULERS == [
+        "vllm-fcfs", "vllm-sjf", "parrot", "vtc", "srjf", "justitia",
+    ]
+
+
+def test_builtin_schedulers_satisfy_policy_protocol():
+    for name in core.ALL_SCHEDULERS:
+        assert isinstance(make_scheduler(name, 100.0), SchedulerPolicy)
+
+
+# ------------------------------------------- engine/sim order equivalence
+
+# Sequential-contention workload: the pool fits exactly one inference at a
+# time on both backends (p=33 > remaining free while anything runs), so the
+# completion order is exactly the scheduler's key order at each completion
+# — observable identically through the engine and the simulator.
+_EQUIV = [  # (arrival_s, decode)
+    (0.0, 16),
+    (2.0, 8),
+    (4.0, 12),
+    (6.0, 4),
+]
+
+
+def _equiv_specs():
+    return [
+        AgentSpec(stages=[[InferenceSpec(33, d)]], arrival=t)
+        for t, d in _EQUIV
+    ]
+
+
+def _completion_order(jct_finish: dict) -> list:
+    return [aid for aid, _ in sorted(jct_finish.items(), key=lambda kv: kv[1])]
+
+
+@pytest.mark.parametrize("sched_name", ["justitia", "vtc"])
+def test_online_arrivals_same_completion_order_engine_vs_sim(
+    tiny_model, sched_name
+):
+    model, params = tiny_model
+    sim_svc = AgentService(
+        SimBackend(
+            sched_name, total_kv=64.0, decode_rate=1.0, prefill_rate=33.0
+        )
+    )
+    sim_svc.submit_many(_equiv_specs())
+    sim_res = sim_svc.drain()
+
+    eng_svc = AgentService(
+        EngineBackend(
+            model, params, sched_name,
+            pool_tokens=64, block_size=16, max_batch=4, cache_len=64,
+            token_scale=1, time_scale=1.0,
+        )
+    )
+    # online: agents enter the engine's pending heap with future arrival
+    # iterations and are released mid-run, not submitted upfront
+    eng_svc.submit_many(_equiv_specs())
+    assert eng_svc.backend.engine.pending, "future arrivals should be pending"
+    eng_res = eng_svc.drain()
+
+    assert set(sim_res.finish) == set(eng_res.finish) == {0, 1, 2, 3}
+    assert _completion_order(sim_res.finish) == _completion_order(
+        eng_res.finish
+    ), f"order diverged under {sched_name}"
+    # no swap divergence: this workload must be swap-free on both backends
+    assert sim_res.swaps == 0 and eng_res.swaps == 0
+
+
+def test_engine_mid_run_submission_matches_upfront_schedule(tiny_model):
+    """Submitting during run(until=...) behaves like a scheduled arrival."""
+    model, params = tiny_model
+
+    def serve(online: bool):
+        svc = AgentService(
+            EngineBackend(
+                model, params, "justitia",
+                pool_tokens=256, max_batch=2, cache_len=128,
+            )
+        )
+        svc.submit(AgentSpec(stages=[[InferenceSpec(32, 24)]], arrival=0.0))
+        if online:
+            svc.run(until=10.0)  # clock is now past 10 iterations
+            svc.submit(
+                AgentSpec(stages=[[InferenceSpec(16, 8)]], arrival=10.0)
+            )
+        else:
+            svc.submit(
+                AgentSpec(stages=[[InferenceSpec(16, 8)]], arrival=10.0)
+            )
+        return svc.drain()
+
+    upfront = serve(online=False)
+    online = serve(online=True)
+    assert upfront.finish == online.finish
+
+
+# -------------------------------------------------- facade + event stream
+
+
+def test_service_streams_events_and_hooks(tiny_model):
+    model, params = tiny_model
+    svc = AgentService.engine(
+        model, params, "justitia",
+        pool_tokens=256, max_batch=2, cache_len=128,
+    )
+    seen = []
+    h = svc.submit(
+        AgentSpec(stages=[[InferenceSpec(16, 6)], [InferenceSpec(16, 4)]]),
+        hooks=AgentHooks(
+            on_stage_complete=lambda ev: seen.append(("stage", ev.stage)),
+            on_complete=lambda ev: seen.append(("done", ev.agent_id)),
+        ),
+    )
+    res = svc.drain()
+    assert h.done and h.finish == res.finish[0]
+    assert h.tokens and len(h.tokens) == 10  # per-token streaming
+    assert [e for e in seen if e[0] == "stage"] == [("stage", 0), ("stage", 1)]
+    assert seen[-1] == ("done", 0)
+    assert h.stage_finish[0] < h.stage_finish[1]
+    assert res.event_counts["TokenGenerated"] == 10
+
+
+def test_sim_backend_same_workload_one_flag(tiny_model):
+    """The acceptance scenario in miniature: identical AgentSpec list through
+    both backends via AgentService."""
+    model, params = tiny_model
+    specs = [
+        AgentSpec(stages=[[InferenceSpec(64, 32)] * 2], arrival=0.0),
+        AgentSpec(stages=[[InferenceSpec(32, 8)]], arrival=3.0),
+    ]
+    results = {}
+    for backend in ("sim", "engine"):
+        if backend == "sim":
+            svc = AgentService.sim("justitia", total_kv=2048.0)
+        else:
+            svc = AgentService.engine(
+                model, params, "justitia", pool_tokens=2048,
+                max_batch=4, cache_len=128,
+            )
+        svc.submit_many([
+            AgentSpec(stages=s.stages, arrival=s.arrival) for s in specs
+        ])
+        results[backend] = svc.drain()
+    for backend, res in results.items():
+        assert set(res.finish) == {0, 1}, backend
+        assert res.stats.n == 2
+        assert res.backend == backend
+
+
+# ------------------------------------- engine satellites: sorts + stalls
+
+
+def test_static_scheduler_skips_admission_resort(tiny_model):
+    model, params = tiny_model
+    rng = np.random.default_rng(0)
+
+    def run(name):
+        eng = ServeEngine(
+            model, params, make_scheduler(name, 512.0),
+            pool_tokens=512, max_batch=2, cache_len=128,
+        )
+        for aid in range(3):
+            stage = [(rng.integers(0, VOCAB, size=24), 12) for _ in range(2)]
+            eng.submit_agent(EngineAgent(aid, 0, [stage], 100.0 + aid))
+        eng.run_until_idle()
+        return eng.metrics
+
+    assert run("justitia")["sorts"] == 0     # static key: lazy sorted insert
+    assert run("vtc")["sorts"] > 0           # dynamic key: re-sorts per admit
+
+
+def test_run_until_idle_stall_carries_diagnostics(tiny_model):
+    model, params = tiny_model
+    rng = np.random.default_rng(1)
+    eng = ServeEngine(
+        model, params, make_scheduler("justitia", 512.0),
+        pool_tokens=512, max_batch=2, cache_len=256,
+    )
+    eng.submit_agent(
+        EngineAgent(0, 0, [[(rng.integers(0, VOCAB, size=16), 64)]], 10.0)
+    )
+    with pytest.raises(EngineStalledError) as ei:
+        eng.run_until_idle(max_iters=4)
+    err = ei.value
+    assert isinstance(err, RuntimeError)      # backward compatible
+    for fragment in ("waiting=", "swapped=", "running=", "free_blocks=",
+                     "live_per_agent="):
+        assert fragment in str(err)
+    assert err.completions == {}
+    assert err.metrics["tokens"] > 0          # partial progress surfaced
