@@ -19,7 +19,7 @@ from benchmarks.common import (
     run_scheduler,
     train_predictor,
 )
-from repro.api import AgentService, AgentSpec
+from repro.api import AgentService, AgentSpec, router_names
 from repro.core import InferenceSpec, scheduler_names, vtc_agent_cost
 from repro.sim import fair_ratios, fairness_stats, jct_stats
 from repro.workloads import AGENT_CLASSES, sample_agent
@@ -331,6 +331,67 @@ def fig12_overhead(seed: int = 0):
     return out_csv, out
 
 
+# --------------------------------------------- multi-replica fleet sweep
+
+
+def replica_router_sweep(
+    seed: int = 0,
+    n_agents: int = 200,
+    replicas=(1, 2, 4),
+    routers=None,
+):
+    """Beyond the paper: Justitia on an N-way ``ReplicatedBackend`` fleet.
+
+    Total fleet capacity is held at M_TOKENS (per-replica pool M/N), so the
+    sweep isolates the cost of *sharding* the fair queue: fleet JCT, the
+    per-replica load balance each router achieves, and the reconciled
+    virtual-time lag (how far the per-replica GPS clocks drift — zero lag
+    means per-replica fair queuing composes into global fairness).
+    ``python -m benchmarks.run --replicas 1,2,4 --routers round_robin,...``
+    overrides the sweep grid.
+    """
+    routers = list(routers) if routers else router_names()
+    w = build_workload(seed + 21, n_agents, 2)
+    out_csv, out = [], []
+    from benchmarks.common import to_agent_specs
+
+    specs = to_agent_specs(w)
+    for n_rep in replicas:
+        for router in routers if n_rep > 1 else routers[:1]:
+            service = AgentService.sim(
+                "justitia",
+                total_kv=M_TOKENS / n_rep,
+                decode_rate=DECODE_RATE,
+                replicas=n_rep,
+                router=router,
+                record_events=False,
+            )
+            # backends copy stages at submit, so specs are reusable per run
+            service.submit_many(specs)
+            res = service.drain()
+            st = res.stats
+            lag = res.metrics.get("virtual_lag", 0.0)
+            per_rep = res.metrics.get("per_replica", [])
+            balance = (
+                max(p["agents"] for p in per_rep)
+                - min(p["agents"] for p in per_rep)
+                if per_rep else 0
+            )
+            label = router if n_rep > 1 else "single"
+            out.append(
+                f"fleet r={n_rep} router={label:17s} "
+                f"mean={st.mean:8.1f}s p90={st.p90:8.1f}s "
+                f"agent-imbalance={balance:3d} "
+                f"virtual-lag={lag:12.0f} kv-token-time"
+            )
+            out_csv.append(csv_row(
+                f"fleet_r{n_rep}_{label}", 0.0,
+                f"mean_jct_s={st.mean:.1f};p90_jct_s={st.p90:.1f};"
+                f"virtual_lag={lag:.0f}",
+            ))
+    return out_csv, out
+
+
 ALL_FIGURES = [
     fig3_pampering,
     fig7_jct,
@@ -340,4 +401,5 @@ ALL_FIGURES = [
     fig11_cost_ablation,
     table1_predictor,
     fig12_overhead,
+    replica_router_sweep,
 ]

@@ -20,16 +20,28 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="substring filter on benchmark names")
     ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--replicas", default=None,
+                    help="comma list for the fleet sweep, e.g. 1,2,4")
+    ap.add_argument("--routers", default=None,
+                    help="comma list of router names for the fleet sweep")
     args = ap.parse_args()
 
-    from benchmarks.paper_figures import ALL_FIGURES
+    from benchmarks.paper_figures import ALL_FIGURES, replica_router_sweep
+
+    sweep_kw = {}
+    if args.replicas:
+        sweep_kw["replicas"] = tuple(
+            int(r) for r in args.replicas.split(",")
+        )
+    if args.routers:
+        sweep_kw["routers"] = args.routers.split(",")
 
     all_csv, all_detail = [], []
     for fn in ALL_FIGURES:
         if args.only and args.only not in fn.__name__:
             continue
         t0 = time.time()
-        csv_rows, detail = fn()
+        csv_rows, detail = fn(**(sweep_kw if fn is replica_router_sweep else {}))
         dt = time.time() - t0
         all_csv.extend(csv_rows)
         all_detail.extend(detail)

@@ -15,6 +15,15 @@ times and enter the system mid-run, exactly like live traffic.
 ``--backend engine`` runs REAL model prefill/decode steps (paged KV
 accounting, swap-on-pressure, non-preemptive admission); ``--backend sim``
 runs the identical AgentSpec list on the discrete-event cluster.
+
+``--replicas N`` serves the workload on an N-way
+:class:`repro.api.ReplicatedBackend` fleet: the router (``--router``, any
+name registered with ``@repro.api.register_router`` — ``round_robin``,
+``least_loaded``, or ``memory_cost_aware``, which places by the
+predictor's cost estimate) shards agents across N child backends, the
+children advance in lockstep, and their per-replica GPS clocks are
+reconciled into one global virtual time whose lag is reported in the
+backend metrics.  Every lifecycle event then carries the serving replica.
 """
 
 import argparse
@@ -22,7 +31,12 @@ import time
 
 import numpy as np
 
-from repro.api import AgentHooks, service_for_backend, specs_from_classes
+from repro.api import (
+    AgentHooks,
+    router_names,
+    service_for_backend,
+    specs_from_classes,
+)
 from repro.api.workload import DEFAULT_CLASSES
 from repro.core import scheduler_names
 from repro.predictor import AgentCostPredictor
@@ -37,6 +51,9 @@ def main():
                     choices=scheduler_names())
     ap.add_argument("--n-agents", type=int, default=8)
     ap.add_argument("--window-s", type=float, default=30.0)
+    ap.add_argument("--replicas", type=int, default=1)
+    ap.add_argument("--router", default="memory_cost_aware",
+                    choices=router_names())
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
@@ -57,16 +74,21 @@ def main():
     service = service_for_backend(
         args.backend, args.scheduler, arch="h2o-danube-1.8b",
         pool_tokens=4096,
+        replicas=args.replicas, router=args.router,
     )
 
+    fleet = (f" x{args.replicas} replicas via {args.router}"
+             if args.replicas > 1 else "")
     print(f"streaming {args.n_agents} agents into the {args.backend} "
-          f"backend ({args.scheduler} scheduler, online arrivals over "
-          f"{args.window_s:.0f}s)...")
+          f"backend{fleet} ({args.scheduler} scheduler, online arrivals "
+          f"over {args.window_s:.0f}s)...")
     t0 = time.time()
     hooks = AgentHooks(
         on_complete=lambda ev: print(
             f"  t={ev.time:7.1f}s agent {ev.agent_id} done "
-            f"(jct {ev.jct:.1f}s)"
+            f"(jct {ev.jct:.1f}s"
+            + (f", replica {ev.replica}" if ev.replica is not None else "")
+            + ")"
         )
     )
     for spec in specs:
@@ -79,6 +101,8 @@ def main():
     print("jct:", result.stats.row())
     print("events:", result.event_counts)
     print("backend metrics:", result.metrics)
+    for r, stats in result.per_replica.items():
+        print(f"replica {r}: {stats.row()}")
 
 
 if __name__ == "__main__":

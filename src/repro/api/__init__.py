@@ -30,6 +30,13 @@ from repro.api.events import (
     StageCompleted,
     TokenGenerated,
 )
+from repro.api.replicated import (
+    ReplicatedBackend,
+    Router,
+    register_router,
+    resolve_router,
+    router_names,
+)
 from repro.api.service import (
     AgentHandle,
     AgentService,
@@ -57,6 +64,11 @@ __all__ = [
     "AgentService",
     "MetricsRecorder",
     "ServiceResult",
+    "ReplicatedBackend",
+    "Router",
+    "register_router",
+    "resolve_router",
+    "router_names",
     "specs_from_classes",
     "service_for_backend",
 ]

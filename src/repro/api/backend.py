@@ -27,6 +27,7 @@ seconds onto its native clock, and forward its scheduler interactions to a
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Optional, Protocol, Sequence, runtime_checkable
 
 import numpy as np
@@ -93,6 +94,17 @@ class Backend(Protocol):
     @property
     def now(self) -> float: ...
 
+    @property
+    def virtual_capacity(self) -> float:
+        """GPS service capacity in workload cost-units per workload second.
+
+        This is the rate at which the backend's virtual clock advances when
+        one agent is active — what a ``ReplicatedBackend`` feeds to the
+        :class:`repro.core.GlobalVirtualClock` so per-replica virtual times
+        are comparable across heterogeneous children.
+        """
+        ...
+
     def set_listener(self, listener: Any) -> None: ...
 
     def to_workload_time(self, t: float) -> float: ...
@@ -145,6 +157,11 @@ class SimBackend:
     @property
     def now(self) -> float:
         return self._now
+
+    @property
+    def virtual_capacity(self) -> float:
+        # pool size (KV tokens) x decode rate = KV token-time per second
+        return self.sim.m * self.sim.decode_rate
 
     def set_listener(self, listener: Any) -> None:
         self.sim.listener = listener
@@ -229,12 +246,19 @@ class EngineBackend:
         self.token_scale = int(token_scale)
         self.time_scale = float(time_scale)
         self.max_iters = int(max_iters)
+        self.pool_tokens = int(pool_tokens)
         self._vocab = int(model.cfg.vocab)
         self._rng = np.random.default_rng(seed)
 
     @property
     def now(self) -> float:
         return self.engine.now / self.time_scale
+
+    @property
+    def virtual_capacity(self) -> float:
+        # engine pool tokens serve workload costs divided by token_scale**2
+        # at time_scale iterations per workload second
+        return self.pool_tokens * self.token_scale**2 * self.time_scale
 
     def set_listener(self, listener: Any) -> None:
         self.engine.listener = listener
@@ -278,7 +302,10 @@ class EngineBackend:
         return arrival_iter / self.time_scale
 
     def run(self, until: float) -> None:
-        self.engine.run(int(round(until * self.time_scale)))
+        # ceil (with an fp guard): run must advance AT LEAST to `until`, or
+        # a fleet's post-drain re-anchor could leave this engine's clock
+        # trailing the reconciled horizon by a fraction of an iteration
+        self.engine.run(math.ceil(until * self.time_scale - 1e-9))
 
     def drain(self) -> BackendResult:
         completions = self.engine.run_until_idle(max_iters=self.max_iters)

@@ -7,6 +7,11 @@ the backend's native clock (the engine counts iterations internally).
 
 ``TokenGenerated`` is engine-only: the simulator models decoding as a
 continuous rate and has no per-token instants.
+
+Every event carries a ``replica`` index when served through a
+:class:`repro.api.ReplicatedBackend` (``None`` on single-backend services):
+the fleet dispatcher tags each child backend's callbacks with the replica
+that emitted them, so per-replica metrics fall out of the same stream.
 """
 
 from __future__ import annotations
@@ -19,6 +24,8 @@ from typing import Callable, Optional
 class AgentEvent:
     agent_id: int
     time: float
+    #: which replica of a ReplicatedBackend served this (None: unreplicated)
+    replica: Optional[int] = dataclasses.field(default=None, kw_only=True)
 
 
 @dataclasses.dataclass(frozen=True)

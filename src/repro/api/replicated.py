@@ -1,0 +1,342 @@
+"""Multi-replica serving: shard agents across N child backends.
+
+:class:`ReplicatedBackend` implements the :class:`repro.api.Backend`
+protocol over a fleet of children (any mix of ``SimBackend`` /
+``EngineBackend`` — the children only need the protocol).  Incoming
+``AgentSpec`` submissions are placed by a pluggable *router*, all children
+advance in lockstep through ``run(until)``, and the per-replica GPS clocks
+are reconciled into one global virtual time by a
+:class:`repro.core.GlobalVirtualClock` — so Justitia's selective-pampering
+order and the worst-case delay bound can be stated fleet-wide, not just per
+replica (naive per-replica fair queuing loses global fairness exactly when
+the replica clocks drift; the reconciled lag measures that drift).
+
+Routers register with ``@register_router(name)`` the same way schedulers
+register with ``@register_scheduler``:
+
+  * ``round_robin`` — placement by submission order, oblivious to load;
+  * ``least_loaded`` — fewest live (uncompleted) agents;
+  * ``memory_cost_aware`` — smallest outstanding predicted KV token-time
+    after adding this agent, normalized by replica capacity (greedy
+    balancing on the predictor's memory-centric cost estimate).
+
+Routers are deterministic given the submission sequence (ties break toward
+the lowest replica index), which is what makes the engine-vs-sim replicated
+equivalence testable: same routing seed => same per-replica assignment.
+
+Listener callbacks from child k are forwarded in *workload seconds* with a
+``replica=k`` keyword, so the service's dispatcher (and the typed events in
+``repro.api.events``) know which replica served each lifecycle step.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import numpy as np
+
+from repro.api.backend import AgentSpec, Backend, BackendResult
+from repro.core.virtual_time import GlobalClockSnapshot, GlobalVirtualClock
+
+# ---------------------------------------------------------------- routers
+
+_ROUTERS: dict[str, type] = {}
+_ROUTER_ALIASES: dict[str, str] = {}
+
+
+def register_router(name: str, *aliases: str):
+    """Class decorator: register a :class:`Router` under ``name``.
+
+    Name and aliases must not collide with any existing canonical name or
+    alias (same shadowing protection as ``@register_scheduler``).
+    """
+
+    def deco(cls):
+        for n in (name, *aliases):
+            if n in _ROUTERS or n in _ROUTER_ALIASES:
+                raise ValueError(f"router name {n!r} already registered")
+        cls.name = name
+        _ROUTERS[name] = cls
+        for alias in aliases:
+            _ROUTER_ALIASES[alias] = name
+        return cls
+
+    return deco
+
+
+def router_names() -> list[str]:
+    """Canonical router names (aliases excluded), registration order."""
+    return list(_ROUTERS)
+
+
+def resolve_router(name: str) -> type:
+    canonical = _ROUTER_ALIASES.get(name, name)
+    try:
+        return _ROUTERS[canonical]
+    except KeyError:
+        raise ValueError(
+            f"unknown router {name!r} (have: {', '.join(_ROUTERS)})"
+        ) from None
+
+
+class Router:
+    """Placement policy: pick a replica for each submitted agent.
+
+    Subclasses read fleet state off the bound backend (live agent counts,
+    outstanding predicted cost, per-replica capacities) and must be
+    deterministic given the submission sequence and ``seed``.
+    """
+
+    name = "base"
+
+    def __init__(self, n_replicas: int, seed: int = 0):
+        self.n = int(n_replicas)
+        self.rng = np.random.default_rng(seed)
+        self._backend: Optional["ReplicatedBackend"] = None
+
+    def bind(self, backend: "ReplicatedBackend") -> None:
+        self._backend = backend
+
+    def pick(self, spec: AgentSpec, agent_id: int, pred_cost: float) -> int:
+        raise NotImplementedError
+
+
+@register_router("round_robin", "rr")
+class RoundRobinRouter(Router):
+    def __init__(self, n_replicas: int, seed: int = 0):
+        super().__init__(n_replicas, seed)
+        self._next = 0
+
+    def pick(self, spec: AgentSpec, agent_id: int, pred_cost: float) -> int:
+        r = self._next % self.n
+        self._next += 1
+        return r
+
+
+@register_router("least_loaded", "ll")
+class LeastLoadedRouter(Router):
+    def pick(self, spec: AgentSpec, agent_id: int, pred_cost: float) -> int:
+        loads = self._backend.live_agents
+        return min(range(self.n), key=lambda k: (loads[k], k))
+
+
+@register_router("memory_cost_aware", "cost_aware", "mca")
+class MemoryCostAwareRouter(Router):
+    """Greedy balancing of outstanding predicted KV token-time.
+
+    Routes to the replica whose post-placement load-to-capacity ratio is
+    smallest — the predictor's memory-centric cost estimate stands in for
+    the agent's true KV footprint, exactly as it does for Justitia's
+    virtual finish times.
+    """
+
+    def pick(self, spec: AgentSpec, agent_id: int, pred_cost: float) -> int:
+        costs = self._backend.live_cost
+        caps = self._backend.virtual_capacities
+        return min(
+            range(self.n),
+            key=lambda k: ((costs[k] + pred_cost) / caps[k], k),
+        )
+
+
+# ------------------------------------------------------ replica channel
+
+
+class _ReplicaChannel:
+    """Child k's listener: tags callbacks with ``replica=k``, converts the
+    child's native timestamps to workload seconds, and keeps the fleet's
+    load accounting current (completions decrement the router's view)."""
+
+    def __init__(self, fleet: "ReplicatedBackend", replica: int):
+        self.fleet = fleet
+        self.replica = replica
+
+    def _forward(self, event: str, agent_id: int, t: float, *args) -> None:
+        listener = self.fleet._listener
+        if listener is None:
+            return
+        fn = getattr(listener, event, None)
+        if fn is None:
+            return
+        tw = self.fleet.children[self.replica].to_workload_time(t)
+        fn(agent_id, *args, tw, replica=self.replica)
+
+    def on_arrival(self, agent_id: int, t: float) -> None:
+        self._forward("on_arrival", agent_id, t)
+
+    def on_admit(self, agent_id: int, rid: int, t: float) -> None:
+        self._forward("on_admit", agent_id, t, rid)
+
+    def on_swap_out(self, agent_id: int, rid: int, t: float) -> None:
+        self._forward("on_swap_out", agent_id, t, rid)
+
+    def on_swap_in(self, agent_id: int, rid: int, t: float) -> None:
+        self._forward("on_swap_in", agent_id, t, rid)
+
+    def on_token(self, agent_id: int, rid: int, token: int, t: float) -> None:
+        self._forward("on_token", agent_id, t, rid, token)
+
+    def on_stage_complete(self, agent_id: int, stage: int, t: float) -> None:
+        self._forward("on_stage_complete", agent_id, t, stage)
+
+    def on_agent_complete(self, agent_id: int, t: float) -> None:
+        self.fleet._on_child_complete(self.replica, agent_id)
+        self._forward("on_agent_complete", agent_id, t)
+
+
+# ---------------------------------------------------- replicated backend
+
+
+class ReplicatedBackend:
+    """N child backends behind the single-backend protocol (see module doc).
+
+    ``submit`` places each agent on one child via the router; ``run``
+    advances every child to the same workload time; ``drain`` drains them
+    all, merges their results, and reconciles the per-replica virtual
+    clocks (the snapshot lands in ``BackendResult.metrics`` as
+    ``global_virtual_time`` / ``virtual_lag`` / ``virtual_times``).
+    """
+
+    name = "replicated"
+
+    def __init__(
+        self,
+        children: Sequence[Backend],
+        *,
+        router: "str | Router" = "round_robin",
+        seed: int = 0,
+    ):
+        self.children: list[Backend] = list(children)
+        if not self.children:
+            raise ValueError("need at least one child backend")
+        if isinstance(router, str):
+            router = resolve_router(router)(len(self.children), seed)
+        elif router.n != len(self.children):
+            raise ValueError(
+                f"router sized for {router.n} replicas, have "
+                f"{len(self.children)}"
+            )
+        self.router = router
+        self.router.bind(self)
+        self.virtual_capacities = [c.virtual_capacity for c in self.children]
+        self.global_clock = GlobalVirtualClock(self.virtual_capacities)
+        self.assignment: dict[int, int] = {}     # agent_id -> replica
+        self.live_agents = [0] * len(self.children)
+        self.live_cost = [0.0] * len(self.children)
+        self._pred_cost: dict[int, float] = {}
+        self._listener: Any = None
+        self._last_snapshot: Optional[GlobalClockSnapshot] = None
+        for idx, child in enumerate(self.children):
+            child.set_listener(_ReplicaChannel(self, idx))
+
+    # --------------------------------------------------------- protocol
+
+    @property
+    def now(self) -> float:
+        return max(c.now for c in self.children)
+
+    @property
+    def virtual_capacity(self) -> float:
+        return float(sum(self.virtual_capacities))
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.children)
+
+    def set_listener(self, listener: Any) -> None:
+        """Install the fleet listener.
+
+        Callbacks arrive in workload seconds with a ``replica=k`` keyword
+        identifying the serving child (the channels convert each child's
+        native clock before forwarding), so ``to_workload_time`` is the
+        identity here.
+        """
+        self._listener = listener
+
+    def to_workload_time(self, t: float) -> float:
+        return float(t)
+
+    def submit(self, spec: AgentSpec, agent_id: int) -> float:
+        pred, _ = spec.resolved_costs()
+        replica = self.router.pick(spec, agent_id, pred)
+        if not 0 <= replica < len(self.children):
+            raise ValueError(
+                f"router {self.router.name!r} picked replica {replica} "
+                f"of {len(self.children)}"
+            )
+        arrival = self.children[replica].submit(spec, agent_id)
+        self.assignment[agent_id] = replica
+        self.live_agents[replica] += 1
+        self.live_cost[replica] += pred
+        self._pred_cost[agent_id] = pred
+        self.global_clock.register(replica, agent_id, arrival, pred)
+        return arrival
+
+    def run(self, until: float) -> None:
+        """Advance the whole fleet in lockstep to ``until`` (seconds)."""
+        for child in self.children:
+            child.run(until)
+
+    def drain(self) -> BackendResult:
+        finish: dict[int, float] = {}
+        jct: dict[int, float] = {}
+        per_replica: list[dict] = []
+        swaps = decisions = 0
+        sched_time = 0.0
+        makespan = 0.0
+        for idx, child in enumerate(self.children):
+            res = child.drain()
+            finish.update(res.finish)
+            jct.update(res.jct)
+            swaps += res.swaps
+            decisions += res.sched_decisions
+            sched_time += res.sched_time
+            makespan = max(makespan, res.makespan)
+            per_replica.append(
+                {
+                    "backend": child.name,
+                    "agents": len(res.finish),
+                    "makespan": res.makespan,
+                    "swaps": res.swaps,
+                    **{f"child_{k}": v for k, v in res.metrics.items()},
+                }
+            )
+        # resume lockstep: drained children sit at their own makespans, so
+        # re-anchor every child at the fleet makespan — later submissions
+        # then clamp to a common clock and can never predate the reconciled
+        # horizon (submit/drain rounds may interleave freely, per Backend)
+        makespan = max(makespan, self.now)
+        for child in self.children:
+            child.run(makespan)
+        snap = self.global_clock.reconcile(makespan)
+        self._last_snapshot = snap
+        return BackendResult(
+            finish=finish,
+            jct=jct,
+            makespan=makespan,
+            swaps=swaps,
+            sched_decisions=decisions,
+            sched_time=sched_time,
+            metrics={
+                "replicas": len(self.children),
+                "router": self.router.name,
+                "per_replica": per_replica,
+                "global_virtual_time": snap.global_virtual_time,
+                "virtual_lag": snap.lag,
+                "virtual_times": list(snap.virtual_times),
+            },
+        )
+
+    # ------------------------------------------------------- fleet state
+
+    def _on_child_complete(self, replica: int, agent_id: int) -> None:
+        self.live_agents[replica] -= 1
+        self.live_cost[replica] -= self._pred_cost.pop(agent_id, 0.0)
+
+    def pampering_order(self) -> list[int]:
+        """Fleet-wide selective-pampering order (reconciled F_j ascending).
+
+        Only agents whose arrivals have been reconciled (i.e. swept by
+        ``drain`` or an explicit ``global_clock.reconcile``) appear.
+        """
+        return self.global_clock.pampering_order()

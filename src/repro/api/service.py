@@ -46,6 +46,7 @@ class AgentHandle:
     hooks: AgentHooks
     status: str = "pending"             # pending -> active -> done
     record_events: bool = True          # retain events/tokens on the handle
+    replica: Optional[int] = None       # serving replica (replicated fleets)
     finish: Optional[float] = None
     jct: Optional[float] = None
     stage_finish: dict[int, float] = dataclasses.field(default_factory=dict)
@@ -59,6 +60,8 @@ class AgentHandle:
     def _record(self, ev: AgentEvent) -> None:
         if self.record_events:
             self.events.append(ev)
+        if ev.replica is not None:
+            self.replica = ev.replica
         if isinstance(ev, AgentArrived):
             self.status = "active"
             self.arrival = ev.time
@@ -86,12 +89,19 @@ class AgentHandle:
 
 
 class MetricsRecorder:
-    """Uniform serving metrics across backends (on ``repro.sim.metrics``)."""
+    """Uniform serving metrics across backends (on ``repro.sim.metrics``).
+
+    Events served through a replicated fleet carry a ``replica`` index;
+    the recorder aggregates both fleet-level JCTs (``jct``/``jct_stats``)
+    and per-replica JCTs (``replica_jct``/``per_replica_jct_stats``) from
+    the same stream.
+    """
 
     def __init__(self) -> None:
         self.jct: dict[int, float] = {}
         self.finish: dict[int, float] = {}
         self.event_counts: dict[str, int] = {}
+        self.replica_jct: dict[int, dict[int, float]] = {}
 
     def record(self, ev: AgentEvent) -> None:
         kind = type(ev).__name__
@@ -99,9 +109,20 @@ class MetricsRecorder:
         if isinstance(ev, AgentCompleted):
             self.jct[ev.agent_id] = ev.jct
             self.finish[ev.agent_id] = ev.time
+            if ev.replica is not None:
+                self.replica_jct.setdefault(ev.replica, {})[
+                    ev.agent_id
+                ] = ev.jct
 
     def jct_stats(self) -> JctStats:
         return jct_stats(self.jct)
+
+    def per_replica_jct_stats(self) -> dict[int, JctStats]:
+        """Per-replica JCT aggregates (empty for unreplicated backends)."""
+        return {
+            r: jct_stats(jcts)
+            for r, jcts in sorted(self.replica_jct.items())
+        }
 
     def fairness_vs(self, reference_jct: dict[int, float]):
         """Finish-time fair ratios against a reference run (paper §5.1)."""
@@ -122,10 +143,17 @@ class ServiceResult:
     backend: str
     metrics: dict
     event_counts: dict
+    #: replica -> JctStats when served by a replicated fleet (else empty)
+    per_replica: dict = dataclasses.field(default_factory=dict)
 
 
 class _Dispatcher:
-    """Translates backend-native callbacks into typed workload-time events."""
+    """Translates backend-native callbacks into typed workload-time events.
+
+    A :class:`repro.api.ReplicatedBackend` forwards its children's callbacks
+    with a ``replica=k`` keyword (and pre-converted workload timestamps, so
+    its ``to_workload_time`` is the identity); unreplicated backends omit it.
+    """
 
     def __init__(self, service: "AgentService") -> None:
         self.svc = service
@@ -139,29 +167,55 @@ class _Dispatcher:
     def _t(self, t: float) -> float:
         return self.svc.backend.to_workload_time(t)
 
-    def on_arrival(self, agent_id: int, t: float) -> None:
-        self._push(agent_id, AgentArrived(agent_id, self._t(t)))
+    def on_arrival(
+        self, agent_id: int, t: float, *, replica: Optional[int] = None
+    ) -> None:
+        self._push(agent_id, AgentArrived(agent_id, self._t(t),
+                                          replica=replica))
 
-    def on_admit(self, agent_id: int, rid: int, t: float) -> None:
-        self._push(agent_id, RequestAdmitted(agent_id, self._t(t), rid))
+    def on_admit(
+        self, agent_id: int, rid: int, t: float, *,
+        replica: Optional[int] = None,
+    ) -> None:
+        self._push(agent_id, RequestAdmitted(agent_id, self._t(t), rid,
+                                             replica=replica))
 
-    def on_swap_out(self, agent_id: int, rid: int, t: float) -> None:
-        self._push(agent_id, RequestSwappedOut(agent_id, self._t(t), rid))
+    def on_swap_out(
+        self, agent_id: int, rid: int, t: float, *,
+        replica: Optional[int] = None,
+    ) -> None:
+        self._push(agent_id, RequestSwappedOut(agent_id, self._t(t), rid,
+                                               replica=replica))
 
-    def on_swap_in(self, agent_id: int, rid: int, t: float) -> None:
-        self._push(agent_id, RequestSwappedIn(agent_id, self._t(t), rid))
+    def on_swap_in(
+        self, agent_id: int, rid: int, t: float, *,
+        replica: Optional[int] = None,
+    ) -> None:
+        self._push(agent_id, RequestSwappedIn(agent_id, self._t(t), rid,
+                                              replica=replica))
 
-    def on_token(self, agent_id: int, rid: int, token: int, t: float) -> None:
-        self._push(agent_id, TokenGenerated(agent_id, self._t(t), rid, token))
+    def on_token(
+        self, agent_id: int, rid: int, token: int, t: float, *,
+        replica: Optional[int] = None,
+    ) -> None:
+        self._push(agent_id, TokenGenerated(agent_id, self._t(t), rid, token,
+                                            replica=replica))
 
-    def on_stage_complete(self, agent_id: int, stage: int, t: float) -> None:
-        self._push(agent_id, StageCompleted(agent_id, self._t(t), stage))
+    def on_stage_complete(
+        self, agent_id: int, stage: int, t: float, *,
+        replica: Optional[int] = None,
+    ) -> None:
+        self._push(agent_id, StageCompleted(agent_id, self._t(t), stage,
+                                            replica=replica))
 
-    def on_agent_complete(self, agent_id: int, t: float) -> None:
+    def on_agent_complete(
+        self, agent_id: int, t: float, *, replica: Optional[int] = None
+    ) -> None:
         tw = self._t(t)
         handle = self.svc.handles.get(agent_id)
         arrival = handle.arrival if handle is not None else 0.0
-        self._push(agent_id, AgentCompleted(agent_id, tw, tw - arrival))
+        self._push(agent_id, AgentCompleted(agent_id, tw, tw - arrival,
+                                            replica=replica))
 
 
 class AgentService:
@@ -183,23 +237,76 @@ class AgentService:
 
     @classmethod
     def sim(
-        cls, scheduler: str = "justitia", *, record_events: bool = True, **kw
+        cls, scheduler: str = "justitia", *, record_events: bool = True,
+        replicas: int = 1, router: str = "round_robin", seed: int = 0, **kw
     ) -> "AgentService":
-        """Service over the discrete-event simulator (paper-scale runs)."""
+        """Service over the discrete-event simulator (paper-scale runs).
+
+        ``replicas > 1`` builds a fleet of identical ``SimBackend`` children
+        behind a :class:`ReplicatedBackend`, sharding agents via ``router``
+        (each replica gets its own scheduler instance and the full ``**kw``
+        pool — pass per-replica capacity, not fleet capacity).
+        """
         from repro.api.backend import SimBackend
 
-        return cls(SimBackend(scheduler, **kw), record_events=record_events)
+        def make():
+            return SimBackend(scheduler, **kw)
+
+        return cls._maybe_replicated(
+            make, replicas, router, seed, record_events
+        )
 
     @classmethod
     def engine(
         cls, model, params, scheduler: str = "justitia", *,
-        record_events: bool = True, **kw
+        record_events: bool = True, replicas: int = 1,
+        router: str = "round_robin", seed: int = 0, **kw
     ) -> "AgentService":
-        """Service over the real JAX continuous-batching engine."""
+        """Service over the real JAX continuous-batching engine.
+
+        ``replicas > 1`` builds N engines (sharing ``model``/``params`` but
+        each with its own KV pool, batch slots, and scheduler) behind a
+        :class:`ReplicatedBackend`; replica k synthesizes prompts from
+        ``seed + k`` so fleets are deterministic but decorrelated.
+        """
         from repro.api.backend import EngineBackend
 
+        counter = iter(range(replicas if replicas > 1 else 1))
+
+        def make():
+            return EngineBackend(
+                model, params, scheduler, seed=seed + next(counter), **kw
+            )
+
+        return cls._maybe_replicated(
+            make, replicas, router, seed, record_events
+        )
+
+    @classmethod
+    def replicated(
+        cls, children, *, router: str = "round_robin", seed: int = 0,
+        record_events: bool = True,
+    ) -> "AgentService":
+        """Service over an explicit fleet (any mix of backend types)."""
+        from repro.api.replicated import ReplicatedBackend
+
         return cls(
-            EngineBackend(model, params, scheduler, **kw),
+            ReplicatedBackend(children, router=router, seed=seed),
+            record_events=record_events,
+        )
+
+    @classmethod
+    def _maybe_replicated(
+        cls, make_child, replicas: int, router: str, seed: int,
+        record_events: bool,
+    ) -> "AgentService":
+        if replicas <= 1:
+            return cls(make_child(), record_events=record_events)
+        from repro.api.replicated import ReplicatedBackend
+
+        children = [make_child() for _ in range(replicas)]
+        return cls(
+            ReplicatedBackend(children, router=router, seed=seed),
             record_events=record_events,
         )
 
@@ -269,4 +376,5 @@ class AgentService:
             backend=self.backend.name,
             metrics=res.metrics,
             event_counts=dict(self.recorder.event_counts),
+            per_replica=self.recorder.per_replica_jct_stats(),
         )

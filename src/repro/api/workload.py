@@ -73,18 +73,26 @@ def service_for_backend(
     sim_kv_factor: float = 4.0,
     decode_rate: float = 30.0,
     seed: int = 0,
+    replicas: int = 1,
+    router: str = "round_robin",
 ) -> AgentService:
     """Build an AgentService for ``backend`` in {"sim", "engine"}.
 
     The sim pool is ``pool_tokens * sim_kv_factor`` KV units: the simulator
     serves full-scale token demands while the engine serves them divided by
     ``token_scale``, so its pool is proportionally wider.
+
+    ``replicas > 1`` shards the fleet behind a
+    :class:`repro.api.ReplicatedBackend` using ``router`` (a name from
+    ``repro.api.router_names()``); ``pool_tokens`` stays *per replica*, so
+    raising ``replicas`` adds capacity rather than splitting it.
     """
     if backend == "sim":
         return AgentService.sim(
             scheduler,
             total_kv=float(pool_tokens) * sim_kv_factor,
             decode_rate=decode_rate,
+            replicas=replicas, router=router, seed=seed,
         )
     if backend != "engine":
         raise ValueError(f"unknown backend {backend!r} (sim|engine)")
@@ -100,4 +108,5 @@ def service_for_backend(
         model, params, scheduler,
         pool_tokens=pool_tokens, max_batch=max_batch, cache_len=cache_len,
         token_scale=token_scale, time_scale=1.0,
+        replicas=replicas, router=router, seed=seed,
     )

@@ -34,7 +34,11 @@ from repro.core.schedulers import (
     VtcScheduler,
     make_scheduler,
 )
-from repro.core.virtual_time import VirtualClock
+from repro.core.virtual_time import (
+    GlobalClockSnapshot,
+    GlobalVirtualClock,
+    VirtualClock,
+)
 
 
 def __getattr__(attr: str):
@@ -74,5 +78,7 @@ __all__ = [
     "resolve_scheduler",
     "scheduler_names",
     "unregister_scheduler",
+    "GlobalClockSnapshot",
+    "GlobalVirtualClock",
     "VirtualClock",
 ]

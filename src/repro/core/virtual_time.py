@@ -21,7 +21,9 @@ min-heap of pending virtual finish times as V sweeps past them.
 
 from __future__ import annotations
 
+import dataclasses
 import heapq
+from typing import Sequence
 
 
 class VirtualClock:
@@ -105,3 +107,136 @@ class VirtualClock:
                     retired.append(heapq.heappop(heap)[1])
                     active -= 1
         return v, retired
+
+
+@dataclasses.dataclass(frozen=True)
+class GlobalClockSnapshot:
+    """Fleet-level view after reconciling the per-replica clocks to ``time``.
+
+    ``virtual_times[k]`` is V_k(time); the global virtual time is the minimum
+    over replicas (the conservative fleet reference: an agent admitted
+    anywhere gets F >= min_k V_k, so no replica's backlog can starve it) and
+    ``lag`` is the spread max_k V_k - min_k V_k — the price of sharding a
+    single fair queue across replicas.  A perfectly balanced router keeps the
+    lag near zero; the fleet-wide delay guarantee degrades by at most the lag
+    on top of each replica's single-backend bound.
+    """
+
+    time: float
+    virtual_times: tuple[float, ...]
+    global_virtual_time: float
+    lag: float
+
+
+class GlobalVirtualClock:
+    """Reconciles K per-replica GPS clocks into one global virtual time.
+
+    Each replica k runs its own :class:`VirtualClock` over its own service
+    capacity M_k (all capacities must be expressed in the same cost-units-
+    per-time so the V_k are comparable).  Naive per-replica fair queuing
+    breaks *global* fairness exactly when the per-replica clocks drift apart
+    (cf. locality-aware fair scheduling): an agent routed to a hot replica
+    is charged a later virtual finish than an identical agent routed to a
+    cold one.  This class makes the drift observable and bounded:
+
+      * ``register`` buffers arrivals (out-of-submission-order tolerated —
+        online submission order need not match arrival-time order);
+      * ``reconcile(until)`` replays buffered arrivals in arrival-time order
+        into their replica's clock, advances every clock to ``until``, and
+        returns a :class:`GlobalClockSnapshot` with the global virtual time
+        (min over replicas) and the lag bound (max - min);
+      * ``pampering_order`` is the fleet-wide selective-pampering order:
+        ascending reconciled virtual finish times across all replicas, which
+        equals the single-queue Justitia order whenever the lag is zero.
+
+    The per-replica F_j keep the one-shot property (computed once at
+    arrival, never reordered by later arrivals), so reconciliation never
+    invalidates a replica's local schedule — it only orders replicas'
+    queues against each other.
+    """
+
+    def __init__(self, capacities: Sequence[float]):
+        caps = [float(m) for m in capacities]
+        if not caps:
+            raise ValueError("need at least one replica capacity")
+        self.capacities = caps
+        self.clocks = [VirtualClock(m) for m in caps]
+        # (arrival t, submit seq, replica, agent_id, cost) min-heap
+        self._pending: list[tuple[float, int, int, int, float]] = []
+        self._seq = 0
+        self._horizon = 0.0            # arrivals <= horizon are replayed
+        self.virtual_finish: dict[int, float] = {}
+        self.replica_of: dict[int, int] = {}
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.clocks)
+
+    def register(
+        self, replica: int, agent_id: int, t: float, cost: float
+    ) -> None:
+        """Buffer one arrival for ``reconcile`` to replay (order-free)."""
+        if not 0 <= replica < len(self.clocks):
+            raise ValueError(f"replica {replica} out of range")
+        if t < self._horizon - 1e-9:
+            raise ValueError(
+                f"arrival at {t} predates reconciled horizon {self._horizon}"
+            )
+        heapq.heappush(
+            self._pending, (float(t), self._seq, replica, agent_id, float(cost))
+        )
+        self._seq += 1
+
+    def reconcile(self, until: float) -> GlobalClockSnapshot:
+        """Replay arrivals up to ``until`` and advance all replica clocks."""
+        until = float(until)
+        while self._pending and self._pending[0][0] <= until:
+            t, _, replica, agent_id, cost = heapq.heappop(self._pending)
+            f = self.clocks[replica].on_arrival(agent_id, t, cost)
+            self.virtual_finish[agent_id] = f
+            self.replica_of[agent_id] = replica
+        for clock in self.clocks:
+            clock.advance(until)
+        self._horizon = max(self._horizon, until)
+        v = tuple(clock.now(until) for clock in self.clocks)
+        return GlobalClockSnapshot(
+            time=until,
+            virtual_times=v,
+            global_virtual_time=min(v),
+            lag=max(v) - min(v),
+        )
+
+    # NB: reading the global time / lag goes through reconcile(t) — it is
+    # deliberately the only accessor, because sweeping the clocks to t
+    # advances the registration horizon (a "getter" here would mutate)
+
+    def pampering_order(self) -> list[int]:
+        """Fleet-wide Justitia order: ascending reconciled virtual finish."""
+        return sorted(
+            self.virtual_finish,
+            key=lambda aid: (self.virtual_finish[aid], aid),
+        )
+
+    def delay_bound(
+        self, c_max: float, c_agent_max: float, service_rate: float = 1.0
+    ) -> float:
+        """Fleet-wide Theorem B.1 bound: worst per-replica bound, in this
+        clock's TIME units.
+
+        Per replica the theorem gives ``2*c_max + C_max/M_k`` iterations
+        with ``M_k`` in KV-token units.  This clock stores capacities as
+        ``M_k * service_rate`` (cost-units per time unit), so pass the
+        backend's ``service_rate`` (iterations per time unit — e.g. the
+        sim's ``decode_rate`` when the clock runs in workload seconds) to
+        recover the pool sizes; the default 1.0 covers clocks built
+        directly over pool-token capacities in iteration time.  Every
+        agent's real finish trails its *own replica's* GPS reference by at
+        most this, so the worst replica bounds the whole fleet.
+        Heterogeneous fleets with differing per-child service rates need
+        per-replica conversion — compute the bound per child instead.
+        """
+        r = float(service_rate)
+        return max(
+            (2.0 * float(c_max) + float(c_agent_max) * r / cap) / r
+            for cap in self.capacities
+        )

@@ -98,20 +98,29 @@ class Computation:
 def _dot_flops(rest: str, symtab: dict) -> float:
     """rest: everything after '= ' for a dot op line.
 
-    Scheduled HLO does not print operand shapes inline; the lhs shape is
-    resolved through ``symtab`` (op name -> result type string).
+    Depending on the XLA version, operand shapes are printed inline
+    (``dot(f32[128,128]{1,0} %lhs, ...)``) or not (``dot(%lhs, ...)``);
+    prefer the inline lhs shape and fall back to resolving the operand
+    name through ``symtab`` (op name -> result type string).
     """
     shapes = _shape_list(rest.split(" dot(")[0])
     if not shapes:
         return 0.0
     result = shapes[0]
-    marg = re.search(r"dot\((%[\w\.\-]+)", rest)
     lhs_dims: list[int] = []
-    if marg:
-        lhs_type = symtab.get(marg.group(1).lstrip("%"), "")
-        lhs_shapes = _shape_list(lhs_type)
-        if lhs_shapes:
-            lhs_dims = lhs_shapes[0][1]
+    inner = re.search(r"dot\((.*)\)", rest)
+    if inner:
+        m_inline = re.match(r"\s*([a-z][a-z0-9]*)\[([0-9,]*)\]",
+                            inner.group(1))
+        if m_inline and m_inline.group(1) in _DTYPE_BYTES:
+            lhs_dims = [int(d) for d in m_inline.group(2).split(",") if d]
+    if not lhs_dims:
+        marg = re.search(r"dot\((%[\w\.\-]+)", rest)
+        if marg:
+            lhs_type = symtab.get(marg.group(1).lstrip("%"), "")
+            lhs_shapes = _shape_list(lhs_type)
+            if lhs_shapes:
+                lhs_dims = lhs_shapes[0][1]
     m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rest)
     contract = 1
     if m and m.group(1) and lhs_dims:

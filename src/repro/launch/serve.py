@@ -1,7 +1,8 @@
 """Serving launcher: the unified ``AgentService`` API over either backend.
 
     PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-1.8b \
-        [--backend engine|sim] [--scheduler justitia] [--n-agents 6]
+        [--backend engine|sim] [--scheduler justitia] [--n-agents 6] \
+        [--replicas 3] [--router memory_cost_aware]
 
 One workload spec (the paper's agent-class sampler + bursty arrivals) is
 driven through :class:`repro.api.AgentService`; ``--backend engine`` serves
@@ -12,6 +13,11 @@ policy objects, one flag apart.  Scheduler names resolve through the plugin
 registry (``repro.core.registry``), so ``--scheduler`` accepts any
 registered policy.  Agents arrive *online* at their sampled arrival times,
 not upfront.
+
+``--replicas N`` serves the same workload on an N-way
+:class:`repro.api.ReplicatedBackend` fleet (per-replica pools, lockstep
+clocks, reconciled global virtual time); ``--router`` picks the placement
+policy from the router registry (``repro.api.router_names()``).
 
 CPU runs the reduced model variant end-to-end; the full configs are
 validated against the production mesh by the dry-run (repro.launch.dryrun),
@@ -26,7 +32,7 @@ import time
 
 import numpy as np
 
-from repro.api import service_for_backend, specs_from_classes
+from repro.api import router_names, service_for_backend, specs_from_classes
 from repro.configs import ALL_ARCHS
 from repro.core import scheduler_names
 
@@ -42,6 +48,11 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--window-s", type=float, default=20.0,
                     help="arrival window (workload seconds)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve on an N-way replicated fleet")
+    ap.add_argument("--router", default="round_robin",
+                    choices=router_names(),
+                    help="fleet placement policy (with --replicas > 1)")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
@@ -50,6 +61,7 @@ def main() -> None:
         args.backend, args.scheduler,
         arch=args.arch, pool_tokens=args.pool_tokens,
         max_batch=args.max_batch,
+        replicas=args.replicas, router=args.router,
     )
 
     t0 = time.time()
@@ -62,6 +74,9 @@ def main() -> None:
           {k: round(v, 1) for k, v in sorted(result.finish.items())})
     print("events:", result.event_counts)
     print("metrics:", result.metrics)
+    if result.per_replica:
+        for r, stats in result.per_replica.items():
+            print(f"replica {r}: {stats.row()}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,330 @@
+"""Minimal in-repo stand-in for ``hypothesis`` (see tests/conftest.py).
+
+The container this repo targets does not ship ``hypothesis`` and nothing
+may be pip-installed, but the property tests are the teeth of the fairness
+reproduction — skipping them silently (the previous stub's behaviour) left
+Theorem B.1 and the virtual-clock invariants unchecked.  This module
+implements the small strategy surface those tests use (``integers``,
+``floats``, ``lists``, ``tuples``, ``sampled_from`` + ``map``/``filter``)
+with *seeded* random example generation, so every ``@given`` property runs
+its assertions for real, deterministically across pytest runs.
+
+Not a hypothesis replacement: no shrinking, no database, no coverage-guided
+generation.  Each test's RNG is seeded from its qualified name (override
+with ``MINIHYP_SEED``), boundary values are mixed into numeric draws (min,
+max, zero) since those are where order/monotonicity properties break, and a
+failing example is reported with seed + args so it can be replayed.
+
+When the real ``hypothesis`` is installed, conftest leaves it alone and
+this module is unused.
+"""
+
+from __future__ import annotations
+
+import os
+import types
+import zlib
+from random import Random
+
+__all__ = [
+    "given", "settings", "assume", "note", "HealthCheck", "strategies",
+]
+
+#: examples per property when the test does not say (hypothesis defaults to
+#: 100; kept lower to hold tier-1 runtime — override via MINIHYP_MAX_EXAMPLES)
+DEFAULT_MAX_EXAMPLES = int(os.environ.get("MINIHYP_MAX_EXAMPLES", "50"))
+
+
+class Unsatisfied(Exception):
+    """Raised by ``assume(False)``: discard the example, draw another."""
+
+
+class Strategy:
+    """Base strategy: draws one value per ``example(rng)`` call."""
+
+    def example(self, rng: Random):
+        raise NotImplementedError
+
+    def map(self, fn):
+        return _Mapped(self, fn)
+
+    def filter(self, pred):
+        return _Filtered(self, pred)
+
+    def flatmap(self, fn):
+        return _FlatMapped(self, fn)
+
+
+class _Mapped(Strategy):
+    def __init__(self, base, fn):
+        self.base, self.fn = base, fn
+
+    def example(self, rng):
+        return self.fn(self.base.example(rng))
+
+
+class _Filtered(Strategy):
+    def __init__(self, base, pred):
+        self.base, self.pred = base, pred
+
+    def example(self, rng):
+        for _ in range(100):
+            v = self.base.example(rng)
+            if self.pred(v):
+                return v
+        raise Unsatisfied(f"filter rejected 100 draws from {self.base!r}")
+
+
+class _FlatMapped(Strategy):
+    def __init__(self, base, fn):
+        self.base, self.fn = base, fn
+
+    def example(self, rng):
+        return self.fn(self.base.example(rng)).example(rng)
+
+
+class _Integers(Strategy):
+    def __init__(self, min_value=None, max_value=None):
+        self.lo = -(2**31) if min_value is None else int(min_value)
+        self.hi = 2**31 if max_value is None else int(max_value)
+
+    def example(self, rng):
+        # boundary draws: integer order/monotonicity properties break at the
+        # edges far more often than in the middle of the range
+        r = rng.random()
+        if r < 0.08:
+            return self.lo
+        if r < 0.16:
+            return self.hi
+        if r < 0.24 and self.lo <= 0 <= self.hi:
+            return 0
+        return rng.randint(self.lo, self.hi)
+
+
+class _Floats(Strategy):
+    def __init__(
+        self, min_value=None, max_value=None, allow_nan=False,
+        allow_infinity=False, width=64,
+    ):
+        self.lo = -1e9 if min_value is None else float(min_value)
+        self.hi = 1e9 if max_value is None else float(max_value)
+
+    def example(self, rng):
+        r = rng.random()
+        if r < 0.06:
+            return self.lo
+        if r < 0.12:
+            return self.hi
+        if r < 0.18 and self.lo <= 0.0 <= self.hi:
+            return 0.0
+        if r < 0.26:
+            # log-uniform draw: exercises values many orders apart
+            span = self.hi - self.lo
+            if span > 0:
+                return self.lo + span * (10.0 ** rng.uniform(-9, 0))
+        return rng.uniform(self.lo, self.hi)
+
+
+class _Lists(Strategy):
+    def __init__(self, elements, min_size=0, max_size=None, unique=False):
+        self.elements = elements
+        self.min_size = int(min_size)
+        self.max_size = (
+            self.min_size + 10 if max_size is None else int(max_size)
+        )
+        self.unique = unique
+
+    def example(self, rng):
+        n = rng.randint(self.min_size, self.max_size)
+        out = [self.elements.example(rng) for _ in range(n)]
+        if self.unique:
+            seen, uniq = set(), []
+            for v in out:
+                if v not in seen:
+                    seen.add(v)
+                    uniq.append(v)
+            out = uniq
+            if len(out) < self.min_size:
+                raise Unsatisfied("unique list under min_size")
+        return out
+
+
+class _Tuples(Strategy):
+    def __init__(self, *elements):
+        self.elements = elements
+
+    def example(self, rng):
+        return tuple(e.example(rng) for e in self.elements)
+
+
+class _SampledFrom(Strategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+        if not self.elements:
+            raise ValueError("sampled_from needs a non-empty collection")
+
+    def example(self, rng):
+        return rng.choice(self.elements)
+
+
+class _Just(Strategy):
+    def __init__(self, value):
+        self.value = value
+
+    def example(self, rng):
+        return self.value
+
+
+class _OneOf(Strategy):
+    def __init__(self, *strategies):
+        self.strategies = strategies
+
+    def example(self, rng):
+        return rng.choice(self.strategies).example(rng)
+
+
+def integers(min_value=None, max_value=None):
+    return _Integers(min_value, max_value)
+
+
+def floats(min_value=None, max_value=None, **kw):
+    return _Floats(min_value, max_value, **kw)
+
+
+def lists(elements, *, min_size=0, max_size=None, unique=False):
+    return _Lists(elements, min_size, max_size, unique)
+
+
+def tuples(*elements):
+    return _Tuples(*elements)
+
+
+def sampled_from(elements):
+    return _SampledFrom(elements)
+
+
+def booleans():
+    return _SampledFrom([False, True])
+
+
+def just(value):
+    return _Just(value)
+
+
+def one_of(*strategies):
+    return _OneOf(*strategies)
+
+
+def _unsupported(name):
+    raise NotImplementedError(
+        f"minihyp does not implement strategy {name!r} — extend "
+        "tests/_minihyp.py or install the real hypothesis"
+    )
+
+
+# hypothesis.strategies facade (conftest installs this as the submodule)
+strategies = types.ModuleType("hypothesis.strategies")
+for _name in (
+    "integers", "floats", "lists", "tuples", "sampled_from", "booleans",
+    "just", "one_of",
+):
+    setattr(strategies, _name, globals()[_name])
+strategies.__getattr__ = lambda name: _unsupported(name)
+
+
+# ------------------------------------------------------------- decorators
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise Unsatisfied()
+    return True
+
+
+def note(message) -> None:  # parity no-op: we report args on failure instead
+    pass
+
+
+HealthCheck = types.SimpleNamespace(
+    too_slow=None, data_too_large=None, filter_too_much=None,
+    function_scoped_fixture=None,
+)
+
+
+def settings(*args, **kwargs):
+    """Record ``max_examples`` etc. for ``given`` (composes in any order)."""
+
+    def deco(fn):
+        merged = {**getattr(fn, "_minihyp_settings", {}), **kwargs}
+        fn._minihyp_settings = merged
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Run the property over seeded random examples (no shrinking).
+
+    The wrapper takes no parameters on purpose: pytest must not mistake the
+    strategy parameters for fixtures.
+    """
+
+    def deco(fn):
+        def wrapper():
+            # settings() may be applied below given (attr lands on fn) or
+            # above it (attr lands on wrapper) — honour either
+            cfg = (
+                getattr(wrapper, "_minihyp_settings", None)
+                or getattr(fn, "_minihyp_settings", None)
+                or {}
+            )
+            max_examples = int(cfg.get("max_examples", DEFAULT_MAX_EXAMPLES))
+            seed_env = os.environ.get("MINIHYP_SEED")
+            seed = (
+                int(seed_env)
+                if seed_env is not None
+                else zlib.crc32(fn.__qualname__.encode())
+            )
+            rng = Random(seed)
+            ran = 0
+            attempts = 0
+            while ran < max_examples and attempts < max_examples * 5:
+                attempts += 1
+                try:
+                    args = [s.example(rng) for s in arg_strategies]
+                    kwargs = {
+                        k: s.example(rng) for k, s in kw_strategies.items()
+                    }
+                except Unsatisfied:
+                    continue
+                try:
+                    fn(*args, **kwargs)
+                except Unsatisfied:
+                    continue
+                except Exception as e:
+                    detail = (
+                        f"\nFalsifying example (minihyp seed={seed}, "
+                        f"example #{ran}): args={args!r} kwargs={kwargs!r}"
+                    )
+                    e.args = (
+                        (str(e.args[0]) + detail,) + e.args[1:]
+                        if e.args
+                        else (detail,)
+                    )
+                    raise
+                ran += 1
+            if ran == 0:
+                raise Unsatisfied(
+                    f"{fn.__qualname__}: no example satisfied assume()/"
+                    f"filter() in {attempts} attempts"
+                )
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        # NB: no __wrapped__ — pytest unwraps it and would then mistake the
+        # property's strategy parameters for fixtures
+        return wrapper
+
+    return deco

@@ -1,76 +1,38 @@
 """Test-suite bootstrap.
 
 The container this repo runs in does not ship ``hypothesis`` (and nothing
-may be pip-installed).  Without it, five test modules fail at *collection*,
-which under ``pytest -x`` aborts the whole tier-1 run.  This conftest
-installs a minimal stand-in when the real package is missing: strategy
-constructors return inert placeholders and ``@given`` replaces the test
-body with an explicit skip, so property tests are reported as skipped while
-every example-based test in the same modules still runs.  When hypothesis
-IS available, this file does nothing.
+may be pip-installed).  When the real package is missing, this conftest
+installs ``tests/_minihyp.py`` in its place: a minimal, seeded property-test
+runner implementing the strategy surface this suite uses (``integers``,
+``floats``, ``lists``, ``tuples``, ``sampled_from``), so ``@given``
+properties execute their assertions for real — deterministically across
+pytest runs — instead of being skipped as they were with the old inert
+stub.  When hypothesis IS available, this file leaves it alone.
+
+Also provides the ``fixed_seed`` fixture used by the multi-replica
+equivalence tests to keep routing/workload sampling identical across runs.
 """
 
 from __future__ import annotations
 
+import importlib.util
+import pathlib
 import sys
-import types
+
+import pytest
 
 try:  # pragma: no cover - exercised only where hypothesis exists
     import hypothesis  # noqa: F401
 except ImportError:
-    import pytest
+    _path = pathlib.Path(__file__).with_name("_minihyp.py")
+    _spec = importlib.util.spec_from_file_location("_minihyp", _path)
+    _minihyp = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_minihyp)
+    sys.modules["hypothesis"] = _minihyp
+    sys.modules["hypothesis.strategies"] = _minihyp.strategies
 
-    class _Strategy:
-        """Inert placeholder: composes like a strategy, generates nothing."""
 
-        def __init__(self, *args, **kwargs):
-            pass
-
-        def __call__(self, *args, **kwargs):
-            return self
-
-        def map(self, fn):
-            return self
-
-        def filter(self, fn):
-            return self
-
-        def flatmap(self, fn):
-            return self
-
-    def _make_strategy(*args, **kwargs):
-        return _Strategy()
-
-    strategies = types.ModuleType("hypothesis.strategies")
-    strategies.__getattr__ = lambda name: _make_strategy
-
-    def given(*args, **kwargs):
-        def deco(fn):
-            # zero-arg on purpose: pytest must not mistake the property
-            # test's strategy parameters for fixtures
-            def skipper():
-                pytest.skip("hypothesis not installed (stubbed by conftest)")
-
-            skipper.__name__ = fn.__name__
-            skipper.__doc__ = fn.__doc__
-            return skipper
-
-        return deco
-
-    def settings(*args, **kwargs):
-        def deco(fn):
-            return fn
-
-        return deco
-
-    hyp = types.ModuleType("hypothesis")
-    hyp.given = given
-    hyp.settings = settings
-    hyp.assume = lambda *a, **k: True
-    hyp.note = lambda *a, **k: None
-    hyp.strategies = strategies
-    hyp.HealthCheck = types.SimpleNamespace(
-        too_slow=None, data_too_large=None, filter_too_much=None
-    )
-    sys.modules["hypothesis"] = hyp
-    sys.modules["hypothesis.strategies"] = strategies
+@pytest.fixture
+def fixed_seed() -> int:
+    """One seed for routing/workload RNGs: deterministic across pytest runs."""
+    return 20260730

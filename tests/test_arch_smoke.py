@@ -14,6 +14,9 @@ from repro.configs import ALL_ARCHS, get_config
 from repro.models import Model
 from repro.training import AdamWConfig, init_adamw, make_train_step
 
+# full-zoo forward/train sweeps dominate tier-1 runtime; run via `pytest -m slow`
+pytestmark = pytest.mark.slow
+
 B, S = 2, 16
 
 

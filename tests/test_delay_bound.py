@@ -17,7 +17,9 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+from repro.api import AgentService, AgentSpec
 from repro.core import (
+    GlobalVirtualClock,
     GpsAgent,
     InferenceSpec,
     agent_cost,
@@ -94,6 +96,134 @@ def test_constant_delay_bound(raw, m):
             f"{bound_iters:.1f} (c_max={c_max:.0f}, C_max={c_agent_max:.0f}, "
             f"M={m})"
         )
+
+
+# ------------------------------------------------- multi-replica fleets
+
+
+@given(
+    agent_strategy,
+    st.sampled_from([2, 3]),
+    st.sampled_from([1500.0, 3000.0]),
+)
+@settings(max_examples=15, deadline=None)
+def test_multi_replica_delay_bound_with_reconciled_clock(raw, k, m):
+    """Theorem B.1, fleet-wide: with K replicas behind ``ReplicatedBackend``
+    and the per-replica GPS clocks reconciled by ``GlobalVirtualClock``,
+    every agent still finishes within the single-backend worst-case delay
+    bound of ITS replica's GPS reference — sharding the fair queue does not
+    void the guarantee, it applies per shard with the reconciled lag
+    making the drift observable."""
+    specs = []
+    for arr, infs in sorted(raw):
+        stage = [InferenceSpec(p, d) for p, d in infs]
+        cost = agent_cost(stage)
+        specs.append(
+            AgentSpec(stages=[stage], arrival=float(arr),
+                      predicted_cost=cost, true_cost=cost)
+        )
+    service = AgentService.sim(
+        "justitia",
+        replicas=k,
+        router="round_robin",
+        total_kv=m,
+        decode_rate=DECODE_RATE,
+        prefill_rate=1e12,   # theorem's model: instantaneous prefill
+        swap_penalty=0.0,
+    )
+    handles = service.submit_many(specs)
+    res = service.drain()
+    assert len(res.finish) == len(specs)
+
+    assignment = service.backend.assignment
+    c_max = max(
+        inference_cost(s) for spec in specs for st_ in spec.stages
+        for s in st_
+    )
+    c_agent_max = max(spec.true_cost for spec in specs)
+
+    # reconciled clock in the theorem's units (iterations, service_rate=1)
+    gclock = GlobalVirtualClock([m] * k)
+    for h in handles:
+        gclock.register(
+            assignment[h.agent_id], h.agent_id,
+            h.arrival * DECODE_RATE, h.spec.true_cost,
+        )
+    makespan_iters = max(res.finish.values()) * DECODE_RATE
+    snap = gclock.reconcile(makespan_iters)
+    assert snap.lag >= 0.0
+    assert snap.global_virtual_time == min(snap.virtual_times)
+
+    bound_iters = gclock.delay_bound(c_max, c_agent_max)
+    assert bound_iters == pytest.approx(2.0 * c_max + c_agent_max / m)
+
+    # per-replica GPS fluid reference over each replica's own arrivals
+    for replica in range(k):
+        mine = [h for h in handles if assignment[h.agent_id] == replica]
+        if not mine:
+            continue
+        gps = gps_finish_times(
+            [
+                GpsAgent(h.agent_id, h.arrival * DECODE_RATE,
+                         h.spec.true_cost)
+                for h in mine
+            ],
+            m,
+        )
+        for h in mine:
+            f_real_iters = res.finish[h.agent_id] * DECODE_RATE
+            delay = f_real_iters - gps[h.agent_id]
+            assert delay <= bound_iters * 1.05 + 1.0, (
+                f"agent {h.agent_id} on replica {replica}: delay "
+                f"{delay:.1f} iters exceeds fleet bound {bound_iters:.1f} "
+                f"(lag={snap.lag:.1f})"
+            )
+
+    # events carried the replica that the router recorded
+    for h in handles:
+        assert h.replica == assignment[h.agent_id]
+
+
+@given(
+    st.integers(min_value=6, max_value=18),
+    st.integers(min_value=32, max_value=128),
+    st.integers(min_value=16, max_value=64),
+    st.sampled_from([2, 3]),
+)
+@settings(max_examples=10, deadline=None)
+def test_fleet_completion_order_matches_single_replica_oracle(n, p, d, k):
+    """Identical agents + round_robin: the K-replica fleet completes agents
+    in the same order as the 1-replica Justitia oracle (arrival order —
+    equal costs give strictly increasing virtual finish times, and the
+    reconciled pampering order agrees)."""
+    m = 2000.0
+
+    def make_specs():
+        cost = agent_cost([InferenceSpec(p, d)])
+        return [
+            AgentSpec(stages=[[InferenceSpec(p, d)]], arrival=i * 1.0,
+                      predicted_cost=cost, true_cost=cost)
+            for i in range(n)
+        ]
+
+    def order(finish):
+        return [aid for aid, _ in
+                sorted(finish.items(), key=lambda kv: (kv[1], kv[0]))]
+
+    def run(replicas):
+        service = AgentService.sim(
+            "justitia", replicas=replicas, router="round_robin",
+            total_kv=m, decode_rate=DECODE_RATE,
+            prefill_rate=1e12, swap_penalty=0.0,
+        )
+        service.submit_many(make_specs())
+        return service, service.drain()
+
+    _, oracle = run(1)
+    fleet_svc, fleet = run(k)
+    assert order(fleet.finish) == order(oracle.finish)
+    # the reconciled fleet-wide pampering order agrees with the oracle too
+    assert fleet_svc.backend.pampering_order() == order(oracle.finish)
 
 
 def test_starvation_bounded_under_justitia():

@@ -13,6 +13,10 @@ from repro.kernels import (
     paged_gqa_decode,
 )
 
+# Pallas sweeps dominate tier-1 runtime (and need accelerator lowering);
+# the slow tier runs them: `pytest -m slow` / scripts/ci.sh stage 3
+pytestmark = pytest.mark.slow
+
 TOL = {jnp.float32: dict(atol=2e-5, rtol=2e-5),
        jnp.bfloat16: dict(atol=3e-2, rtol=3e-2)}
 

@@ -17,6 +17,9 @@ from repro.configs import ALL_ARCHS, get_config
 from repro.models import Model
 from repro.models import ssm as ssm_mod
 
+# full-zoo consistency sweeps dominate tier-1 runtime; run via `pytest -m slow`
+pytestmark = pytest.mark.slow
+
 B, S, EXTRA = 2, 12, 3
 
 

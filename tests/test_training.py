@@ -23,6 +23,9 @@ from repro.training import (
     save_checkpoint,
 )
 
+# real train-step/learning checks dominate tier-1 runtime; run via `pytest -m slow`
+pytestmark = pytest.mark.slow
+
 
 def test_lr_schedule_shape():
     cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)

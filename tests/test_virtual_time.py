@@ -11,7 +11,12 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core import GpsAgent, VirtualClock, gps_finish_times
+from repro.core import (
+    GlobalVirtualClock,
+    GpsAgent,
+    VirtualClock,
+    gps_finish_times,
+)
 
 arrival_cost_lists = st.lists(
     st.tuples(
@@ -82,6 +87,111 @@ def test_gps_finish_after_arrival_plus_solo_time(items, m):
     )
     for i, (a, c) in enumerate(items):
         assert gps[i] >= a + c / m - 1e-6
+
+
+# ------------------------------------------- global (fleet) virtual time
+
+
+@given(arrival_cost_lists, st.floats(min_value=1.0, max_value=1e4))
+@settings(max_examples=40)
+def test_single_replica_global_clock_matches_local(items, m):
+    """K=1: the reconciled global clock IS the per-backend clock."""
+    items = sorted(items)
+    local = VirtualClock(m)
+    gclock = GlobalVirtualClock([m])
+    f_local = {}
+    for i, (a, c) in enumerate(items):
+        f_local[i] = local.on_arrival(i, a, c)
+        gclock.register(0, i, a, c)
+    t_end = items[-1][0] + 100.0
+    snap = gclock.reconcile(t_end)
+    assert snap.lag == 0.0
+    assert snap.global_virtual_time == pytest.approx(local.now(t_end))
+    for i, f in f_local.items():
+        assert gclock.virtual_finish[i] == pytest.approx(f)
+        assert gclock.replica_of[i] == 0
+
+
+@given(arrival_cost_lists, st.floats(min_value=1.0, max_value=1e4),
+       st.sampled_from([2, 3, 4]))
+@settings(max_examples=40)
+def test_global_clock_order_free_registration(items, m, k):
+    """Registration order must not matter: submissions interleave with runs
+    online, so arrivals reach the fleet clock out of time order."""
+    items = sorted(items)
+    in_order = GlobalVirtualClock([m] * k)
+    shuffled = GlobalVirtualClock([m] * k)
+    for i, (a, c) in enumerate(items):
+        in_order.register(i % k, i, a, c)
+    for i, (a, c) in reversed(list(enumerate(items))):
+        shuffled.register(i % k, i, a, c)
+    t_end = items[-1][0] + 10.0
+    s1, s2 = in_order.reconcile(t_end), shuffled.reconcile(t_end)
+    assert s1.virtual_times == s2.virtual_times
+    assert in_order.virtual_finish == shuffled.virtual_finish
+    assert in_order.pampering_order() == shuffled.pampering_order()
+
+
+@given(arrival_cost_lists, st.floats(min_value=1.0, max_value=1e4),
+       st.sampled_from([2, 3]))
+@settings(max_examples=40)
+def test_global_virtual_time_monotone_and_bounded_by_lag(items, m, k):
+    """min_k V_k is non-decreasing and every replica sits within the lag."""
+    items = sorted(items)
+    gclock = GlobalVirtualClock([m] * k)
+    for i, (a, c) in enumerate(items):
+        gclock.register(i % k, i, a, c)
+    prev_global = 0.0
+    t_max = items[-1][0]
+    for t in [t_max * f for f in (0.25, 0.5, 0.75, 1.0)] + [t_max + 50.0]:
+        snap = gclock.reconcile(t)
+        assert snap.global_virtual_time >= prev_global - 1e-6
+        assert snap.lag >= 0.0
+        for v in snap.virtual_times:
+            assert (
+                snap.global_virtual_time - 1e-6
+                <= v
+                <= snap.global_virtual_time + snap.lag + 1e-6
+            )
+        prev_global = snap.global_virtual_time
+
+
+def test_global_clock_lag_measures_imbalance():
+    """All load on one replica: its clock races ahead, the idle replica's
+    stalls, and the lag is exactly the spread."""
+    gclock = GlobalVirtualClock([100.0, 100.0])
+    gclock.register(0, 0, 0.0, 500.0)
+    gclock.register(0, 1, 0.0, 500.0)
+    snap = gclock.reconcile(2.0)
+    assert snap.virtual_times[1] == 0.0          # idle clock stalls
+    assert snap.virtual_times[0] > 0.0
+    assert snap.lag == pytest.approx(snap.virtual_times[0])
+    assert snap.global_virtual_time == 0.0
+
+
+def test_delay_bound_service_rate_converts_units():
+    """The same fleet expressed in iteration time (pool tokens) and in
+    workload seconds (pool * rate cost-units/s, as ReplicatedBackend builds
+    it) must give the same Theorem B.1 bound up to the time-unit change."""
+    rate = 30.0
+    iter_clock = GlobalVirtualClock([1000.0, 2000.0])
+    sec_clock = GlobalVirtualClock([1000.0 * rate, 2000.0 * rate])
+    b_iters = iter_clock.delay_bound(50.0, 5000.0)
+    b_secs = sec_clock.delay_bound(50.0, 5000.0, service_rate=rate)
+    assert b_iters == pytest.approx(2.0 * 50.0 + 5000.0 / 1000.0)
+    assert b_secs == pytest.approx(b_iters / rate)
+
+
+def test_global_clock_rejects_bad_registration():
+    gclock = GlobalVirtualClock([100.0])
+    with pytest.raises(ValueError):
+        gclock.register(1, 0, 0.0, 10.0)         # replica out of range
+    gclock.register(0, 0, 5.0, 10.0)
+    gclock.reconcile(10.0)
+    with pytest.raises(ValueError):
+        gclock.register(0, 1, 3.0, 10.0)         # predates horizon
+    with pytest.raises(ValueError):
+        GlobalVirtualClock([])
 
 
 def test_clock_rejects_time_reversal():
