@@ -1,0 +1,292 @@
+"""Simulator-core performance benchmark: the tracked perf trajectory.
+
+    PYTHONPATH=src python -m benchmarks.perf [--quick] [--out PATH]
+
+Times the event-indexed ``repro.sim.ClusterSim`` (events/s processed,
+agents drained/s, scheduler overhead) across workload sizes × scheduler
+policies × replica counts, measures its speedup over the retained
+pre-rewrite core (``repro.sim.reference.ReferenceClusterSim``), and —
+before recording anything — proves the optimization behaviour-preserving:
+the two cores must produce *identical* JCT/finish dicts (within 1e-6) on a
+seeded 1k-agent oracle workload, or the run aborts.
+
+Results land in ``BENCH_sim.json`` at the repo root (CI uploads it as an
+artifact; ``scripts/ci.sh`` runs the ``--quick`` variant as its perf
+stage).  The workload is synthetic but seeded — the same seed always
+produces the same agents — so numbers are comparable run-to-run and the
+oracle check is exact.
+
+``--quick`` restricts to the 1k-agent tier (single replica sweep + oracle
++ 1k speedup) so the perf stage stays a few seconds of CPU; the full run
+adds the 10k/50k tiers, the 4-replica fleet sweeps, and the 10k-agent
+reference comparison the acceptance gate reads (``speedup_10k``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import InferenceSpec, inference_cost, make_scheduler
+from repro.sim import ClusterSim, SimAgent
+from repro.sim.reference import ReferenceClusterSim
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_OUT = REPO_ROOT / "BENCH_sim.json"
+
+M_TOKENS = 16384.0
+DECODE_RATE = 30.0
+SCHEDULERS = ("justitia", "vtc", "vllm-fcfs")
+#: mean inter-arrival seconds per agent — tuned for moderate overload
+#: (~1.2x service capacity, the paper's bursty-backlog regime): the waiting
+#: queue then grows with workload size, which is exactly the regime where
+#: the pre-rewrite core's per-admission O(W) re-sorts dominate.  Kept mild
+#: enough that the quadratic reference stays runnable at the 10k tier.
+MEAN_INTERARRIVAL_S = 0.40
+
+
+def synth_agents(seed: int, n: int) -> list[SimAgent]:
+    """Seeded synthetic workload: cheap to sample at 5e4 agents.
+
+    Mimics the paper suite's shape (mostly small single-stage agents, a
+    tail of staged/parallel heavy ones) without the prompt-text sampling
+    of ``repro.workloads`` — the perf harness measures the scheduler core,
+    not the workload generator.
+    """
+    rng = np.random.default_rng(seed)
+    window = n * MEAN_INTERARRIVAL_S
+    arrivals = np.sort(rng.uniform(0.0, window, size=n))
+    agents = []
+    for i in range(n):
+        n_stages = 1 + (rng.random() < 0.2)
+        stages = []
+        for _ in range(n_stages):
+            k = int(rng.integers(1, 4))
+            stages.append(
+                [
+                    InferenceSpec(
+                        int(rng.integers(32, 700)), int(rng.integers(16, 400))
+                    )
+                    for _ in range(k)
+                ]
+            )
+        cost = sum(inference_cost(s) for st in stages for s in st)
+        agents.append(
+            SimAgent(
+                agent_id=i,
+                arrival=float(arrivals[i]),
+                stages=stages,
+                predicted_cost=cost,
+                true_cost=cost,
+            )
+        )
+    return agents
+
+
+def _run_optimized(seed: int, n: int, sched: str, replicas: int) -> dict:
+    agents = synth_agents(seed, n)
+    if replicas == 1:
+        sim = ClusterSim(
+            make_scheduler(sched, M_TOKENS, service_rate=DECODE_RATE),
+            M_TOKENS,
+            decode_rate=DECODE_RATE,
+        )
+        t0 = time.perf_counter()
+        res = sim.run(agents)
+        wall = time.perf_counter() - t0
+        events, key_evals = res.events, res.key_evals
+        sched_time, swaps, sorts = res.sched_time, res.swaps, res.sorts
+        drained = len(res.jct)
+    else:
+        # fleet path: ReplicatedBackend over per-replica pools, the same
+        # surface benchmarks/run.py sweeps (no listener => pure core time)
+        from repro.api import AgentSpec, SimBackend
+        from repro.api.replicated import ReplicatedBackend
+
+        specs = [
+            AgentSpec(
+                stages=a.stages,
+                arrival=a.arrival,
+                predicted_cost=a.predicted_cost,
+                true_cost=a.true_cost,
+            )
+            for a in agents
+        ]
+        fleet = ReplicatedBackend(
+            [
+                SimBackend(sched, total_kv=M_TOKENS, decode_rate=DECODE_RATE)
+                for _ in range(replicas)
+            ],
+            router="round_robin",
+            seed=seed,
+        )
+        t0 = time.perf_counter()
+        for aid, spec in enumerate(specs):
+            fleet.submit(spec, aid)
+        res = fleet.drain()
+        wall = time.perf_counter() - t0
+        events = sum(p["child_events"] for p in res.metrics["per_replica"])
+        key_evals = sum(
+            p["child_key_evals"] for p in res.metrics["per_replica"]
+        )
+        sorts = sum(p["child_sorts"] for p in res.metrics["per_replica"])
+        sched_time, swaps = res.sched_time, res.swaps
+        drained = len(res.jct)
+    assert drained == n, f"{sched} r={replicas}: drained {drained}/{n}"
+    return {
+        "agents": n,
+        "scheduler": sched,
+        "replicas": replicas,
+        "wall_s": round(wall, 4),
+        "events": events,
+        "events_per_s": round(events / wall, 1),
+        "agents_per_s": round(n / wall, 1),
+        "key_evals": key_evals,
+        "sorts": sorts,
+        "sched_time_s": round(sched_time, 4),
+        "swaps": swaps,
+    }
+
+
+def _run_reference(seed: int, n: int, sched: str) -> dict:
+    agents = synth_agents(seed, n)
+    sim = ReferenceClusterSim(
+        make_scheduler(sched, M_TOKENS, service_rate=DECODE_RATE),
+        M_TOKENS,
+        decode_rate=DECODE_RATE,
+    )
+    t0 = time.perf_counter()
+    res = sim.run(agents)
+    wall = time.perf_counter() - t0
+    return {
+        "agents": n,
+        "scheduler": sched,
+        "wall_s": round(wall, 4),
+        "events": res.events,
+        "events_per_s": round(res.events / wall, 1),
+        "agents_per_s": round(n / wall, 1),
+        "key_evals": res.key_evals,
+    }
+
+
+def check_oracle(seed: int, n: int = 1000) -> dict:
+    """Both cores must agree exactly on the seeded oracle workload."""
+    worst = 0.0
+    for sched in SCHEDULERS:
+        new = ClusterSim(
+            make_scheduler(sched, M_TOKENS, service_rate=DECODE_RATE),
+            M_TOKENS, decode_rate=DECODE_RATE,
+        ).run(synth_agents(seed, n))
+        ref = ReferenceClusterSim(
+            make_scheduler(sched, M_TOKENS, service_rate=DECODE_RATE),
+            M_TOKENS, decode_rate=DECODE_RATE,
+        ).run(synth_agents(seed, n))
+        if set(new.finish) != set(ref.finish):
+            raise AssertionError(
+                f"oracle mismatch ({sched}): completion sets differ"
+            )
+        diff = max(
+            max(abs(new.finish[k] - ref.finish[k]) for k in new.finish),
+            max(abs(new.jct[k] - ref.jct[k]) for k in new.jct),
+        )
+        worst = max(worst, diff)
+        if diff >= 1e-6:
+            raise AssertionError(
+                f"oracle mismatch ({sched}): max |Δ| = {diff:.3e} >= 1e-6"
+            )
+    return {
+        "agents": n,
+        "seed": seed,
+        "schedulers": list(SCHEDULERS),
+        "max_abs_diff": worst,
+        "match": True,
+    }
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="1k tier only (the CI perf stage)")
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    sizes = [1000] if args.quick else [1000, 10_000, 50_000]
+    replica_counts = [1] if args.quick else [1, 4]
+    ref_sizes = [1000] if args.quick else [1000, 10_000]
+
+    print("== oracle: optimized vs pre-rewrite reference (seeded 1k) ==")
+    oracle = check_oracle(args.seed)
+    print(f"   identical JCT/finish, max |delta| = {oracle['max_abs_diff']:.2e}")
+
+    optimized, reference = [], []
+    for n in sizes:
+        for sched in SCHEDULERS:
+            for r in replica_counts:
+                row = _run_optimized(args.seed, n, sched, r)
+                optimized.append(row)
+                print(
+                    f"opt  n={n:6d} {sched:10s} replicas={r} "
+                    f"wall={row['wall_s']:8.3f}s "
+                    f"events/s={row['events_per_s']:10.1f} "
+                    f"agents/s={row['agents_per_s']:8.1f}"
+                )
+    for n in ref_sizes:
+        for sched in SCHEDULERS:
+            row = _run_reference(args.seed, n, sched)
+            reference.append(row)
+            print(
+                f"ref  n={n:6d} {sched:10s} replicas=1 "
+                f"wall={row['wall_s']:8.3f}s "
+                f"events/s={row['events_per_s']:10.1f} "
+                f"agents/s={row['agents_per_s']:8.1f}"
+            )
+
+    def _eps(rows, n, sched):
+        for r in rows:
+            if (
+                r["agents"] == n
+                and r["scheduler"] == sched
+                and r.get("replicas", 1) == 1
+            ):
+                return r["events_per_s"]
+        return None
+
+    speedups = {}
+    for n in ref_sizes:
+        speedups[n] = {
+            s: round(_eps(optimized, n, s) / _eps(reference, n, s), 2)
+            for s in SCHEDULERS
+        }
+        print(f"speedup vs reference @ {n} agents (events/s): {speedups[n]}")
+
+    out = {
+        "benchmark": "sim_core_perf",
+        "quick": bool(args.quick),
+        "seed": args.seed,
+        "config": {
+            "total_kv": M_TOKENS,
+            "decode_rate": DECODE_RATE,
+            "mean_interarrival_s": MEAN_INTERARRIVAL_S,
+            "schedulers": list(SCHEDULERS),
+        },
+        "oracle": oracle,
+        "optimized": optimized,
+        "reference": reference,
+        "speedup": {str(k): v for k, v in speedups.items()},
+    }
+    if not args.quick and 10_000 in speedups:
+        out["speedup_10k"] = speedups[10_000]
+        out["speedup_10k_min"] = min(speedups[10_000].values())
+    path = Path(args.out)
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {path}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,17 +1,22 @@
 #!/usr/bin/env bash
-# CI entry, three stages over the unified AgentService API:
+# CI entry, four stages over the unified AgentService API:
 #
 #   1. smokes   — the serving launcher on BOTH backends, single and
 #                 multi-replica (ReplicatedBackend + router), ~40s CPU;
 #   2. tier-1   — the default pytest tier (slow-marked kernel/model-zoo/
 #                 training sweeps are deselected via addopts);
-#   3. slow     — `pytest -m slow`: the full kernel/model/training sweeps.
+#   3. perf     — `benchmarks/perf.py --quick`: the 1k-agent sim-core
+#                 benchmark, which first PROVES the event-indexed core
+#                 behaviour-identical to the retained pre-rewrite oracle
+#                 on a seeded workload, then records throughput to
+#                 BENCH_sim.json (uploaded as a CI artifact);
+#   4. slow     — `pytest -m slow`: the full kernel/model/training sweeps.
 #                 Run as its own stage so a Pallas-on-CPU container gap
 #                 cannot mask a broken scheduler/serving path.
 #
-#   scripts/ci.sh            # smokes + tier-1 (the gating stages)
+#   scripts/ci.sh            # smokes + tier-1 + perf (the gating stages)
 #   scripts/ci.sh --smoke    # smokes only
-#   scripts/ci.sh --slow     # all three stages.  NB: on CPU-only
+#   scripts/ci.sh --slow     # all four stages.  NB: on CPU-only
 #                            # containers the slow tier carries the known
 #                            # Pallas kernel failures, so this exits red
 #                            # there by design — it needs an accelerator.
@@ -45,6 +50,12 @@ fi
 
 echo "== tier-1: pytest (slow tier deselected) =="
 python -m pytest -x -q
+
+echo "== perf: benchmarks/perf.py --quick (oracle + 1k sim-core bench) =="
+# separate output path: the committed BENCH_sim.json is the FULL-tier
+# record (10k acceptance numbers) and must not be overwritten by the
+# quick stage
+python -m benchmarks.perf --quick --out BENCH_sim_quick.json
 
 if [[ "${1:-}" == "--slow" ]]; then
     echo "== slow tier: pytest -m slow =="

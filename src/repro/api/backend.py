@@ -127,8 +127,13 @@ def _resolve_scheduler(
 class SimBackend:
     """Discrete-event cluster simulator behind the ``Backend`` protocol.
 
-    The simulator replays arrival times exactly, so ``run`` only has to
-    remember the clock floor: all scheduling happens inside ``drain``.
+    The event-indexed simulator is incremental: ``submit`` registers the
+    agent with the sim immediately (online arrival) and ``run(until)``
+    really advances the event loop, so completions are *observed* mid-run —
+    lifecycle listeners fire as the clock sweeps them, and load-aware fleet
+    routers (``least_loaded``) see the sim's in-flight count drop without
+    waiting for ``drain``.  Results are cumulative across submit/drain
+    rounds, matching the engine backend's ``completions`` dict.
     """
 
     name = "sim"
@@ -151,17 +156,20 @@ class SimBackend:
             swap_penalty=swap_penalty,
         )
         self.scheduler = sched
-        self._agents: list[SimAgent] = []
-        self._now = 0.0
 
     @property
     def now(self) -> float:
-        return self._now
+        return self.sim.t
 
     @property
     def virtual_capacity(self) -> float:
         # pool size (KV tokens) x decode rate = KV token-time per second
         return self.sim.m * self.sim.decode_rate
+
+    @property
+    def in_flight(self) -> int:
+        """Agents submitted but not completed (the sim's own live counter)."""
+        return self.sim.live_agents
 
     def set_listener(self, listener: Any) -> None:
         self.sim.listener = listener
@@ -171,11 +179,10 @@ class SimBackend:
 
     def submit(self, spec: AgentSpec, agent_id: int) -> float:
         pred, true = spec.resolved_costs()
-        arrival = max(float(spec.arrival), self._now)
-        self._agents.append(
+        return self.sim.submit(
             SimAgent(
                 agent_id=agent_id,
-                arrival=arrival,
+                arrival=float(spec.arrival),
                 stages=[list(s) for s in spec.stages],
                 predicted_cost=pred,
                 true_cost=true,
@@ -183,15 +190,12 @@ class SimBackend:
                 name=spec.name,
             )
         )
-        return arrival
 
     def run(self, until: float) -> None:
-        self._now = max(self._now, float(until))
+        self.sim.advance(until)
 
     def drain(self) -> BackendResult:
-        res = self.sim.run(self._agents)
-        self._agents = []
-        self._now = max(self._now, res.makespan)
+        res = self.sim.drain()
         return BackendResult(
             finish=dict(res.finish),
             jct=dict(res.jct),
@@ -199,7 +203,13 @@ class SimBackend:
             swaps=res.swaps,
             sched_decisions=res.sched_decisions,
             sched_time=res.sched_time,
-            metrics={"swaps": res.swaps},
+            metrics={
+                "swaps": res.swaps,
+                "events": res.events,
+                "key_evals": res.key_evals,
+                "sorts": res.sorts,
+                "peak_occupancy": res.peak_occupancy,
+            },
         )
 
 

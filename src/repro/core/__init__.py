@@ -14,7 +14,8 @@ from repro.core.cost import (
     vtc_agent_cost,
     vtc_cost,
 )
-from repro.core.gps import GpsAgent, gps_finish_times
+from repro.core.gps import GpsAgent, gps_finish_times, gps_finish_times_fluid
+from repro.core.queueing import OrderedQueue
 from repro.core.registry import (
     SchedulerPolicy,
     register_scheduler,
@@ -62,6 +63,8 @@ __all__ = [
     "vtc_cost",
     "GpsAgent",
     "gps_finish_times",
+    "gps_finish_times_fluid",
+    "OrderedQueue",
     "ALL_SCHEDULERS",
     "AgentRecord",
     "AgentScheduler",

@@ -36,6 +36,17 @@ class SchedulerPolicy(Protocol):
     whether keys can change between calls with identical arguments — static
     policies (``dynamic = False``) allow backends to keep their queues
     incrementally sorted instead of re-sorting at every decision.
+
+    Two OPTIONAL performance attributes (not required members of this
+    protocol — the backends degrade gracefully via ``getattr`` when they
+    are absent, and ``AgentScheduler`` subclasses get both for free):
+    ``version`` is a mutation counter gating queue re-sorts under dynamic
+    policies — bump it whenever state that ``request_key`` reads changes;
+    absent, dirty queues re-sort every admission pass.  ``agent_keyed``
+    declares that a dynamic key reads nothing beyond the request and its
+    own agent's record, unlocking grouped queue invalidation (see
+    ``repro.core.queueing`` and ROADMAP "Scheduler-plugin invariants");
+    absent, it is taken as False.
     """
 
     name: str

@@ -21,6 +21,7 @@ pressure, evicting the running request with the *worst* key.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Optional
 
 from repro.core.cost import InferenceSpec
@@ -63,19 +64,33 @@ class AgentScheduler:
     name = "base"
     #: whether this scheduler's admission key depends on runtime state
     dynamic = False
+    #: dynamic policies only: True iff ``request_key`` reads nothing beyond
+    #: the request and its own agent's record — then a queued request's key
+    #: can only move when that agent is serviced, and backends may keep
+    #: queues sorted and reposition just the serviced agents' requests
+    #: (``repro.core.OrderedQueue`` grouped mode) instead of re-sorting
+    agent_keyed = False
 
     def __init__(self) -> None:
         self.agents: dict[int, AgentRecord] = {}
+        #: mutation counter: bumped whenever scheduler state that keys may
+        #: read changes (arrivals, completions, service deals).  Backends
+        #: pass it to ``repro.core.OrderedQueue.refresh`` so dynamic-policy
+        #: queues re-sort only when keys can actually have moved.  Keys must
+        #: not depend on the clock ``t`` directly (see queueing module doc).
+        self.version = 0
 
     # -- lifecycle ----------------------------------------------------------
 
     def on_agent_arrival(self, agent_id: int, t: float, predicted_cost: float) -> None:
         self.agents[agent_id] = AgentRecord(agent_id, t, float(predicted_cost))
+        self.version += 1
 
     def on_agent_complete(self, agent_id: int, t: float) -> None:
         rec = self.agents.get(agent_id)
         if rec is not None:
             rec.completed = True
+        self.version += 1
 
     def on_service(
         self,
@@ -92,6 +107,7 @@ class AgentScheduler:
             return
         rec.serviced_kv += kv_token_time
         rec.serviced_vtc += w_p * prefill_tokens + w_d * decode_tokens
+        self.version += 1
 
     # -- the decision -------------------------------------------------------
 
@@ -147,20 +163,52 @@ class VtcScheduler(AgentScheduler):
     instantaneous fair sharing.  On arrival of an agent during a backlogged
     period its counter is lifted to the minimum over active agents
     (the paper's 'counter lift' that prevents gaming by idling).
+
+    The lift is O(log n) amortized via a lazy min-heap of *lower bounds*
+    (the original VTC paper ships an O(log n) counter for exactly this
+    reason): each live agent keeps one ``(counter, agent_id)`` entry,
+    pushed at arrival.  Counters only grow, so an entry is always a lower
+    bound on its agent's current counter; when the heap top is stale it is
+    ``heapreplace``-refreshed in place, and when the top matches its
+    agent's live counter that value IS the minimum.  Service deals never
+    touch the heap — the refresh work collapses into the next lift.  A
+    linear scan per arrival made the lift O(n²) across a backlogged
+    workload.
     """
 
     name = "vtc"
     dynamic = True
+    agent_keyed = True
+
+    def __init__(self) -> None:
+        super().__init__()
+        self._min_heap: list[tuple[float, int]] = []  # (lower bound, aid)
+
+    def _min_live(self) -> Optional[float]:
+        """Smallest ``serviced_vtc`` over live agents (lazy lower bounds)."""
+        heap = self._min_heap
+        agents = self.agents
+        while heap:
+            v, aid = heap[0]
+            rec = agents.get(aid)
+            if rec is None or rec.completed:
+                heapq.heappop(heap)
+                continue
+            current = rec.serviced_vtc
+            if current == v:
+                # v is a true live counter and every other entry is a
+                # lower bound of its own (>= v) counter: v is the min
+                return v
+            heapq.heapreplace(heap, (current, aid))
+        return None
 
     def on_agent_arrival(self, agent_id: int, t: float, predicted_cost: float) -> None:
         super().on_agent_arrival(agent_id, t, predicted_cost)
-        live = [
-            a.serviced_vtc
-            for a in self.agents.values()
-            if not a.completed and a.agent_id != agent_id
-        ]
-        if live:
-            self.agents[agent_id].serviced_vtc = min(live)
+        lifted = self._min_live()
+        rec = self.agents[agent_id]
+        if lifted is not None:
+            rec.serviced_vtc = lifted
+        heapq.heappush(self._min_heap, (rec.serviced_vtc, agent_id))
 
     def request_key(self, req: Request, t: float) -> tuple:
         rec = self.agents[req.agent_id]
@@ -174,6 +222,7 @@ class SrjfScheduler(AgentScheduler):
 
     name = "srjf"
     dynamic = True
+    agent_keyed = True
 
     def request_key(self, req: Request, t: float) -> tuple:
         rec = self.agents[req.agent_id]

@@ -45,23 +45,36 @@ class VirtualClock:
         return len(self._active)
 
     def now(self, t: float) -> float:
-        """V(t) without mutating state (t must be >= last update time)."""
-        v, _ = self._peek(t)
+        """V(t) without mutating state (t must be >= last update time).
+
+        O(1) when the clock is already advanced to ``t`` — the common case
+        after ``GlobalVirtualClock.reconcile`` sweeps every replica clock to
+        the same horizon — and a copy-based simulation only for genuinely
+        future peeks.
+        """
+        if t <= self._t:
+            return self._v
+        v, _ = self._simulate(t, list(self._finish_heap))
         return v
 
     # -- core ---------------------------------------------------------------
 
     def advance(self, t: float) -> None:
-        """Integrate V up to real time t, retiring GPS completions."""
+        """Integrate V up to real time t, retiring GPS completions.
+
+        Destructive integration directly against the live heap — each
+        retirement is one O(log n) pop, so sweeping the clock across k
+        completions costs O(k log n) rather than the full-heap copy the
+        peek-then-repop implementation paid on every call.
+        """
         if t < self._t - 1e-9:
             raise ValueError(f"clock moved backwards: {t} < {self._t}")
-        v, retired = self._peek(t)
+        if t <= self._t:
+            return
+        v, retired = self._simulate(t, self._finish_heap)
         for agent_id in retired:
             self._active.discard(agent_id)
-        # pop retired entries off the heap for real
-        while self._finish_heap and self._finish_heap[0][0] <= v + 1e-12:
-            heapq.heappop(self._finish_heap)
-        self._v, self._t = v, max(t, self._t)
+        self._v, self._t = v, t
 
     def on_arrival(self, agent_id: int, t: float, cost: float) -> float:
         """Register agent arrival; returns its virtual finish time F_j."""
@@ -73,20 +86,18 @@ class VirtualClock:
 
     # -- internals ----------------------------------------------------------
 
-    def _peek(self, t: float) -> tuple[float, list[int]]:
-        """Integrate from (self._t, self._v) to real time t.
+    def _simulate(self, t: float, heap: list) -> tuple[float, list[int]]:
+        """Integrate from (self._t, self._v) to real time t against ``heap``.
 
-        Returns (V(t), agents whose GPS finish V is swept past).  While
-        N_t agents are active, dV/dt = M / N_t; when no agent is active V
-        stalls (no service is being dealt in GPS — matching the convention
-        that V only needs to order *backlogged* periods; an idle system
-        re-anchors at the current V).
+        Returns (V(t), agents whose GPS finish V is swept past), popping
+        retirements off ``heap`` (pass the live heap to mutate, a copy to
+        peek).  While N_t agents are active, dV/dt = M / N_t; when no agent
+        is active V stalls (no service is being dealt in GPS — matching the
+        convention that V only needs to order *backlogged* periods; an idle
+        system re-anchors at the current V).
         """
         v = self._v
-        t_cur = t if t > self._t else self._t
-        elapsed = t_cur - self._t
-        heap = list(self._finish_heap)
-        heapq.heapify(heap)
+        elapsed = t - self._t
         active = len(self._active)
         retired: list[int] = []
         while elapsed > 0 and active > 0:

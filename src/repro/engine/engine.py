@@ -31,7 +31,6 @@ stays independent of the API layer that consumes the events.
 
 from __future__ import annotations
 
-import bisect
 import dataclasses
 import heapq
 from typing import Any, Optional
@@ -41,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cost import InferenceSpec, kv_token_time
+from repro.core.queueing import OrderedQueue
 from repro.core.schedulers import AgentScheduler, Request
 from repro.kvcache.allocator import BlockAllocator
 from repro.models import Model
@@ -132,8 +132,23 @@ class ServeEngine:
         self.slot_last_tok = np.zeros(max_batch, np.int32)
         self.slot_pos = np.zeros(max_batch, np.int32)
 
-        self.waiting: list[EngineRequest] = []
-        self.swapped: list[EngineRequest] = []
+        # waiting/swapped are the shared OrderedQueue (repro.core.queueing):
+        # static-key policies keep them sorted by construction; agent-keyed
+        # dynamic policies (VTC/SRJF) get grouped invalidation (only the
+        # freshly-serviced agents' requests reposition per admission pass);
+        # other dynamic policies re-sort lazily when the scheduler's
+        # version counter moves
+        self._grouped = scheduler.dynamic and getattr(
+            scheduler, "agent_keyed", False
+        )
+        self._dirty_agents: set[int] = set()
+        _gf = (lambda req: req.agent_id) if self._grouped else None
+        self.waiting: OrderedQueue = OrderedQueue(
+            self._key, dynamic=scheduler.dynamic, group_fn=_gf
+        )
+        self.swapped: OrderedQueue = OrderedQueue(
+            self._key, dynamic=scheduler.dynamic, group_fn=_gf
+        )
         self.agents: dict[int, EngineAgent] = {}
         # future arrivals: (arrival_iter, submit order, agent) min-heap
         self.pending: list[tuple[int, int, EngineAgent]] = []
@@ -142,7 +157,7 @@ class ServeEngine:
         self._rid = 0
         self._submit_seq = 0
         self.metrics = {"prefills": 0, "decode_steps": 0, "swaps": 0,
-                        "tokens": 0, "sorts": 0}
+                        "tokens": 0, "sorts": 0, "key_evals": 0}
 
         self._jit_decode = jax.jit(self.model.decode)
         self._jit_prefill = jax.jit(
@@ -205,15 +220,14 @@ class ServeEngine:
         agent.next_stage += 1
         agent.live += len(stage)
         for prompt, d in stage:
-            self._enqueue(
-                self.waiting,
+            self.waiting.push(
                 EngineRequest(
                     agent_id=agent.agent_id,
                     rid=self._rid,
                     prompt=np.asarray(prompt, np.int32),
                     max_new_tokens=int(d),
                     submit_iter=self.now,
-                ),
+                )
             )
             self._rid += 1
 
@@ -293,45 +307,42 @@ class ServeEngine:
     def _key(self, req: EngineRequest):
         return self.sched.request_key(req.to_sched_request(), float(self.now))
 
-    def _enqueue(self, queue: list[EngineRequest], req: EngineRequest) -> None:
-        """Insert preserving sorted order for static-key schedulers.
-
-        Static policies (``sched.dynamic == False``: Justitia, FCFS, SJF,
-        Parrot) never change a request's key after submission, so the
-        waiting/swapped queues stay sorted by construction and ``_admit``
-        skips the per-iteration O(n log n) re-sort.  Dynamic policies (VTC,
-        SRJF) append here and re-sort at each admission pass.
-        """
-        if self.sched.dynamic:
-            queue.append(req)
-        else:
-            bisect.insort(queue, req, key=self._key)
-
-    def _sort_for_admission(self, queue: list[EngineRequest]) -> None:
-        if self.sched.dynamic and len(queue) > 1:
-            queue.sort(key=self._key)
-            self.metrics["sorts"] += 1
-
     def _admit(self) -> None:
-        # swapped queue has absolute priority and blocks the waiting queue
-        self._sort_for_admission(self.swapped)
+        # swapped queue has absolute priority and blocks the waiting queue.
+        # refresh() is a no-op for static-key policies (sorted-by-
+        # construction), a grouped repositioning for agent-keyed dynamic
+        # ones, and a lazy version-gated re-sort otherwise.
+        version = getattr(self.sched, "version", None)
+        if self._grouped and self._dirty_agents:
+            self.waiting.mark_dirty_many(self._dirty_agents)
+            self.swapped.mark_dirty_many(self._dirty_agents)
+            self._dirty_agents.clear()
+        self.swapped.refresh(version)
         while self.swapped and self.slot_free:
-            req = self.swapped[0]
+            req = self.swapped.peek()
             if not self.alloc.swap_in(req.rid):
                 break
-            self.swapped.pop(0)
+            self.swapped.popleft()
             self._restore_slot(req)
         if self.swapped:
+            self._sync_queue_metrics()
             return
-        self._sort_for_admission(self.waiting)
+        self.waiting.refresh(version)
         while self.waiting and self.slot_free:
-            req = self.waiting[0]
+            req = self.waiting.peek()
             if not self.alloc.can_admit(len(req.prompt) + 1):
                 break
-            self.waiting.pop(0)
+            self.waiting.popleft()
             self.alloc.admit(req.rid, len(req.prompt))
             self._prefill_into_slot(req)
             self._emit("on_admit", req.agent_id, req.rid, float(self.now))
+        self._sync_queue_metrics()
+
+    def _sync_queue_metrics(self) -> None:
+        self.metrics["sorts"] = self.waiting.sorts + self.swapped.sorts
+        self.metrics["key_evals"] = (
+            self.waiting.key_evals + self.swapped.key_evals
+        )
 
     # ------------------------------------------------------------- prefill
 
@@ -360,6 +371,8 @@ class ServeEngine:
         self.now += max(1, -(-p // self.prefill_chunk)) - 1
         self.metrics["prefills"] += 1
         self.sched.on_service(req.agent_id, prefill_tokens=float(p))
+        if self._grouped:
+            self._dirty_agents.add(req.agent_id)
 
     def _write_cache_slot(self, slot: int, small_cache: dict) -> None:
         """Copy a B=1 prefill cache into row ``slot`` of the engine cache."""
@@ -407,7 +420,7 @@ class ServeEngine:
         self.slot_req.pop(slot)
         self.slot_free.append(slot)
         req.slot = -1
-        self._enqueue(self.swapped, req)
+        self.swapped.push(req)
         self._emit("on_swap_out", req.agent_id, req.rid, float(self.now))
         return True
 
@@ -424,7 +437,7 @@ class ServeEngine:
             while not self.alloc.append_token(req.rid):
                 if not self._swap_out_worst():
                     break
-                if req.rid not in [r.rid for r in self.swapped]:
+                if not any(r.rid == req.rid for r in self.swapped):
                     continue
                 break
             # note: if req itself was swapped out it no longer decodes
@@ -455,6 +468,8 @@ class ServeEngine:
             self.sched.on_service(
                 req.agent_id, kv_token_time=float(occ), decode_tokens=1.0
             )
+            if self._grouped:
+                self._dirty_agents.add(req.agent_id)
             if req.generated >= req.max_new_tokens:
                 self._complete(slot, req)
 

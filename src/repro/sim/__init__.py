@@ -1,4 +1,9 @@
-"""Discrete-event cluster simulator + metrics (paper-scale experiments)."""
+"""Discrete-event cluster simulator + metrics (paper-scale experiments).
+
+``ClusterSim`` is the event-indexed production core;
+``reference.ReferenceClusterSim`` is the retained pre-rewrite oracle the
+equivalence tests and ``benchmarks/perf.py`` pin it against.
+"""
 
 from repro.sim.cluster import ClusterSim, SimAgent, SimResult
 from repro.sim.metrics import (
@@ -8,9 +13,11 @@ from repro.sim.metrics import (
     fairness_stats,
     jct_stats,
 )
+from repro.sim.reference import ReferenceClusterSim
 
 __all__ = [
     "ClusterSim",
+    "ReferenceClusterSim",
     "SimAgent",
     "SimResult",
     "FairnessStats",

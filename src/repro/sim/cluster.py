@@ -18,6 +18,50 @@ unmodified — the same classes drive the real JAX engine.  Time unit:
 seconds; service unit: KV token-time (token·seconds scaled by decode_rate
 to match the cost model's token·iterations — see ``kv_unit_scale``).
 
+Event-indexed core
+------------------
+The scheduling loop does no per-event rescans of queues or probes over the
+whole running set:
+
+  * **Calendar heaps** carry each running sequence's finish time and
+    prefill boundary as ``(time, rid, version)`` entries; a state change
+    (admit, swap, resume) bumps the sequence's ``version`` so stale
+    entries are discarded lazily on pop — no ``min()`` probe over the
+    running set ever happens.  Finish times are *cached at (re-)admission*
+    and exact by construction: decode progress is the stable closed form
+    ``d_base + (t - prefill_done) * decode_rate`` anchored only at
+    (re-)admission, never at accounting points.
+  * **Service accounting is lazy.**  A sequence is credited
+    (``sched.on_service``) only when its *own* state changes — admission,
+    swap out/in, finish — because the KV token-time integral over
+    piecewise-linear occupancy telescopes exactly across any partition of
+    the interval.  Dynamic policies (``sched.dynamic``), whose keys read
+    the service counters at decision time, instead get a full refresh at
+    every event — which reproduces the reference core's eager sweep
+    bit-for-bit (see below).
+  * **Queues are ``repro.core.OrderedQueue``** — static-key policies keep
+    the waiting/swapped queues sorted by construction (one key evaluation
+    per request, ever); agent-keyed dynamic policies (VTC, SRJF) use
+    grouped invalidation, repositioning only the freshly-serviced agents'
+    requests per admission pass.
+
+Pool occupancy and the saturation probe remain O(running) sweeps — but
+``running`` is bounded by the pool size M, not by the number of agents, so
+the loop stays O(events · log n) in workload size.  The sweeps reproduce
+the *exact float arithmetic* of the retained pre-rewrite core
+(``repro.sim.reference.ReferenceClusterSim``, same ordered sums over the
+same stable decode form): saturation and finish events frequently land
+within 1e-10 of each other under contention, and both cores must order
+them identically or swap decisions diverge.  The equivalence property
+tests and the ``benchmarks/perf.py`` oracle pin the two cores to
+identical completion orders and JCTs.
+
+The core is *incremental*: ``submit`` registers agents online at any time,
+``advance(until)`` processes events up to a horizon (so completions are
+observable mid-run — the replicated fleet's load-aware routers depend on
+this), and ``drain`` runs to empty.  ``run(agents)`` is the legacy one-shot
+wrapper.
+
 The simulator emits the same duck-typed lifecycle callbacks as the engine
 (``on_arrival``, ``on_admit``, ``on_swap_out``, ``on_swap_in``,
 ``on_stage_complete``, ``on_agent_complete``) to an optional ``listener`` —
@@ -29,9 +73,11 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Any, Optional, Sequence
+import time as _time
+from typing import Any, Sequence
 
 from repro.core.cost import InferenceSpec, MemoryFamily, inference_cost
+from repro.core.queueing import OrderedQueue
 from repro.core.schedulers import AgentScheduler, Request
 
 
@@ -58,21 +104,29 @@ class _Running:
     req: Request
     admit_time: float
     prefill_done: float          # absolute time decoding starts
-    decoded_at_last: float       # decoded tokens at last account time
-    last_account: float          # time of last service accounting
+    d_base: float                # decoded tokens at (re-)admission anchor
+    decoded_at_last: float       # decoded tokens at last service credit
+    last_account: float          # time of last service credit
+    fin: float = float("inf")    # finish time, cached at (re-)admission
     swapped: bool = False
-
-    def occupancy(self, t: float, decode_rate: float) -> float:
-        return self.req.spec.prefill + self.decoded(t, decode_rate)
+    version: int = 0             # invalidates stale calendar-heap entries
+    order: int = 0               # (re-)admission sequence number
+    key: Any = None              # cached static scheduler key
 
     def decoded(self, t: float, decode_rate: float) -> float:
+        """Stable closed form, anchored at (re-)admission only.
+
+        Identical (bit-for-bit) to the reference core's; the snap window
+        mirrors the historical accounting's float-Zeno guard.
+        """
         if t <= self.prefill_done:
-            return self.decoded_at_last
-        return min(
-            self.req.spec.decode,
-            self.decoded_at_last
-            + max(0.0, t - max(self.last_account, self.prefill_done)) * decode_rate,
-        )
+            d = self.d_base
+        else:
+            d = self.d_base + (t - self.prefill_done) * decode_rate
+        cap = self.req.spec.decode
+        if cap - d < 1e-6:
+            return float(cap)
+        return d
 
     def finish_time(self, decode_rate: float) -> float:
         rem = self.req.spec.decode - self.decoded_at_last
@@ -87,6 +141,10 @@ class SimResult:
     sched_time: float = 0.0                # wall-clock spent in scheduler code
     swaps: int = 0
     makespan: float = 0.0
+    events: int = 0                        # discrete events processed
+    key_evals: int = 0                     # scheduler request_key invocations
+    sorts: int = 0                         # queue re-sorts (dynamic policies)
+    peak_occupancy: float = 0.0            # max pool occupancy observed
 
 
 class ClusterSim:
@@ -106,259 +164,587 @@ class ClusterSim:
         self.swap_penalty = float(swap_penalty)
         self.listener = listener
 
+        # clock + result (cumulative across submit/advance/drain rounds)
+        self.t = 0.0
+        self.result = SimResult(jct={}, finish={})
+        self._last_event_t = 0.0
+
+        # pending arrivals: (arrival, agent_id, SimAgent) min-heap
+        self._arrivals: list[tuple[float, int, SimAgent]] = []
+        self._by_id: dict[int, SimAgent] = {}
+        self._live_agents = 0            # submitted, not yet completed
+
+        # queues (see repro.core.queueing); key evals are counted by the
+        # key functions themselves so static caching shows up in the metric.
+        # Agent-keyed dynamic policies (VTC, SRJF) use grouped invalidation:
+        # only the serviced agents' requests are repositioned per pass.
+        dyn = self.sched.dynamic
+        self._grouped = dyn and getattr(self.sched, "agent_keyed", False)
+        # agents serviced since the last admission pass (grouped mode):
+        # flushed into the queues' dirty-group sets at each pass
+        self._dirty_agents: set[int] = set()
+        self._waiting: OrderedQueue = OrderedQueue(
+            self._req_key,
+            dynamic=dyn,
+            group_fn=(lambda req: req.agent_id) if self._grouped else None,
+        )
+        self._swapped: OrderedQueue = OrderedQueue(
+            self._run_key,
+            dynamic=dyn,
+            group_fn=(lambda r: r.req.agent_id) if self._grouped else None,
+        )
+
+        # running set (insertion == admission order, like the reference's
+        # list) + calendar heaps ((time, rid, version), lazily purged)
+        self._running: dict[int, _Running] = {}
+        self._fin_heap: list[tuple[float, int, int]] = []
+        self._pref_heap: list[tuple[float, int, int]] = []
+        # completion-batch tolerance: the stable decode form snaps to the
+        # cap within 1e-6 tokens (float Zeno guard) — the same window in
+        # seconds bounds how far a finish entry can trail its snap
+        self._fin_eps = 1e-6 / self.decode_rate
+
+        self._rid = 0
+        self._order = 0
+        self._sched_clock = 0.0
+        self._decisions = 0
+
+    # ---------------------------------------------------------------- emits
+
     def _emit(self, event: str, *args) -> None:
         if self.listener is not None:
             fn = getattr(self.listener, event, None)
             if fn is not None:
                 fn(*args)
 
-    # ------------------------------------------------------------------ run
+    # ----------------------------------------------------------------- keys
 
-    def run(self, agents: Sequence[SimAgent]) -> SimResult:
-        import time as _time
+    def _req_key(self, req: Request):
+        self.result.key_evals += 1
+        return self.sched.request_key(req, self.t)
 
-        agents = sorted(agents, key=lambda a: (a.arrival, a.agent_id))
-        by_id = {a.agent_id: a for a in agents}
-        arrivals = list(agents)
-        ai = 0
-        waiting: list[Request] = []
-        swapped: list[_Running] = []
-        running: list[_Running] = []
-        rid_counter = 0
-        t = 0.0
-        result = SimResult(jct={}, finish={})
-        _sched_clock = 0.0
-        _decisions = 0
+    def _run_key(self, r: _Running):
+        return self._req_key(r.req)
 
-        def submit_stage(agent: SimAgent, now: float) -> None:
-            nonlocal rid_counter
-            specs = agent.stages[agent.next_stage]
-            agent.next_stage += 1
-            agent.live_inferences += len(specs)
-            for spec in specs:
-                waiting.append(
-                    Request(
-                        agent_id=agent.agent_id,
-                        rid=rid_counter,
-                        spec=spec,
-                        submit_time=now,
-                        pred_cost=inference_cost(spec, agent.family),
-                    )
-                )
-                rid_counter += 1
+    # ------------------------------------------------------------ occupancy
 
-        def occupancy(now: float) -> float:
-            return sum(r.occupancy(now, self.decode_rate) for r in running)
+    def _occupancy(self, t: float) -> float:
+        """Pool occupancy at ``t``: the reference's ordered sum, exactly.
 
-        def account(now: float) -> None:
-            """Credit service between last accounting point and ``now``."""
-            for r in running:
-                dt_total = now - r.last_account
-                if dt_total <= 0:
-                    continue
-                # decode progress only after prefill completes
-                dec_start = max(r.last_account, r.prefill_done)
-                dt_dec = max(0.0, now - dec_start)
-                new_decoded = min(
-                    r.req.spec.decode,
-                    r.decoded_at_last + dt_dec * self.decode_rate,
-                )
-                if r.req.spec.decode - new_decoded < 1e-6:
-                    new_decoded = float(r.req.spec.decode)  # snap (float Zeno)
-                d_tokens = new_decoded - r.decoded_at_last
-                # KV token-time integral: occupancy dt, converted to
-                # token-iterations via decode_rate (1 iteration == 1/rate s)
-                occ0 = r.req.spec.prefill + r.decoded_at_last
-                kv_tt = (occ0 * dt_total + 0.5 * d_tokens * dt_dec) * self.decode_rate
-                self.sched.on_service(
-                    r.req.agent_id,
-                    kv_token_time=kv_tt,
-                    decode_tokens=d_tokens,
-                )
-                r.decoded_at_last = new_decoded
-                r.last_account = now
+        O(running) — bounded by the pool size M, not by workload size.
+        Saturation and finish events frequently coincide to within 1e-10
+        under contention, so this must be the reference core's float
+        arithmetic to the bit or the two cores order them differently.
 
-        def admit(now: float) -> None:
-            """Admission pass: swapped queue first, then waiting (vLLM)."""
-            nonlocal _sched_clock, _decisions
-            # listener emits are deferred past the timed window so the
-            # reported scheduler overhead measures policy code only
-            deferred: list[tuple] = []
-            t0 = _time.perf_counter()
-            free = self.m - occupancy(now)
-            # swapped queue has absolute priority and blocks new admissions
-            swapped.sort(key=lambda r: self.sched.request_key(r.req, now))
-            while swapped:
-                r = swapped[0]
+        Internal use only: ``t`` must be the current event time (for
+        dynamic policies the accounting anchors must be at ``t``, which
+        every internal call site guarantees); ``occupancy_now`` is the
+        anytime-safe public probe.
+        """
+        occ = 0.0
+        if self.sched.dynamic:
+            # the per-event accounting sweep keeps every anchor at the
+            # current event time, so decoded_at_last IS decoded(t) —
+            # bit-for-bit (refresh writes the stable form into it)
+            for r in self._running.values():
+                occ += r.req.spec.prefill + r.decoded_at_last
+            return occ
+        # inlined _Running.decoded (hot: ~2 sweeps per event)
+        rate = self.decode_rate
+        for r in self._running.values():
+            pf = r.prefill_done
+            d = r.d_base if t <= pf else r.d_base + (t - pf) * rate
+            cap = r.req.spec.decode
+            if cap - d < 1e-6:
+                d = cap
+            occ += r.req.spec.prefill + d
+        return occ
+
+    def _saturation_time(self, t: float) -> float:
+        """When does pool occupancy hit M at current decode rates?
+
+        Only sequences whose prefill has completed are growing; a prefill
+        completion is itself an event (see the calendar), after which this
+        is recomputed with the new rate.  Bit-exact mirror of the
+        reference's probe (one sweep yields both sums).
+        """
+        rate = self.decode_rate
+        eps = t + 1e-12
+        occ = 0.0
+        growing = 0
+        if self.sched.dynamic:
+            # anchors are at t (see _occupancy): decoded_at_last is exact
+            for r in self._running.values():
+                d = r.decoded_at_last
+                occ += r.req.spec.prefill + d
+                if r.prefill_done <= eps and d < r.req.spec.decode:
+                    growing += 1
+        else:
+            for r in self._running.values():
+                pf = r.prefill_done
+                d = r.d_base if t <= pf else r.d_base + (t - pf) * rate
+                cap = r.req.spec.decode
+                if cap - d < 1e-6:
+                    d = cap
+                occ += r.req.spec.prefill + d
+                if pf <= eps and d < cap:
+                    growing += 1
+        if growing == 0:
+            return float("inf")
+        return t + max(0.0, self.m - occ) / (growing * rate)
+
+    # ----------------------------------------------------------- accounting
+
+    def _credit(self, r: _Running, now: float) -> None:
+        """Credit service dealt to ``r`` since its own last accounting.
+
+        Decode totals are differences of the stable closed form, so they
+        telescope exactly over any partition; the KV token-time integral
+        telescopes in exact arithmetic (float association differs across
+        partitions, which only dynamic policies observe — and they refresh
+        on the reference's schedule, see :meth:`_refresh_all`).
+        """
+        dt_total = now - r.last_account
+        if dt_total <= 0:
+            return
+        dec_start = max(r.last_account, r.prefill_done)
+        dt_dec = max(0.0, now - dec_start)
+        new_decoded = r.decoded(now, self.decode_rate)
+        d_tokens = new_decoded - r.decoded_at_last
+        occ0 = r.req.spec.prefill + r.decoded_at_last
+        kv_tt = (occ0 * dt_total + 0.5 * d_tokens * dt_dec) * self.decode_rate
+        self.sched.on_service(
+            r.req.agent_id, kv_token_time=kv_tt, decode_tokens=d_tokens
+        )
+        if self._grouped:
+            self._dirty_agents.add(r.req.agent_id)
+        r.decoded_at_last = new_decoded
+        r.last_account = now
+
+    def _refresh_all(self, now: float) -> None:
+        """Bring every running sequence's service counters current.
+
+        Needed only for dynamic policies, whose admission keys read the
+        scheduler's per-agent service counters at decision time.  This is
+        the hot per-event O(running) sweep for VTC/SRJF, so the credit
+        arithmetic of :meth:`_credit` is inlined — the two must stay in
+        lockstep (the equivalence property tests pin both to the
+        reference core).
+        """
+        rate = self.decode_rate
+        on_service = self.sched.on_service
+        dirty = self._dirty_agents
+        for r in self._running.values():
+            la = r.last_account
+            dt_total = now - la
+            if dt_total <= 0.0:
+                continue
+            pf = r.prefill_done
+            d0 = r.decoded_at_last
+            if now <= pf:
+                new_decoded = r.d_base
+            else:
+                new_decoded = r.d_base + (now - pf) * rate
+            cap = r.req.spec.decode
+            if cap - new_decoded < 1e-6:
+                new_decoded = float(cap)        # snap (float Zeno)
+            dt_dec = now - pf if la <= pf else dt_total
+            if dt_dec < 0.0:
+                dt_dec = 0.0
+            d_tokens = new_decoded - d0
+            kv_tt = (
+                (r.req.spec.prefill + d0) * dt_total
+                + 0.5 * d_tokens * dt_dec
+            ) * rate
+            on_service(
+                r.req.agent_id, kv_token_time=kv_tt, decode_tokens=d_tokens
+            )
+            dirty.add(r.req.agent_id)
+            r.decoded_at_last = new_decoded
+            r.last_account = now
+
+    # ----------------------------------------------------- running-set ops
+
+    def _add_running(self, r: _Running, now: float) -> None:
+        r.order = self._order
+        self._order += 1
+        r.fin = r.finish_time(self.decode_rate)
+        self._running[r.req.rid] = r
+        if r.prefill_done > now + 1e-12:
+            heapq.heappush(
+                self._pref_heap, (r.prefill_done, r.req.rid, r.version)
+            )
+        heapq.heappush(self._fin_heap, (r.fin, r.req.rid, r.version))
+
+    def _remove_running(self, r: _Running) -> None:
+        del self._running[r.req.rid]
+        r.version += 1
+
+    # ------------------------------------------------------------ admission
+
+    def _resume(self, r: _Running, now: float, deferred: list) -> None:
+        r.swapped = False
+        r.last_account = now
+        r.prefill_done = max(r.prefill_done, now + self.swap_penalty)
+        r.d_base = r.decoded_at_last
+        self._add_running(r, now)
+        deferred.append(("on_swap_in", r.req.agent_id, r.req.rid, now))
+
+    def _admit(self, now: float) -> None:
+        """Admission pass: swapped queue first, then waiting (vLLM)."""
+        # listener emits are deferred past the timed window so the
+        # reported scheduler overhead measures policy code only
+        deferred: list[tuple] = []
+        t0 = _time.perf_counter()
+        free = self.m - self._occupancy(now)
+        # None (a policy without the version counter) => refresh falls back
+        # to sorting whenever the queue is dirty-or-dynamic, always safe
+        version = getattr(self.sched, "version", None)
+        if self._grouped and self._dirty_agents:
+            self._waiting.mark_dirty_many(self._dirty_agents)
+            self._swapped.mark_dirty_many(self._dirty_agents)
+            self._dirty_agents.clear()
+        # swapped queue has absolute priority and blocks new admissions
+        if self._swapped:
+            self._swapped.refresh(version)
+            while self._swapped:
+                r = self._swapped.peek()
                 need = r.req.spec.prefill + r.decoded_at_last
-                if need <= free:
-                    swapped.pop(0)
-                    r.swapped = False
-                    r.last_account = now
-                    r.prefill_done = max(r.prefill_done, now + self.swap_penalty)
-                    running.append(r)
-                    free -= need
-                    deferred.append(
-                        ("on_swap_in", r.req.agent_id, r.req.rid, now)
+                if need > free:
+                    break
+                self._swapped.popleft()
+                self._resume(r, now, deferred)
+                free -= need
+        if not self._swapped:
+            self._waiting.refresh(version)
+            while self._waiting:
+                req = self._waiting.peek()
+                # the fit check precedes admission so a pass can never push
+                # occupancy past M — except for a request larger than the
+                # whole pool, which would deadlock the backend; vLLM admits
+                # it alone and lets it thrash, so we admit it when the pool
+                # is otherwise idle
+                fits = req.spec.prefill <= free
+                solo_oversized = (
+                    not self._running and req.spec.prefill >= self.m
+                )
+                if not (fits or solo_oversized):
+                    break
+                static_key = (
+                    None if self.sched.dynamic else self._waiting.head_key()
+                )
+                self._waiting.popleft()
+                pf = now + req.spec.prefill / self.prefill_rate
+                self.sched.on_service(
+                    req.agent_id, prefill_tokens=req.spec.prefill
+                )
+                if self._grouped:
+                    self._dirty_agents.add(req.agent_id)
+                deferred.append(("on_admit", req.agent_id, req.rid, now))
+                self._add_running(
+                    _Running(
+                        req=req,
+                        admit_time=now,
+                        prefill_done=pf,
+                        d_base=0.0,
+                        decoded_at_last=0.0,
+                        last_account=now,
+                        key=static_key,
+                    ),
+                    now,
+                )
+                free -= req.spec.prefill
+                if free < 0:          # only reachable via solo_oversized
+                    break
+        elif not self._running:
+            # swapped head cannot fit but nothing is running: re-admit it
+            # anyway (its KV footprint is what it is — vLLM would page)
+            r = self._swapped.popleft()
+            self._resume(r, now, deferred)
+            free -= r.req.spec.prefill + r.decoded_at_last
+        self._decisions += 1
+        self._sched_clock += _time.perf_counter() - t0
+        # occupancy after the pass == M - remaining free (O(1) metric; the
+        # tracked ``free`` already absorbed every admission's footprint)
+        occ = self.m - free
+        if occ > self.result.peak_occupancy:
+            self.result.peak_occupancy = occ
+        for ev in deferred:
+            self._emit(*ev)
+
+    # ------------------------------------------------------ calendar peeks
+
+    def _peek_fin(self) -> float:
+        heap = self._fin_heap
+        while heap:
+            t, rid, ver = heap[0]
+            r = self._running.get(rid)
+            if r is None or r.version != ver:
+                heapq.heappop(heap)
+                continue
+            return t
+        return float("inf")
+
+    def _peek_pref(self) -> float:
+        # mirrors the reference probe min(pf for pf > t + 1e-12): an entry
+        # at or before the current instant is no longer a boundary (its
+        # sequence already counts as growing in the sweeps) and is purged
+        heap = self._pref_heap
+        eps = self.t + 1e-12
+        while heap:
+            t, rid, ver = heap[0]
+            r = self._running.get(rid)
+            if r is None or r.version != ver or t <= eps:
+                heapq.heappop(heap)
+                continue
+            return t
+        return float("inf")
+
+    # ------------------------------------------------------------ submission
+
+    def submit(self, agent: SimAgent) -> float:
+        """Register one agent online; arrival clamps to ``max(arrival, t)``."""
+        agent.arrival = max(float(agent.arrival), self.t)
+        self._by_id[agent.agent_id] = agent
+        heapq.heappush(self._arrivals, (agent.arrival, agent.agent_id, agent))
+        self._live_agents += 1
+        return agent.arrival
+
+    def _submit_stage(self, agent: SimAgent, now: float) -> None:
+        specs = agent.stages[agent.next_stage]
+        agent.next_stage += 1
+        agent.live_inferences += len(specs)
+        for spec in specs:
+            self._waiting.push(
+                Request(
+                    agent_id=agent.agent_id,
+                    rid=self._rid,
+                    spec=spec,
+                    submit_time=now,
+                    pred_cost=inference_cost(spec, agent.family),
+                )
+            )
+            self._rid += 1
+
+    # ------------------------------------------------------------ inspection
+
+    @property
+    def live_agents(self) -> int:
+        """Agents submitted but not yet completed (in-flight load)."""
+        return self._live_agents
+
+    @property
+    def busy(self) -> bool:
+        return bool(
+            self._arrivals or self._waiting or self._running or self._swapped
+        )
+
+    def occupancy_now(self) -> float:
+        """Current pool occupancy in KV-token units (anytime-safe)."""
+        t = self.t
+        rate = self.decode_rate
+        return sum(
+            r.req.spec.prefill + r.decoded(t, rate)
+            for r in self._running.values()
+        )
+
+    # ------------------------------------------------------------- stepping
+
+    def _step(self, until: float) -> bool:
+        """Process the next event at or before ``until``; False when none.
+
+        Event cascade mirrors the reference core: arrival > completion >
+        (prefill boundary, then the saturation condition).  Within one
+        event time multiple trips may fire — each processes exactly one
+        arrival or one completion batch or one swap, exactly like one trip
+        through the reference loop.
+        """
+        t_arr = self._arrivals[0][0] if self._arrivals else float("inf")
+        t_fin = self._peek_fin()
+        t_pref = self._peek_pref()
+        # the saturation probe is evaluated at the LAST EVENT time, not at
+        # self.t: after advance() raised the clock floor past the last
+        # event the two differ, and (a) for dynamic policies the anchors
+        # (valid only at the last refresh == last event) would read stale,
+        # (b) re-basing the linear extrapolation at the horizon would
+        # shift the probe in the last float bits.  Occupancy grows
+        # linearly, so the absolute saturation time is the same from any
+        # base point — and probing from the last event time keeps
+        # incremental runs bit-identical to one-shot drains, regardless
+        # of how often the driver polls advance().  Crediting the
+        # scheduler at horizon times is never allowed for the same
+        # reason: on_service partitions must depend only on true events.
+        t_sat = (
+            self._saturation_time(self._last_event_t)
+            if self._running
+            else float("inf")
+        )
+        t_next = min(t_arr, t_fin, t_sat, t_pref)
+        if t_next == float("inf"):
+            if self._waiting or self._swapped:
+                raise RuntimeError(
+                    "simulator deadlock: pool cannot fit pending work"
+                )
+            return False
+        if t_next > until:
+            return False
+        if (
+            len(self._running) == 1
+            and t_arr > until
+            and t_fin > until
+            and t_pref > until
+        ):
+            # single-sequence saturation stall: the only due candidate is
+            # the saturation probe, and its jump target (min(fin, next
+            # arrival) — both beyond the horizon here) is unreachable this
+            # advance().  Bail BEFORE mutating anything so repeated polls
+            # leave the event counter, the anchors, and the dynamic
+            # policies' service-credit partitions untouched.
+            return False
+        # clamp to the last EVENT time, not the raised clock floor: after
+        # advance() lifted self.t past the last event, processing a stalled
+        # event at the horizon would credit dynamic schedulers at
+        # poll-dependent times; _last_event_t is exactly where a one-shot
+        # drain's clock would stand (in batch runs self.t equals it here)
+        t = max(t_next, self._last_event_t)
+        self.t = max(self.t, t)
+        self._last_event_t = t
+        self.result.events += 1
+        if self.sched.dynamic:
+            # dynamic keys (and VTC's counter lift) read the service
+            # counters at decision time: replicate the reference's eager
+            # per-event accounting sweep at EVERY event, so the counters
+            # dynamic policies compare (often to exact ties) match the
+            # reference bit-for-bit
+            self._refresh_all(t)
+
+        # -- arrivals (one per trip, like the reference loop)
+        if t_arr <= t + 1e-12:
+            _, _, agent = heapq.heappop(self._arrivals)
+            _t0 = _time.perf_counter()
+            self.sched.on_agent_arrival(
+                agent.agent_id, agent.arrival, agent.predicted_cost
+            )
+            self._sched_clock += _time.perf_counter() - _t0
+            self._decisions += 1
+            self._emit("on_arrival", agent.agent_id, t)
+            self._submit_stage(agent, t)
+            self._admit(t)
+            return True
+
+        # -- completions: drain the finish calendar within the snap window
+        if t_fin <= t + self._fin_eps:
+            batch: list[_Running] = []
+            while True:
+                f = self._peek_fin()
+                if f > t + self._fin_eps:
+                    break
+                _, rid, _ = heapq.heappop(self._fin_heap)
+                batch.append(self._running[rid])
+            batch.sort(key=lambda r: r.order)   # reference processing order
+            for r in batch:
+                self._credit(r, t)               # snaps decoded to the cap
+                self._remove_running(r)
+                agent = self._by_id[r.req.agent_id]
+                agent.live_inferences -= 1
+                if agent.live_inferences == 0:
+                    self._emit(
+                        "on_stage_complete", agent.agent_id,
+                        agent.next_stage - 1, t,
+                    )
+                    if agent.next_stage < len(agent.stages):
+                        self._submit_stage(agent, t)
+                    else:
+                        agent.finish = t
+                        self.result.finish[agent.agent_id] = t
+                        self.result.jct[agent.agent_id] = t - agent.arrival
+                        self._live_agents -= 1
+                        _t0 = _time.perf_counter()
+                        self.sched.on_agent_complete(agent.agent_id, t)
+                        self._sched_clock += _time.perf_counter() - _t0
+                        self._emit("on_agent_complete", agent.agent_id, t)
+            self._admit(t)
+            return True
+
+        # (prefill boundaries are pure time barriers: the decode closed
+        # form needs no transition — the event only exists so the
+        # saturation probe is recomputed with the new growth rate.  The
+        # entry that triggered this trip is purged by the next _peek_pref.)
+
+        # -- saturation: swap out the worst-priority running inference
+        occ_sat = self._occupancy(t) if self._running else 0.0
+        if occ_sat >= self.m - 1e-6 and self._running:
+            if len(self._running) > 1:
+                t0 = _time.perf_counter()
+                if self.sched.dynamic:
+                    self.result.key_evals += len(self._running)
+                    victim = max(
+                        self._running.values(),
+                        key=lambda r: self.sched.request_key(r.req, t),
                     )
                 else:
-                    break
-            if not swapped:
-                waiting.sort(key=lambda r: self.sched.request_key(r, now))
-                while waiting and (
-                    waiting[0].spec.prefill <= free
-                    # a request larger than the whole pool would deadlock the
-                    # backend; vLLM admits it alone and lets it thrash — we
-                    # admit it when the pool is otherwise idle
-                    or (not running and waiting[0].spec.prefill >= self.m)
-                ):
-                    req = waiting.pop(0)
-                    pf = now + req.spec.prefill / self.prefill_rate
-                    self.sched.on_service(
-                        req.agent_id, prefill_tokens=req.spec.prefill
-                    )
-                    deferred.append(("on_admit", req.agent_id, req.rid, now))
-                    running.append(
-                        _Running(
-                            req=req,
-                            admit_time=now,
-                            prefill_done=pf,
-                            decoded_at_last=0.0,
-                            last_account=now,
-                        )
-                    )
-                    free -= req.spec.prefill
-                    if free < 0:
-                        break
-            elif not running:
-                # swapped head cannot fit but nothing is running: re-admit it
-                # anyway (its KV footprint is what it is — vLLM would page)
-                r = swapped.pop(0)
-                r.swapped = False
-                r.last_account = now
-                r.prefill_done = max(r.prefill_done, now + self.swap_penalty)
-                running.append(r)
-                deferred.append(("on_swap_in", r.req.agent_id, r.req.rid, now))
-            _decisions += 1
-            _sched_clock += _time.perf_counter() - t0
-            for ev in deferred:
-                self._emit(*ev)
-
-        def saturation_time(now: float) -> float:
-            """When does pool occupancy hit M at current decode rates?
-
-            Only sequences whose prefill has completed are growing; a
-            prefill completion is itself an event (see the main loop), after
-            which this is recomputed with the new rate.
-            """
-            occ = occupancy(now)
-            free = self.m - occ
-            growing = sum(
-                1
-                for r in running
-                if r.prefill_done <= now + 1e-12
-                and r.decoded(now, self.decode_rate) < r.req.spec.decode
-            )
-            if growing == 0:
-                return float("inf")
-            rate = growing * self.decode_rate
-            return now + max(0.0, free) / rate
-
-        # main event loop
-        while ai < len(arrivals) or waiting or running or swapped:
-            t_arr = arrivals[ai].arrival if ai < len(arrivals) else float("inf")
-            t_fin = min(
-                (r.finish_time(self.decode_rate) for r in running),
-                default=float("inf"),
-            )
-            t_pref = min(
-                (r.prefill_done for r in running if r.prefill_done > t + 1e-12),
-                default=float("inf"),
-            )
-            t_sat = saturation_time(t) if running else float("inf")
-            t_next = min(t_arr, t_fin, t_sat, t_pref)
-            if t_next == float("inf"):
-                # nothing running/finishing: only waiting items blocked by
-                # swapped priority or memory — should not happen if pool can
-                # fit smallest request; guard against deadlock
-                if waiting or swapped:
-                    raise RuntimeError(
-                        "simulator deadlock: pool cannot fit pending work"
-                    )
-                break
-            t_next = max(t_next, t)
-            account(t_next)
-            t = t_next
-
-            if t_arr <= t + 1e-12 and ai < len(arrivals):
-                agent = arrivals[ai]
-                ai += 1
-                _t0 = _time.perf_counter()
-                self.sched.on_agent_arrival(
-                    agent.agent_id, agent.arrival, agent.predicted_cost
-                )
-                _sched_clock += _time.perf_counter() - _t0
-                _decisions += 1
-                self._emit("on_arrival", agent.agent_id, t)
-                submit_stage(agent, t)
-                admit(t)
-                continue
-
-            # completions
-            done = [
-                r
-                for r in running
-                if r.decoded_at_last >= r.req.spec.decode - 1e-9
-                and t >= r.prefill_done - 1e-9
-            ]
-            if done:
-                for r in done:
-                    running.remove(r)
-                    agent = by_id[r.req.agent_id]
-                    agent.live_inferences -= 1
-                    if agent.live_inferences == 0:
-                        self._emit(
-                            "on_stage_complete", agent.agent_id,
-                            agent.next_stage - 1, t,
-                        )
-                        if agent.next_stage < len(agent.stages):
-                            submit_stage(agent, t)
-                        else:
-                            agent.finish = t
-                            result.finish[agent.agent_id] = t
-                            result.jct[agent.agent_id] = t - agent.arrival
-                            _t0 = _time.perf_counter()
-                            self.sched.on_agent_complete(agent.agent_id, t)
-                            _sched_clock += _time.perf_counter() - _t0
-                            self._emit(
-                                "on_agent_complete", agent.agent_id, t
-                            )
-                admit(t)
-                continue
-
-            # saturation: swap out the worst-priority running inference
-            if occupancy(t) >= self.m - 1e-6 and len(running) > 1:
-                victim = max(
-                    running, key=lambda r: self.sched.request_key(r.req, t)
-                )
-                running.remove(victim)
+                    # static policies: keys were cached at admission
+                    victim = max(self._running.values(), key=lambda r: r.key)
+                self._sched_clock += _time.perf_counter() - t0
+                self._credit(victim, t)
+                self._remove_running(victim)
                 victim.swapped = True
-                swapped.append(victim)
-                result.swaps += 1
+                self._swapped.push(victim)
+                self.result.swaps += 1
+                # the pre-swap occupancy (~M) is the true local maximum
+                if occ_sat > self.result.peak_occupancy:
+                    self.result.peak_occupancy = occ_sat
                 self._emit(
                     "on_swap_out", victim.req.agent_id, victim.req.rid, t
                 )
-                continue
-            if occupancy(t) >= self.m - 1e-6 and len(running) <= 1:
-                # single sequence saturating the pool: let it finish
-                # (assume p + d < M for all workloads; see App. B assumption)
-                r = running[0]
-                fin = r.finish_time(self.decode_rate)
-                account(fin)
-                t = fin
-                continue
+            else:
+                # single sequence saturating the pool: let it finish — but
+                # never past the next arrival, which must be processed on
+                # time (assume p + d < M for all workloads; App. B)
+                r = next(iter(self._running.values()))
+                fin = r.fin
+                if self._arrivals and self._arrivals[0][0] < fin:
+                    fin = self._arrivals[0][0]
+                if fin > until:
+                    # don't overshoot an advance() horizon: a later submit
+                    # would clamp its arrival to the overshot clock.  The
+                    # jump resumes in a later advance/drain; one-shot
+                    # drains (until=inf) never take this path.  Un-count
+                    # this trip: a one-shot drain performs the prefill
+                    # pops above AND the jump as ONE event, and the
+                    # resuming trip will re-count it.
+                    self.result.events -= 1
+                    return False
+                self._credit(r, fin)
+                self.t = fin
+                self._last_event_t = fin
+        return True
 
-        result.sched_decisions = _decisions
-        result.sched_time = _sched_clock
-        result.makespan = t
-        return result
+    # ------------------------------------------------------------ advancing
+
+    def advance(self, until: float) -> None:
+        """Process all events at or before ``until``; raise the clock floor."""
+        until = float(until)
+        while self._step(until):
+            pass
+        self.t = max(self.t, until)
+
+    def drain(self) -> SimResult:
+        """Serve everything submitted so far; cumulative results snapshot."""
+        while self._step(float("inf")):
+            pass
+        self.result.sched_decisions = self._decisions
+        self.result.sched_time = self._sched_clock
+        self.result.sorts = self._waiting.sorts + self._swapped.sorts
+        self.result.makespan = self._last_event_t
+        return dataclasses.replace(
+            self.result,
+            jct=dict(self.result.jct),
+            finish=dict(self.result.finish),
+        )
+
+    def run(self, agents: Sequence[SimAgent]) -> SimResult:
+        """One-shot wrapper: submit ``agents`` and drain (legacy surface)."""
+        for a in sorted(agents, key=lambda a: (a.arrival, a.agent_id)):
+            self.submit(a)
+        return self.drain()
