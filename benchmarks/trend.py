@@ -1,0 +1,195 @@
+"""Render BENCH_*.json artifacts into one markdown trend table.
+
+    PYTHONPATH=src python -m benchmarks.trend [PATHS...] [--out TREND.md]
+
+Closes the PR-3 ROADMAP follow-up ("a trend view over per-commit
+BENCH_sim.json artifacts would make regressions visible without reading
+JSON"): given any mix of sim-core (``benchmarks/perf.py``) and engine
+hot-path (``benchmarks/perf_engine.py``) benchmark files — the committed
+full-tier records and/or the per-commit ``*_quick`` CI artifacts — this
+renders one markdown document with the headline numbers per file and a
+per-cell breakdown, stamped with the commit it was produced at.
+
+With no PATHS it picks up every known BENCH file present at the repo
+root.  CI runs it at the end of the perf stage and uploads ``TREND.md``
+next to the JSON artifacts, so a reviewer reads one table instead of four
+JSON blobs; comparing two commits is diffing two TREND.md artifacts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_CANDIDATES = (
+    "BENCH_sim.json",
+    "BENCH_sim_quick.json",
+    "BENCH_engine.json",
+    "BENCH_engine_quick.json",
+)
+
+
+def _git_stamp() -> str:
+    try:
+        rev = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=REPO_ROOT, capture_output=True, text=True, timeout=10,
+        )
+        if rev.returncode == 0:
+            return rev.stdout.strip()
+    except Exception:
+        pass
+    return "unknown"
+
+
+def _fmt(x) -> str:
+    if isinstance(x, float):
+        return f"{x:,.1f}" if abs(x) >= 100 else f"{x:,.2f}"
+    if isinstance(x, int):
+        return f"{x:,}"
+    return str(x)
+
+
+def render_sim(name: str, data: dict) -> list[str]:
+    lines = [f"## {name} — simulator core (`benchmarks/perf.py`)", ""]
+    tier = "quick (CI)" if data.get("quick") else "full"
+    lines.append(
+        f"Tier: **{tier}** · seed {data.get('seed')} · oracle match: "
+        f"**{data.get('oracle', {}).get('match', '?')}** (max |Δ| "
+        f"{data.get('oracle', {}).get('max_abs_diff', float('nan')):.1e})"
+    )
+    lines.append("")
+    lines.append("| agents | scheduler | replicas | events/s | agents/s "
+                 "| sorts | swaps |")
+    lines.append("|---:|---|---:|---:|---:|---:|---:|")
+    for row in data.get("optimized", []):
+        lines.append(
+            f"| {row['agents']:,} | {row['scheduler']} "
+            f"| {row.get('replicas', 1)} | {_fmt(row['events_per_s'])} "
+            f"| {_fmt(row['agents_per_s'])} | {_fmt(row.get('sorts', 0))} "
+            f"| {_fmt(row.get('swaps', 0))} |"
+        )
+    speedup = data.get("speedup", {})
+    if speedup:
+        parts = [
+            f"{n} agents: " + ", ".join(
+                f"{s} {v}x" for s, v in per.items()
+            )
+            for n, per in speedup.items()
+        ]
+        lines += ["", "Speedup vs pre-rewrite reference core — "
+                  + "; ".join(parts)]
+    if "speedup_10k_min" in data:
+        lines.append(
+            f"**Acceptance (10k tier): min speedup "
+            f"{data['speedup_10k_min']}x.**"
+        )
+    lines.append("")
+    return lines
+
+
+def render_engine(name: str, data: dict) -> list[str]:
+    lines = [f"## {name} — serving engine hot path "
+             "(`benchmarks/perf_engine.py`)", ""]
+    tier = "quick (CI)" if data.get("quick") else "full"
+    oracle = data.get("oracle", {})
+    sim_eq = data.get("sim_equivalence", {})
+    lines.append(
+        f"Tier: **{tier}** · seed {data.get('seed')} · engine oracle "
+        f"match: **{oracle.get('match', '?')}** "
+        f"({oracle.get('cells', '?')} cells x "
+        f"{oracle.get('rounds_checked_per_cell', '?')} rounds) · "
+        f"sim order equivalence: **{sim_eq.get('match', '?')}** "
+        f"({', '.join(sim_eq.get('schedulers', []))})"
+    )
+    lines.append("")
+    lines.append("| scheduler | pressure | optimized it/s | baseline it/s "
+                 "| speedup | avg window | swaps | host syncs/step |")
+    lines.append("|---|---|---:|---:|---:|---:|---:|---:|")
+    for cell in data.get("cells", []):
+        o, b = cell["optimized"], cell["baseline"]
+        lines.append(
+            f"| {cell['scheduler']} | {cell['pressure']} "
+            f"| {_fmt(o['iters_per_s'])} | {_fmt(b['iters_per_s'])} "
+            f"| {cell['speedup']}x | {o.get('avg_window', '-')} "
+            f"| {_fmt(o['swaps'])} "
+            f"| {o.get('host_syncs_per_decode_step', '-')} |"
+        )
+    lines += [
+        "",
+        f"**Speedup vs pre-rewrite engine: min "
+        f"{data.get('speedup_min')}x, geomean "
+        f"{data.get('speedup_geomean')}x** · host syncs per decode step "
+        f"<= {data.get('host_syncs_per_decode_step_max')}",
+        "",
+    ]
+    return lines
+
+
+RENDERERS = {
+    "sim_core_perf": render_sim,
+    "engine_hot_path_perf": render_engine,
+}
+
+
+def render(paths: list[Path]) -> str:
+    lines = [
+        "# Perf trend — tracked BENCH artifacts",
+        "",
+        f"Commit: `{_git_stamp()}`.  Sources: "
+        + ", ".join(f"`{p.name}`" for p in paths)
+        + ".  Regenerate with `python -m benchmarks.trend`.",
+        "",
+    ]
+    for path in paths:
+        data = json.loads(path.read_text())
+        renderer = RENDERERS.get(data.get("benchmark"))
+        if renderer is None:
+            lines += [f"## {path.name}", "",
+                      f"(unknown benchmark kind "
+                      f"`{data.get('benchmark')}` — skipped)", ""]
+            continue
+        lines += renderer(path.name, data)
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> str:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="*",
+                    help="BENCH json files (default: all known ones "
+                         "present at the repo root)")
+    ap.add_argument("--out", default=None,
+                    help="also write the markdown here (e.g. TREND.md)")
+    args = ap.parse_args(argv)
+
+    if args.paths:
+        paths = [Path(p) for p in args.paths]
+        missing = [p for p in paths if not p.exists()]
+        if missing:
+            raise SystemExit(
+                f"missing BENCH files: {[str(p) for p in missing]}"
+            )
+    else:
+        paths = [
+            REPO_ROOT / name
+            for name in DEFAULT_CANDIDATES
+            if (REPO_ROOT / name).exists()
+        ]
+        if not paths:
+            raise SystemExit(
+                "no BENCH_*.json found at the repo root; run "
+                "benchmarks.perf / benchmarks.perf_engine first"
+            )
+    md = render(paths)
+    print(md, end="")
+    if args.out:
+        Path(args.out).write_text(md)
+        print(f"(wrote {args.out})")
+    return md
+
+
+if __name__ == "__main__":
+    main()

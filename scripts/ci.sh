@@ -5,11 +5,13 @@
 #                 multi-replica (ReplicatedBackend + router), ~40s CPU;
 #   2. tier-1   — the default pytest tier (slow-marked kernel/model-zoo/
 #                 training sweeps are deselected via addopts);
-#   3. perf     — `benchmarks/perf.py --quick`: the 1k-agent sim-core
-#                 benchmark, which first PROVES the event-indexed core
-#                 behaviour-identical to the retained pre-rewrite oracle
-#                 on a seeded workload, then records throughput to
-#                 BENCH_sim.json (uploaded as a CI artifact);
+#   3. perf     — `benchmarks/perf.py --quick` (sim core) and
+#                 `benchmarks/perf_engine.py --quick` (engine hot path):
+#                 each first PROVES the optimized core behaviour-identical
+#                 to its retained pre-rewrite oracle on seeded workloads,
+#                 then records throughput (BENCH_sim_quick.json /
+#                 BENCH_engine_quick.json); `benchmarks/trend.py` renders
+#                 every BENCH artifact into TREND.md (all uploaded in CI);
 #   4. slow     — `pytest -m slow`: the full kernel/model/training sweeps.
 #                 Run as its own stage so a Pallas-on-CPU container gap
 #                 cannot mask a broken scheduler/serving path.
@@ -52,10 +54,16 @@ echo "== tier-1: pytest (slow tier deselected) =="
 python -m pytest -x -q
 
 echo "== perf: benchmarks/perf.py --quick (oracle + 1k sim-core bench) =="
-# separate output path: the committed BENCH_sim.json is the FULL-tier
-# record (10k acceptance numbers) and must not be overwritten by the
-# quick stage
+# separate output paths: the committed BENCH_sim.json / BENCH_engine.json
+# are the FULL-tier records (acceptance numbers) and must not be
+# overwritten by the quick stage
 python -m benchmarks.perf --quick --out BENCH_sim_quick.json
+
+echo "== perf: benchmarks/perf_engine.py --quick (engine oracle + hot-path bench) =="
+python -m benchmarks.perf_engine --quick --out BENCH_engine_quick.json
+
+echo "== perf: benchmarks/trend.py -> TREND.md =="
+python -m benchmarks.trend --out TREND.md > /dev/null
 
 if [[ "${1:-}" == "--slow" ]]; then
     echo "== slow tier: pytest -m slow =="

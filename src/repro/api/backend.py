@@ -236,6 +236,7 @@ class EngineBackend:
         max_batch: int = 8,
         cache_len: int = 512,
         prefill_chunk: int = 512,
+        max_window: int = 32,
         token_scale: int = 1,
         time_scale: float = 1.0,
         seed: int = 0,
@@ -251,6 +252,7 @@ class EngineBackend:
             max_batch=max_batch,
             cache_len=cache_len,
             prefill_chunk=prefill_chunk,
+            max_window=max_window,
         )
         self.scheduler = sched
         self.token_scale = int(token_scale)

@@ -118,10 +118,13 @@ class OrderedQueue:
         key = self.key_fn(item)
         self.key_evals += 1
         self._insort(item, key)
+        # sorted modes cache every item's key: refresh uses it to extract
+        # stale grouped items, remove() uses it to locate an arbitrary item
+        # in O(log n) instead of a linear scan
+        self._item_key[id(item)] = key
         if self.grouped:
             g = self.group_fn(item)
             self._group_items.setdefault(g, []).append(item)
-            self._item_key[id(item)] = key
             # the key was sampled at push time; revalidate at next refresh
             # in case the group's counters move before the next decision
             self._dirty_groups.add(g)
@@ -195,6 +198,31 @@ class OrderedQueue:
     def peek(self) -> Any:
         return self._items[self._head]
 
+    def peek_right(self) -> Any:
+        """Item with the WORST key (sorted modes: the tail).
+
+        Call ``refresh`` first under a dynamic policy — exactly as for
+        ``peek`` — or the tail may be stale.  This is what backends use for
+        swap-victim selection: the running set ordered by scheduler key has
+        its eviction candidate at the right end.
+        """
+        if self._head >= len(self._items):
+            # guard explicitly: when a popleft'd (tombstoned) prefix has
+            # not been compacted yet, _items[-1] would silently return a
+            # dead None slot instead of raising
+            raise IndexError("peek_right from empty OrderedQueue")
+        return self._items[-1]
+
+    def pop_right(self) -> Any:
+        """Remove and return the worst-key item (see ``peek_right``)."""
+        if self._head >= len(self._items):
+            raise IndexError("pop_right from empty OrderedQueue")
+        item = self._items.pop()
+        if not self.dynamic or self.grouped:
+            self._keys.pop()
+        self._forget(item)
+        return item
+
     def popleft(self) -> Any:
         head = self._head
         item = self._items[head]
@@ -204,6 +232,38 @@ class OrderedQueue:
         self._head = head + 1
         if self._head > 32 and self._head * 2 > len(self._items):
             self._compact()
+        self._forget(item)
+        return item
+
+    def remove(self, item: Any) -> None:
+        """Remove ``item`` (identity comparison) from anywhere in the queue.
+
+        Sorted modes locate it through its cached key — O(log n) bisect
+        plus a scan over equal-key siblings (built-in policies tie-break on
+        ``rid``, so keys are unique and the scan is O(1)).  Plain dynamic
+        mode has no key cache and falls back to a linear identity scan.
+        Backends use this to retire a running-set entry on completion.
+        """
+        if self.dynamic and not self.grouped:
+            for i in range(self._head, len(self._items)):
+                if self._items[i] is item:
+                    del self._items[i]
+                    return
+            raise ValueError("item not in queue")
+        key = self._item_key[id(item)]
+        i = bisect.bisect_left(self._keys, key, self._head)
+        # identity scan over equal-key siblings (cf. popleft: __eq__ on
+        # items is not usable — fields like numpy prompts don't compare)
+        while self._items[i] is not item:
+            i += 1
+        del self._keys[i]
+        del self._items[i]
+        self._forget(item)
+
+    def _forget(self, item: Any) -> None:
+        """Drop the key cache / group bookkeeping of a removed item."""
+        if not self.dynamic or self.grouped:
+            self._item_key.pop(id(item), None)
         if self.grouped:
             g = self.group_fn(item)
             bucket = self._group_items[g]
@@ -217,8 +277,6 @@ class OrderedQueue:
             if not bucket:
                 del self._group_items[g]
                 self._dirty_groups.discard(g)
-            del self._item_key[id(item)]
-        return item
 
     def head_key(self) -> Any:
         """Cached key of the head (sorted modes only)."""

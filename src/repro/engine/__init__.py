@@ -1,4 +1,9 @@
-"""Continuous-batching serving engine (vLLM semantics, JAX backend)."""
+"""Continuous-batching serving engine (vLLM semantics, JAX backend).
+
+``ServeEngine`` is the device-resident hot path; ``ReferenceServeEngine``
+(``repro.engine.reference``) is the frozen pre-rewrite core kept as the
+behavioural oracle and perf baseline for ``benchmarks/perf_engine.py``.
+"""
 
 from repro.engine.engine import (
     EngineAgent,
@@ -6,10 +11,12 @@ from repro.engine.engine import (
     EngineStalledError,
     ServeEngine,
 )
+from repro.engine.reference import ReferenceServeEngine
 
 __all__ = [
     "EngineAgent",
     "EngineRequest",
     "EngineStalledError",
+    "ReferenceServeEngine",
     "ServeEngine",
 ]

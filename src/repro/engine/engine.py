@@ -27,11 +27,60 @@ An optional ``listener`` receives lifecycle callbacks (``on_arrival``,
 ``on_admit``, ``on_swap_out``, ``on_swap_in``, ``on_token``,
 ``on_stage_complete``, ``on_agent_complete``) — duck-typed so this module
 stays independent of the API layer that consumes the events.
+
+Device-resident hot path (PR 4)
+-------------------------------
+The per-iteration work is batch-oriented and stays on device; the frozen
+pre-rewrite core (``repro.engine.reference.ReferenceServeEngine``) is the
+behavioural oracle that pins these rules:
+
+* **Fused decode windows.**  Greedy sampling (argmax) is fused into the
+  jitted decode; ``slot_last_tok``/``slot_pos`` live on device (host
+  mirrors are kept for bookkeeping and rebuilt only when slot occupancy
+  changes).  Whenever the next K iterations are provably event-free — no
+  completion, no pending arrival due, and every running sequence's block
+  growth fits the pool — the engine runs K decode steps in ONE jitted
+  ``lax.scan`` and fetches the K x B sampled tokens with a single
+  device->host transfer, then replays the per-token bookkeeping (events,
+  scheduler service deals, allocator growth) host-side in exact per-step
+  order.  K is bucketed to powers of two (<= ``max_window``) to bound
+  compilations.
+* **Donated buffers.**  The KV cache and the slot tensors are donated to
+  every jitted hot-path call (decode window, prefill write, swap-in
+  scatter), so XLA updates them in place instead of rebuilding the full
+  cache per call.  Never reuse ``self.cache`` / ``self._d_*`` across a
+  call that donates them — always rebind from the outputs.
+* **Slot-wise swaps + staging pool.**  Swap-out gathers ONE slot's rows
+  (jitted ``big[:, slot]``) into a host staging buffer drawn from a free
+  pool (``self._staging``) so repeated swap cycles don't thrash large host
+  allocations; swap-in scatters the staged rows back through a jitted
+  donated ``big.at[:, slot].set``.
+* **Batched bucketed prefill.**  One admission pass admits up to
+  ``max_batch`` waiting requests and runs ONE multi-sequence prefill
+  (padded to the group's 64-token bucket, lens-masked, chunked by
+  ``prefill_chunk`` through ``Model.prefill_chunked``), scattering every
+  admitted slot's cache rows in the same jitted call that computes the
+  first sampled tokens.
+* **Consistent admission clock.**  Prefill iteration costs
+  (``ceil(p / prefill_chunk) - 1`` each) are accumulated and applied to
+  ``self.now`` ONCE at the end of the admission pass, so every admission
+  decision, scheduler key evaluation, and ``on_admit`` stamp within a pass
+  sees the same ``now``.  (The retired per-request mid-pass bump changed
+  ``now`` between admissions; scheduler keys must not read the clock, but
+  the stamps were inconsistent.)  Total clock advance per pass is
+  unchanged — completion iterations are bit-identical to the reference.
+* **O(log n) swap-victim selection.**  Running requests live in a third
+  ``OrderedQueue`` keyed like the waiting/swapped queues; the victim is
+  ``pop_right()`` (worst key) instead of an O(running) ``max()`` scan, and
+  swapped membership is an O(1) rid-set.  Scheduler ``Request`` views and
+  their ``kv_token_time`` costs are cached per request, so key evaluation
+  stops allocating.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import heapq
 from typing import Any, Optional
 
@@ -44,6 +93,82 @@ from repro.core.queueing import OrderedQueue
 from repro.core.schedulers import AgentScheduler, Request
 from repro.kvcache.allocator import BlockAllocator
 from repro.models import Model
+
+
+# --------------------------------------------------------------------------
+# Jitted hot-path kernels.  Module-level with the (frozen, hashable) Model
+# as a static argument so the XLA executable cache is shared across engine
+# instances — a benchmark sweep or a replicated fleet compiles each shape
+# once, not once per engine.  Donated buffers: callers must rebind cache /
+# slot tensors from the outputs and never touch the inputs again.
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=(3, 4))
+def _decode_window_jit(model, k: int, params, cache, state):
+    """K fused decode iterations: model.decode + greedy argmax + masked
+    slot advance, scanned on device.  ``state`` is the stacked (3, B)
+    int32 slot tensor [last_tok; pos; remaining]: one donated buffer, one
+    upload when slot occupancy changes.  A slot whose remaining budget
+    runs out mid-window freezes in place — exactly what the reference
+    engine's stale freed-slot rows look like — so a window may span final
+    completions.  Returns the K x B sampled tokens — the ONLY thing the
+    host needs per window."""
+
+    def body(carry, _):
+        cache, state = carry
+        last_tok, pos, rem = state
+        logits, cache = model.decode(params, cache, last_tok[:, None], pos)
+        nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+        live = rem > 0
+        state = jnp.stack([
+            jnp.where(live, nxt, last_tok),
+            jnp.where(live, pos + 1, pos),
+            rem - live.astype(rem.dtype),
+        ])
+        return (cache, state), nxt
+
+    (cache, state), toks = jax.lax.scan(
+        body, (cache, state), None, length=k
+    )
+    return cache, state, toks
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2), donate_argnums=(4,))
+def _prefill_write_jit(model, cache_len: int, chunk: int, params, cache,
+                       tokens, lens, slots):
+    """Batched (chunked) prefill + first-token argmax + scatter of every
+    admitted slot's cache rows, in one dispatch.  ``slots`` may contain
+    out-of-bounds padding entries (batch padded to a power of two to bound
+    compilations) — ``mode="drop"`` discards their rows."""
+    logits, small = model.prefill_chunked(
+        params, {"tokens": tokens, "lens": lens},
+        cache_len=cache_len, chunk=chunk,
+    )
+
+    def write(big, sm):
+        if big.ndim >= 2 and sm.shape[0] == big.shape[0]:
+            # layer-stacked tensors (L, B, ...): scatter rows `slots`
+            return big.at[:, slots].set(sm.astype(big.dtype), mode="drop")
+        return big
+
+    cache = jax.tree.map(write, cache, small)
+    nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+    return cache, nxt
+
+
+@jax.jit
+def _gather_slot_jit(cache, slot):
+    """One slot's cache rows (the swap-out unit), gathered on device."""
+    return jax.tree.map(lambda big: big[:, slot], cache)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_slot_jit(cache, small, slot):
+    """Write one slot's staged rows back into the (donated) cache."""
+    return jax.tree.map(
+        lambda big, sm: big.at[:, slot].set(sm), cache, small
+    )
 
 
 @dataclasses.dataclass
@@ -61,19 +186,31 @@ class EngineRequest:
     done: bool = False
     swapped_kv: Any = None         # host copy when swapped out
     _last_tok: int = 0
+    _sched_req: Optional[Request] = dataclasses.field(
+        default=None, repr=False
+    )
 
     @property
     def spec(self) -> InferenceSpec:
         return InferenceSpec(len(self.prompt), self.max_new_tokens)
 
     def to_sched_request(self) -> Request:
-        return Request(
-            agent_id=self.agent_id,
-            rid=self.rid,
-            spec=self.spec,
-            submit_time=float(self.submit_iter),
-            pred_cost=kv_token_time(len(self.prompt), self.max_new_tokens),
-        )
+        """Scheduler view of this request — built ONCE and cached.
+
+        Every field the built-in policies read (spec, submit time,
+        predicted cost) is immutable after submission, and ``kv_token_time``
+        is the expensive part; caching makes a key evaluation a couple of
+        attribute loads instead of a dataclass + cost-model allocation.
+        """
+        if self._sched_req is None:
+            self._sched_req = Request(
+                agent_id=self.agent_id,
+                rid=self.rid,
+                spec=self.spec,
+                submit_time=float(self.submit_iter),
+                pred_cost=kv_token_time(len(self.prompt), self.max_new_tokens),
+            )
+        return self._sched_req
 
 
 @dataclasses.dataclass
@@ -115,6 +252,7 @@ class ServeEngine:
         max_batch: int = 8,
         cache_len: int = 512,
         prefill_chunk: int = 512,
+        max_window: int = 32,
         listener: Any = None,
     ):
         self.model = model
@@ -125,19 +263,27 @@ class ServeEngine:
         self.max_batch = max_batch
         self.cache_len = cache_len
         self.prefill_chunk = prefill_chunk
+        self.max_window = max(1, int(max_window))
 
         self.cache = model.init_cache(params, max_batch, cache_len)
         self.slot_free = list(range(max_batch))
         self.slot_req: dict[int, EngineRequest] = {}
+        # host mirrors of the device-resident slot tensors: authoritative
+        # for bookkeeping (swap-out snapshots, stall reports) and the
+        # source for rebuilding the device copies when occupancy changes
         self.slot_last_tok = np.zeros(max_batch, np.int32)
         self.slot_pos = np.zeros(max_batch, np.int32)
+        self._d_state = jnp.zeros((3, max_batch), jnp.int32)
+        self._slots_stale = True   # device copy needs a rebuild
 
-        # waiting/swapped are the shared OrderedQueue (repro.core.queueing):
-        # static-key policies keep them sorted by construction; agent-keyed
-        # dynamic policies (VTC/SRJF) get grouped invalidation (only the
-        # freshly-serviced agents' requests reposition per admission pass);
-        # other dynamic policies re-sort lazily when the scheduler's
-        # version counter moves
+        # waiting/swapped/running share the OrderedQueue (repro.core.
+        # queueing): static-key policies keep them sorted by construction;
+        # agent-keyed dynamic policies (VTC/SRJF) get grouped invalidation
+        # (only the freshly-serviced agents' requests reposition per
+        # admission pass); other dynamic policies re-sort lazily when the
+        # scheduler's version counter moves.  The running queue orders the
+        # in-flight requests by the same key so the swap victim (WORST key)
+        # is its tail — O(log n) per eviction instead of an O(n) max scan.
         self._grouped = scheduler.dynamic and getattr(
             scheduler, "agent_keyed", False
         )
@@ -149,6 +295,11 @@ class ServeEngine:
         self.swapped: OrderedQueue = OrderedQueue(
             self._key, dynamic=scheduler.dynamic, group_fn=_gf
         )
+        self.running: OrderedQueue = OrderedQueue(
+            self._key, dynamic=scheduler.dynamic, group_fn=_gf
+        )
+        self._swapped_rids: set[int] = set()
+        self._staging: list[Any] = []   # free host KV slot buffers
         self.agents: dict[int, EngineAgent] = {}
         # future arrivals: (arrival_iter, submit order, agent) min-heap
         self.pending: list[tuple[int, int, EngineAgent]] = []
@@ -157,12 +308,61 @@ class ServeEngine:
         self._rid = 0
         self._submit_seq = 0
         self.metrics = {"prefills": 0, "decode_steps": 0, "swaps": 0,
-                        "tokens": 0, "sorts": 0, "key_evals": 0}
+                        "tokens": 0, "sorts": 0, "key_evals": 0,
+                        "host_syncs": 0, "windows": 0}
 
-        self._jit_decode = jax.jit(self.model.decode)
-        self._jit_prefill = jax.jit(
-            self.model.prefill, static_argnames=("cache_len",)
+    # -------------------------------------------------------------- warmup
+
+    def warmup(self, prompt_buckets: tuple[int, ...] = (64,)) -> None:
+        """Pre-compile the jitted hot path so serving never stalls on XLA
+        mid-run: every power-of-two decode window up to ``max_window``,
+        the batched prefill programs for the given 64-token prompt buckets
+        (every power-of-two batch pad), and the slot gather/scatter pair.
+        Recurrent families (ssm/hybrid/encdec) prefill at exact prompt
+        lengths, which warmup cannot know — their first admission per
+        distinct length still compiles lazily; only the attention-cache
+        families get fully precompiled prefills.
+
+        Runs the real programs against the engine's own (donated) buffers:
+        with no running slots the masked slot state is a no-op and the
+        prefill scatter targets only out-of-bounds (dropped) rows, so the
+        engine's observable state — clock, queues, metrics — is untouched.
+        Call before the first ``step()`` (or never: compilation then
+        happens lazily on first use, per shape).
+        """
+        if self.slot_req or self.busy:
+            raise RuntimeError("warmup must run on an idle engine")
+        k = 1
+        while k <= self.max_window:
+            self.cache, self._d_state, toks = _decode_window_jit(
+                self.model, k, self.params, self.cache, self._d_state
+            )
+            jax.block_until_ready(toks)
+            k <<= 1
+        batched_ok = self.model.cfg.kind in ("dense", "moe", "vlm")
+        # cover the pow2 CEILING of max_batch: _prefill_batch pads a
+        # k-request pass to 1 << (k-1).bit_length(), which exceeds
+        # max_batch itself when max_batch is not a power of two
+        pad_cap = (
+            1 << (self.max_batch - 1).bit_length() if batched_ok else 1
         )
+        k_pad = 1
+        while k_pad <= pad_cap:
+            for bucket in prompt_buckets:
+                toks = jnp.zeros((k_pad, bucket), jnp.int32)
+                lens = jnp.ones((k_pad,), jnp.int32)
+                slots = jnp.full((k_pad,), self.max_batch, jnp.int32)
+                self.cache, nxt = _prefill_write_jit(
+                    self.model, self.cache_len, self.prefill_chunk,
+                    self.params, self.cache, toks, lens, slots,
+                )
+                jax.block_until_ready(nxt)
+            k_pad <<= 1
+        small = _gather_slot_jit(self.cache, 0)
+        host = jax.tree.map(np.array, small)
+        self.cache = _scatter_slot_jit(self.cache, host, 0)
+        jax.block_until_ready(self.cache)
+        self._slots_stale = True
 
     # ------------------------------------------------------------- events
 
@@ -233,12 +433,25 @@ class ServeEngine:
 
     # ----------------------------------------------------------- stepping
 
-    def step(self) -> None:
-        """One engine iteration: release arrivals, admit, one decode step."""
+    def step(self, limit: Optional[int] = None) -> int:
+        """Advance the engine: release arrivals, admit, decode.
+
+        Returns the number of iterations consumed (>= 1): when the next K
+        iterations are provably event-free the decode runs as one fused
+        K-step window (see module doc) and the clock advances by K.
+        ``limit`` caps the advance (``run`` passes ``until - now``).
+        """
+        start = self.now
         self._release_arrivals()
         self._admit()
-        self._decode_once()
+        if limit is not None:
+            # the admission pass may itself advance the clock (chunked
+            # prefill cost); shrink the decode budget so a fused window
+            # never runs past the caller's `until` horizon
+            limit = max(1, int(limit) - (self.now - start))
+        k = self._decode_once(limit)
         self.now += 1
+        return k
 
     @property
     def busy(self) -> bool:
@@ -261,13 +474,14 @@ class ServeEngine:
                     if self.now >= until:
                         break
                     continue
-            self.step()
+            self.step(until - self.now)
 
     def run_until_idle(self, max_iters: int = 200_000) -> dict[int, int]:
         """Drain every queue (including pending future arrivals).
 
-        ``max_iters`` budgets *executed* steps, not the clock value — idle
-        gaps before scheduled arrivals are jumped in O(1) and don't count.
+        ``max_iters`` budgets *executed* iterations (fused decode windows
+        count their full width), not wall steps — idle gaps before
+        scheduled arrivals are jumped in O(1) and don't count.
         """
         steps = 0
         while self.busy or self.pending:
@@ -280,8 +494,7 @@ class ServeEngine:
             if not self.busy:
                 # idle gap before the next scheduled arrival: jump the clock
                 self.now = max(self.now, int(self.pending[0][0]))
-            self.step()
-            steps += 1
+            steps += self.step()
         return dict(self.completions)
 
     def _stall_report(self, max_iters: int) -> str:
@@ -305,7 +518,18 @@ class ServeEngine:
     # ----------------------------------------------------------- admission
 
     def _key(self, req: EngineRequest):
+        # NB: the clock argument is the PASS-consistent `now` — scheduler
+        # keys must not read it (see repro.core.queueing module doc); it is
+        # passed only to satisfy the policy signature.
         return self.sched.request_key(req.to_sched_request(), float(self.now))
+
+    def _apply_dirty(self) -> None:
+        """Propagate freshly-serviced agents to all grouped queues."""
+        if self._grouped and self._dirty_agents:
+            self.waiting.mark_dirty_many(self._dirty_agents)
+            self.swapped.mark_dirty_many(self._dirty_agents)
+            self.running.mark_dirty_many(self._dirty_agents)
+            self._dirty_agents.clear()
 
     def _admit(self) -> None:
         # swapped queue has absolute priority and blocks the waiting queue.
@@ -313,95 +537,143 @@ class ServeEngine:
         # construction), a grouped repositioning for agent-keyed dynamic
         # ones, and a lazy version-gated re-sort otherwise.
         version = getattr(self.sched, "version", None)
-        if self._grouped and self._dirty_agents:
-            self.waiting.mark_dirty_many(self._dirty_agents)
-            self.swapped.mark_dirty_many(self._dirty_agents)
-            self._dirty_agents.clear()
+        self._apply_dirty()
         self.swapped.refresh(version)
         while self.swapped and self.slot_free:
             req = self.swapped.peek()
             if not self.alloc.swap_in(req.rid):
                 break
             self.swapped.popleft()
+            self._swapped_rids.discard(req.rid)
             self._restore_slot(req)
         if self.swapped:
             self._sync_queue_metrics()
             return
         self.waiting.refresh(version)
-        while self.waiting and self.slot_free:
+        batch: list[EngineRequest] = []
+        while self.waiting and len(self.slot_free) > len(batch):
             req = self.waiting.peek()
             if not self.alloc.can_admit(len(req.prompt) + 1):
                 break
             self.waiting.popleft()
             self.alloc.admit(req.rid, len(req.prompt))
-            self._prefill_into_slot(req)
-            self._emit("on_admit", req.agent_id, req.rid, float(self.now))
+            batch.append(req)
+        if batch:
+            self._prefill_batch(batch)
         self._sync_queue_metrics()
 
     def _sync_queue_metrics(self) -> None:
-        self.metrics["sorts"] = self.waiting.sorts + self.swapped.sorts
+        self.metrics["sorts"] = (
+            self.waiting.sorts + self.swapped.sorts + self.running.sorts
+        )
         self.metrics["key_evals"] = (
-            self.waiting.key_evals + self.swapped.key_evals
+            self.waiting.key_evals
+            + self.swapped.key_evals
+            + self.running.key_evals
         )
 
     # ------------------------------------------------------------- prefill
 
-    def _prefill_into_slot(self, req: EngineRequest) -> None:
-        slot = self.slot_free.pop()
-        req.slot = slot
-        self.slot_req[slot] = req
-        p = len(req.prompt)
-        prompt = req.prompt
-        if self.model.cfg.kind in ("dense", "moe", "vlm"):
-            # bucket prompt lengths to multiples of 64 to bound the number
-            # of prefill compilations; the lens mask keeps logits exact
-            bucket = -(-max(p, 1) // 64) * 64
-            prompt = np.pad(prompt, (0, bucket - p))
-        toks = jnp.asarray(prompt[None, :], jnp.int32)
-        logits, small_cache = self._jit_prefill(
-            self.params,
-            {"tokens": toks, "lens": jnp.asarray([p], jnp.int32)},
-            cache_len=self.cache_len,
-        )
-        self._write_cache_slot(slot, small_cache)
-        nxt = int(jnp.argmax(logits[0, -1]))
-        self.slot_last_tok[slot] = nxt
-        self.slot_pos[slot] = p
+    def _prefill_batch(self, batch: list[EngineRequest]) -> None:
+        """Prefill every admitted request of this pass.
+
+        Attention-cache families run as ONE bucketed multi-sequence prefill
+        (padded to the group's 64-token bucket and to a power-of-two batch;
+        the lens mask keeps logits exact and invalid cache slots
+        unattendable, out-of-bounds padding slots are scatter-dropped).
+        Recurrent families (ssm/hybrid/encdec) prefill one sequence at a
+        time — padding would pollute their recurrent state — but still go
+        through the jitted scatter write.  The iteration cost of the pass,
+        sum(ceil(p/prefill_chunk) - 1), is applied to the clock ONCE at the
+        end so every admission decision and event stamp of the pass sees a
+        consistent ``now``.
+        """
+        now0 = self.now
+        batched_ok = self.model.cfg.kind in ("dense", "moe", "vlm")
+        groups = [batch] if batched_ok else [[r] for r in batch]
+        for group in groups:
+            k = len(group)
+            for req in group:
+                req.slot = self.slot_free.pop()
+                self.slot_req[req.slot] = req
+            plens = [len(req.prompt) for req in group]
+            if batched_ok:
+                # bucket prompt lengths to multiples of 64 and the batch to
+                # a power of two: each bucket compiles O(log max_batch)
+                # prefill programs, padding rows cost only a little wasted
+                # compute
+                bucket = max(-(-max(p, 1) // 64) * 64 for p in plens)
+                k_pad = 1 << (k - 1).bit_length() if k > 1 else 1
+            else:
+                bucket = max(max(p, 1) for p in plens)
+                k_pad = 1
+            toks = np.zeros((k_pad, bucket), np.int32)
+            lens = np.ones(k_pad, np.int32)              # dummy rows: 1 tok
+            slots = np.full(k_pad, self.max_batch, np.int32)   # OOB: dropped
+            for i, req in enumerate(group):
+                toks[i, : plens[i]] = req.prompt
+                lens[i] = plens[i]
+                slots[i] = req.slot
+            self.cache, nxt = _prefill_write_jit(
+                self.model, self.cache_len, self.prefill_chunk,
+                self.params, self.cache,
+                jnp.asarray(toks), jnp.asarray(lens), jnp.asarray(slots),
+            )
+            nxt_host = np.asarray(nxt)[:k]
+            self.metrics["host_syncs"] += 1
+            for req, p, tok in zip(group, plens, nxt_host):
+                self.slot_last_tok[req.slot] = tok
+                self.slot_pos[req.slot] = p
+                self.running.push(req)
+                self.metrics["prefills"] += 1
+                self.sched.on_service(req.agent_id, prefill_tokens=float(p))
+                if self._grouped:
+                    self._dirty_agents.add(req.agent_id)
+                self._emit("on_admit", req.agent_id, req.rid, float(now0))
+        self._slots_stale = True
         # prefill costs ceil(p / prefill_chunk) iterations of engine time
-        self.now += max(1, -(-p // self.prefill_chunk)) - 1
-        self.metrics["prefills"] += 1
-        self.sched.on_service(req.agent_id, prefill_tokens=float(p))
-        if self._grouped:
-            self._dirty_agents.add(req.agent_id)
+        # per request; the accounting stays serial-equivalent (sum, exactly
+        # as the reference engine charged it) but lands after the pass
+        self.now = now0 + sum(
+            max(1, -(-p // self.prefill_chunk)) - 1
+            for p in (len(r.prompt) for r in batch)
+        )
 
-    def _write_cache_slot(self, slot: int, small_cache: dict) -> None:
-        """Copy a B=1 prefill cache into row ``slot`` of the engine cache."""
+    # --------------------------------------------------------------- swaps
 
-        def write(big, small):
-            if big.ndim >= 2 and small.shape[0] == big.shape[0]:
-                # layer-stacked tensors: (L, B, ...)
-                sl = small.shape[2] if small.ndim > 2 else None
-                return jax.lax.dynamic_update_slice_in_dim(
-                    big, small.astype(big.dtype), slot, axis=1
-                )
-            return big
-
-        self.cache = jax.tree.map(write, self.cache, small_cache)
+    def _stage_out(self, req: EngineRequest, slot: int) -> None:
+        """Copy slot ``slot``'s cache rows into a host staging buffer."""
+        dev = _gather_slot_jit(self.cache, slot)
+        self.metrics["host_syncs"] += 1
+        if self._staging:
+            buf = self._staging.pop()
+            for dst, src in zip(jax.tree.leaves(buf), jax.tree.leaves(dev)):
+                np.copyto(dst, np.asarray(src))
+            req.swapped_kv = buf
+        else:
+            # np.array (not asarray): on the CPU backend asarray is a
+            # zero-copy READ-ONLY view of device memory — the staging pool
+            # needs owned, writable host buffers it can recycle
+            req.swapped_kv = jax.tree.map(np.array, dev)
 
     def _restore_slot(self, req: EngineRequest) -> None:
         slot = self.slot_free.pop()
         req.slot = slot
         self.slot_req[slot] = req
-        self.cache = jax.tree.map(
-            lambda big, small: jax.lax.dynamic_update_slice_in_dim(
-                big, jnp.asarray(small)[:, None], slot, axis=1
-            ),
-            self.cache,
-            req.swapped_kv,
-        )
+        self.cache = _scatter_slot_jit(self.cache, req.swapped_kv, slot)
+        self.metrics["host_syncs"] += 1
+        # recycling the staged buffer is safe without an explicit sync: it
+        # is only overwritten inside a later _stage_out, whose device->host
+        # fetch of the gathered slot forces every in-flight ancestor of the
+        # cache — including this scatter, which is the only reader of the
+        # staged rows — to complete first
+        if len(self._staging) < 2 * self.max_batch:
+            self._staging.append(req.swapped_kv)
         req.swapped_kv = None
         self.slot_last_tok[slot] = req._last_tok
         self.slot_pos[slot] = len(req.prompt) + req.generated
+        self.running.push(req)
+        self._slots_stale = True
         self.metrics["swaps"] += 1
         self._emit("on_swap_in", req.agent_id, req.rid, float(self.now))
 
@@ -409,26 +681,155 @@ class ServeEngine:
         """Evict the running request with the WORST scheduler key."""
         if len(self.slot_req) <= 1:
             return False
-        slot, req = max(
-            self.slot_req.items(), key=lambda kv: self._key(kv[1])
-        )
-        req.swapped_kv = jax.tree.map(
-            lambda big: np.asarray(big[:, slot]), self.cache
-        )
+        self._apply_dirty()
+        self.running.refresh(getattr(self.sched, "version", None))
+        req = self.running.pop_right()
+        slot = req.slot
+        self._stage_out(req, slot)
         req._last_tok = int(self.slot_last_tok[slot])
         self.alloc.swap_out(req.rid)
         self.slot_req.pop(slot)
         self.slot_free.append(slot)
         req.slot = -1
         self.swapped.push(req)
+        self._swapped_rids.add(req.rid)
+        self._slots_stale = True
         self._emit("on_swap_out", req.agent_id, req.rid, float(self.now))
         return True
 
     # -------------------------------------------------------------- decode
 
-    def _decode_once(self) -> None:
+    def _refresh_device_slots(self) -> None:
+        """Rebuild the device slot tensor from the host mirrors (only
+        after slot occupancy changed: admit/swap/complete) — one upload."""
+        state = np.zeros((3, self.max_batch), np.int32)
+        state[0] = self.slot_last_tok
+        state[1] = self.slot_pos
+        for slot, req in self.slot_req.items():
+            state[2, slot] = req.max_new_tokens - req.generated
+        self._d_state = jnp.asarray(state)
+        self._slots_stale = False
+        self.metrics["host_syncs"] += 1
+
+    def _queued_admittable(self) -> bool:
+        """Could ANY queued request be (re-)admitted right now?
+
+        Evaluated after the current step's token growth: its swap-outs may
+        have freed more blocks than the growth consumed, making a request
+        that failed this pass's ``_admit`` fit again (the reference engine
+        would then admit it at the NEXT iteration — so a fused window must
+        not span it).  Free blocks and slots only shrink inside a window,
+        hence a False answer stays False for every step the window covers.
+        Static policies check only the HEAD — ``_admit`` never looks past
+        it and the order is frozen, so this is exact; dynamic policies may
+        promote any item by the next pass, so the whole queue is scanned
+        (long backlogs return a conservative True rather than pay an O(W)
+        scan per window).
+        """
+        if not self.slot_free:
+            return False          # both admission paths need a free slot
+        free = self.alloc.free_blocks
+        if free == 0:
+            return False
+        static = not self.sched.dynamic
+        if self.swapped:
+            # a non-empty swapped queue blocks the waiting queue entirely
+            if static:
+                s = self.alloc.seq(self.swapped.peek().rid)
+                return self.alloc.blocks_for(max(1, s.n_tokens)) <= free
+            if len(self.swapped) > 64:
+                return True
+            return any(
+                self.alloc.blocks_for(
+                    max(1, self.alloc.seq(req.rid).n_tokens)
+                ) <= free
+                for req in self.swapped
+            )
+        if self.waiting:
+            if static:
+                head = self.waiting.peek()
+                return self.alloc.blocks_for(len(head.prompt) + 1) <= free
+            if len(self.waiting) > 64:
+                return True
+            return any(
+                self.alloc.blocks_for(len(req.prompt) + 1) <= free
+                for req in self.waiting
+            )
+        return False
+
+    def _window_size(self, limit: Optional[int]) -> int:
+        """Largest provably scheduling-free decode window (pow2 capped).
+
+        A window of K iterations is safe iff within it (after the current
+        step's token growth has already been committed):
+
+        * no pending arrival comes due (K <= next arrival - now);
+        * no queued request could be admitted with the current pool state
+          (``_queued_admittable`` — free blocks/slots only shrink inside a
+          window, so the check holds for every covered step);
+        * every sequence's remaining token appends fit the block pool (so
+          swap-outs cannot trigger and the queues stay untouched);
+        * no completion that would SCHEDULE anything happens before the
+          window's last step.  With the queues empty a final-stage
+          completion schedules nothing — the freed slot cannot be refilled
+          and the device row freezes exactly like the reference engine's
+          stale freed slot — so the window may span it; a completion that
+          finishes a STAGE with a successor submits new work and bounds
+          the window instead.  With a backlog queued, every completion
+          frees a slot an admission could take, so the window ends at the
+          first one.
+        """
+        cap = self.max_window if limit is None else min(
+            self.max_window, max(1, int(limit))
+        )
+        if self.pending:
+            cap = min(cap, int(self.pending[0][0]) - self.now)
+        if cap <= 1:
+            return 1
+        if self.waiting or self.swapped:
+            if self._queued_admittable():
+                return 1
+            # backlog: a completion frees a slot -> window ends at the
+            # first one
+            for req in self.slot_req.values():
+                cap = min(cap, req.max_new_tokens - req.generated)
+        else:
+            # empty queues: only stage-submitting completions schedule.
+            # An agent's stage completes when its LAST live request does
+            # (queues empty => all its live requests are running here).
+            last_done: dict[int, int] = {}
+            for req in self.slot_req.values():
+                rem = req.max_new_tokens - req.generated
+                aid = req.agent_id
+                last_done[aid] = max(last_done.get(aid, 0), rem)
+            # never run past the final live completion — the reference
+            # idles there, so extra frozen steps would inflate the clock
+            cap = min(cap, max(last_done.values()))
+            for aid, t_stage in last_done.items():
+                agent = self.agents[aid]
+                if agent.next_stage < len(agent.stages):
+                    cap = min(cap, t_stage)
+        if cap <= 1:
+            return 1
+        bs = self.alloc.block_size
+        free = self.alloc.free_blocks
+        slack = []
+        for req in self.slot_req.values():
+            s = self.alloc.seq(req.rid)
+            slack.append(s.n_blocks * bs - s.n_tokens)
+
+        def blocks_needed(m: int) -> int:
+            return sum(max(0, -(-(m - sl) // bs)) for sl in slack)
+
+        while cap > 1 and blocks_needed(cap - 1) > free:
+            cap -= 1
+        if cap <= 1:
+            return 1
+        return 1 << (cap.bit_length() - 1)   # bucket: bounds compilations
+
+    def _decode_once(self, limit: Optional[int] = None) -> int:
         if not self.slot_req:
-            return
+            return 1
         # grow each running sequence by one token (may trigger swaps)
         for slot in sorted(self.slot_req):
             req = self.slot_req.get(slot)
@@ -437,47 +838,71 @@ class ServeEngine:
             while not self.alloc.append_token(req.rid):
                 if not self._swap_out_worst():
                     break
-                if not any(r.rid == req.rid for r in self.swapped):
+                if req.rid not in self._swapped_rids:
                     continue
                 break
             # note: if req itself was swapped out it no longer decodes
         active = sorted(self.slot_req)
         if not active:
-            return
-        toks = jnp.asarray(self.slot_last_tok[:, None], jnp.int32)
-        pos = jnp.asarray(self.slot_pos, jnp.int32)
-        logits, self.cache = self._jit_decode(
-            self.params, self.cache, toks, pos
+            return 1
+        k = self._window_size(limit)
+        snapshot = [(slot, self.slot_req[slot]) for slot in active]
+        if k > 1:
+            # commit the window's remaining token growth up front (the
+            # step-1 append already ran above; a request completing at
+            # window step r appends exactly r tokens, like the reference's
+            # per-step growth loop) — _window_size proved it all fits, so
+            # no swap decision is being skipped
+            for slot, req in snapshot:
+                extra = min(k, req.max_new_tokens - req.generated) - 1
+                if extra and not self.alloc.append_tokens(req.rid, extra):
+                    raise AssertionError("window over-committed the pool")
+        if self._slots_stale:
+            self._refresh_device_slots()
+        self.cache, self._d_state, toks_dev = _decode_window_jit(
+            self.model, k, self.params, self.cache, self._d_state
         )
-        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1), np.int32)
-        self.metrics["decode_steps"] += 1
+        toks = np.asarray(toks_dev)          # (k, B): THE per-window sync
+        self.metrics["host_syncs"] += 1
+        self.metrics["decode_steps"] += k
+        self.metrics["windows"] += 1
 
-        for slot in list(active):
-            req = self.slot_req.get(slot)
-            if req is None:
-                continue
-            req.generated += 1
-            self.metrics["tokens"] += 1
-            self._emit(
-                "on_token", req.agent_id, req.rid, int(nxt[slot]),
-                float(self.now),
-            )
-            self.slot_last_tok[slot] = nxt[slot]
-            self.slot_pos[slot] += 1
-            occ = len(req.prompt) + req.generated
-            self.sched.on_service(
-                req.agent_id, kv_token_time=float(occ), decode_tokens=1.0
-            )
-            if self._grouped:
-                self._dirty_agents.add(req.agent_id)
-            if req.generated >= req.max_new_tokens:
-                self._complete(slot, req)
+        # replay the per-token bookkeeping host-side in exact step order;
+        # a request whose budget ran out at an earlier window step is
+        # frozen (mirrors the device-side rem mask)
+        rem0 = {slot: req.max_new_tokens - req.generated
+                for slot, req in snapshot}
+        for i in range(k):
+            if i:
+                self.now += 1
+            for slot, req in snapshot:
+                if i >= rem0[slot]:
+                    continue
+                req.generated += 1
+                self.metrics["tokens"] += 1
+                self._emit(
+                    "on_token", req.agent_id, req.rid, int(toks[i, slot]),
+                    float(self.now),
+                )
+                self.slot_last_tok[slot] = toks[i, slot]
+                self.slot_pos[slot] += 1
+                occ = len(req.prompt) + req.generated
+                self.sched.on_service(
+                    req.agent_id, kv_token_time=float(occ), decode_tokens=1.0
+                )
+                if self._grouped:
+                    self._dirty_agents.add(req.agent_id)
+                if req.generated >= req.max_new_tokens:
+                    self._complete(slot, req)
+        return k
 
     def _complete(self, slot: int, req: EngineRequest) -> None:
         req.done = True
         self.alloc.release(req.rid)
         self.slot_req.pop(slot)
         self.slot_free.append(slot)
+        self.running.remove(req)
+        self._slots_stale = True
         agent = self.agents[req.agent_id]
         agent.live -= 1
         if agent.live == 0:

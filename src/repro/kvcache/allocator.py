@@ -39,6 +39,11 @@ class BlockAllocator:
         self._free: list[int] = list(range(self.n_blocks))
         self._seqs: dict[int, SeqAlloc] = {}
         self.swap_events = 0
+        # incremental occupancy counter: sum of n_tokens over LIVE (non-
+        # swapped) sequences, maintained by every mutator so used_tokens is
+        # O(1) — the engine reads it per admission pass and per decode
+        # window; check_invariants re-derives and asserts it
+        self._used_tokens = 0
 
     # ------------------------------------------------------------- queries
 
@@ -52,9 +57,7 @@ class BlockAllocator:
 
     @property
     def used_tokens(self) -> int:
-        return sum(
-            s.n_tokens for s in self._seqs.values() if not s.swapped
-        )
+        return self._used_tokens
 
     def blocks_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.block_size)
@@ -77,6 +80,7 @@ class BlockAllocator:
         blocks = [self._free.pop() for _ in range(need)]
         alloc = SeqAlloc(seq_id=seq_id, block_table=blocks, n_tokens=n_tokens)
         self._seqs[seq_id] = alloc
+        self._used_tokens += n_tokens
         return alloc
 
     def append_token(self, seq_id: int) -> bool:
@@ -90,6 +94,30 @@ class BlockAllocator:
                 return False
             s.block_table.append(self._free.pop())
         s.n_tokens += 1
+        self._used_tokens += 1
+        return True
+
+    def append_tokens(self, seq_id: int, k: int) -> bool:
+        """Grow a sequence by ``k`` tokens at once (all-or-nothing).
+
+        Equivalent to ``k`` successful ``append_token`` calls but O(new
+        blocks) instead of O(k): the engine's multi-iteration decode
+        windows pre-size ``k`` so every append is known to fit, then
+        commit the growth in one call.  Returns False (and allocates
+        nothing) if the pool cannot host all ``k`` tokens.
+        """
+        if k <= 0:
+            return True
+        s = self._seqs[seq_id]
+        if s.swapped:
+            raise ValueError(f"seq {seq_id} is swapped out")
+        need = self.blocks_for(s.n_tokens + k) - s.n_blocks
+        if need > len(self._free):
+            return False
+        for _ in range(need):
+            s.block_table.append(self._free.pop())
+        s.n_tokens += k
+        self._used_tokens += k
         return True
 
     def swap_out(self, seq_id: int) -> int:
@@ -103,6 +131,7 @@ class BlockAllocator:
         s.block_table = []
         s.swapped = True
         self.swap_events += 1
+        self._used_tokens -= s.n_tokens
         return freed
 
     def swap_in(self, seq_id: int) -> bool:
@@ -115,11 +144,14 @@ class BlockAllocator:
             return False
         s.block_table = [self._free.pop() for _ in range(need)]
         s.swapped = False
+        self._used_tokens += s.n_tokens
         return True
 
     def release(self, seq_id: int) -> None:
         s = self._seqs.pop(seq_id)
         self._free.extend(s.block_table)
+        if not s.swapped:
+            self._used_tokens -= s.n_tokens
 
     def check_invariants(self) -> None:
         owned = [b for s in self._seqs.values() for b in s.block_table]
@@ -129,3 +161,7 @@ class BlockAllocator:
         for s in self._seqs.values():
             if not s.swapped:
                 assert s.n_blocks * self.block_size >= s.n_tokens
+        live = sum(s.n_tokens for s in self._seqs.values() if not s.swapped)
+        assert self._used_tokens == live, (
+            f"used_tokens counter drifted: {self._used_tokens} != {live}"
+        )

@@ -65,6 +65,19 @@ def update_pos(kv_pos, pos, s):
     return jax.vmap(upd)(kv_pos, pos)
 
 
+def update_pos_masked(kv_pos, pos, s, lens):
+    """``update_pos`` with per-row valid lengths: positions at or beyond a
+    row's true length are written as -1 (invalid slot), so padded chunk
+    tails never become attendable cache entries."""
+
+    def upd(kp, p, ln):
+        new = p + jnp.arange(s, dtype=kp.dtype)
+        new = jnp.where(new < ln, new, jnp.array(-1, kp.dtype))
+        return jax.lax.dynamic_update_slice(kp, new, (p,))
+
+    return jax.vmap(upd)(kv_pos, pos, lens)
+
+
 def ring_update_cache(cache_kv, new_kv, pos):
     """SWA ring buffer: write one token at slot pos % T.  new_kv: (B,1,n,h)."""
     t = cache_kv.shape[1]
@@ -133,6 +146,42 @@ def dense_block_train(p, x, positions, cfg: ModelConfig, attn_mask_lens=None):
     else:
         y = gated_mlp(p["mlp"], h2)
     return x + y, (k, v, aux)
+
+
+def dense_block_chunk(p, x, pos, positions, lens, k_cache, v_cache, kv_pos,
+                      cfg: ModelConfig):
+    """S-token chunk step against a (non-ring) KV cache: the chunked-prefill
+    generalization of ``dense_block_decode``.
+
+    ``pos``: (B,) write offsets of the chunk; ``positions``: (B,S) absolute
+    query positions (``pos + arange(S)``); ``lens``: (B,) true prompt
+    lengths.  Chunk K/V is written into the cache first, then queries
+    attend over the whole cache — the causal rule ``kv_pos <= q_pos`` masks
+    future tokens *within* the chunk and ``kv_pos >= 0`` masks unwritten
+    slots and padded tails, so the result matches full-sequence prefill.
+    """
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k_new, v_new = attention_qkv(
+        p["attn"], h, positions, cfg.rope_theta, cfg.use_rope
+    )
+    k_cache = update_cache(k_cache, k_new, pos)
+    v_cache = update_cache(v_cache, v_new, pos)
+    kv_pos = update_pos_masked(kv_pos, pos, x.shape[1], lens)
+    att = attention_any(
+        q, k_cache, v_cache,
+        window=cfg.sliding_window,
+        q_positions=positions,
+        kv_positions=kv_pos,
+        kv_valid=kv_pos >= 0,
+    )
+    x = x + attention_out(p["attn"], att)
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        y, _ = moe_mlp(p["moe"], h2, top_k=cfg.top_k,
+                       capacity_factor=cfg.capacity_factor)
+    else:
+        y = gated_mlp(p["mlp"], h2)
+    return x + y, k_cache, v_cache, kv_pos
 
 
 def dense_block_decode(p, x, pos, k_cache, v_cache, kv_pos, cfg: ModelConfig,
@@ -609,6 +658,70 @@ class Model:
             return logits, cache
 
         raise ValueError(cfg.kind)
+
+    def prefill_chunked(self, params, batch: dict, cache_len: int,
+                        chunk: int):
+        """Chunked prefill: process the prompt ``chunk`` tokens at a time.
+
+        Same signature contract as :meth:`prefill` (returns last-position
+        logits and a decode cache) but bounds per-step activation memory to
+        ``B x chunk`` instead of ``B x S`` — the serving engine's
+        ``prefill_chunk`` knob maps directly onto this, so long prompts are
+        *actually* processed in chunk-sized slices rather than merely
+        accounted as multiple iterations.
+
+        Falls back to the one-shot :meth:`prefill` when chunking cannot
+        help or would change the result: prompts that fit in one chunk,
+        non-attention-cache families (recurrent state would need chunk
+        carry), MoE (GShard capacity routing is sequence-length dependent,
+        so per-chunk capacities drop different tokens than one-shot),
+        VLM image batches, and ring (sliding-window) caches smaller than
+        the prompt.
+        """
+        cfg = self.cfg
+        s = batch["tokens"].shape[1]
+        ring = bool(cfg.sliding_window) and min(
+            cache_len, cfg.sliding_window
+        ) < cache_len
+        if (
+            s <= chunk
+            or cfg.kind not in ("dense", "vlm")
+            or "embeds" in batch
+            or ring
+        ):
+            return self.prefill(params, batch, cache_len=cache_len)
+
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        lens = batch.get("lens", jnp.full((b,), s, jnp.int32))
+        cache = self.init_cache(params, b, cache_len)
+        k_cache, v_cache, kv_pos = cache["k"], cache["v"], cache["kv_pos"]
+        hidden = []
+        for c0 in range(0, s, chunk):
+            toks_c = tokens[:, c0:c0 + chunk]
+            sc = toks_c.shape[1]
+            positions = jnp.broadcast_to(
+                jnp.arange(c0, c0 + sc)[None], (b, sc)
+            )
+            pos0 = jnp.full((b,), c0, jnp.int32)
+            x = self._embed(params, toks_c, positions)
+
+            def body(carry, xs, positions=positions, pos0=pos0):
+                h = carry
+                lp, kc, vc, kp = xs
+                h, kc, vc, kp = dense_block_chunk(
+                    lp, h, pos0, positions, lens, kc, vc, kp, cfg
+                )
+                return h, (kc, vc, kp)
+
+            x, (k_cache, v_cache, kv_pos) = jax.lax.scan(
+                body, x, (params["blocks"], k_cache, v_cache, kv_pos)
+            )
+            hidden.append(x)
+        x = jnp.concatenate(hidden, axis=1)
+        cache = dict(cache, k=k_cache, v=v_cache, kv_pos=kv_pos)
+        logits = self._logits(params, _gather_last(x, lens))
+        return logits, cache
 
     def _fill_kv(self, cache, ks, vs, lens, s):
         """Copy prefill K/V (L,B,S,n,h) into the cache's first S slots."""

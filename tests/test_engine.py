@@ -133,9 +133,56 @@ def test_allocator_swap_cycle():
     a.check_invariants()
 
 
+def test_allocator_incremental_used_tokens_counter():
+    """used_tokens is an O(1) incremental counter (PR-4 satellite): every
+    mutator keeps it equal to the recomputed live-token sum, which
+    check_invariants asserts."""
+    a = BlockAllocator(total_tokens=160, block_size=16)
+    assert a.used_tokens == 0
+    a.admit(1, 33)
+    a.admit(2, 10)
+    assert a.used_tokens == 43
+    a.append_token(1)
+    assert a.used_tokens == 44
+    a.swap_out(1)
+    assert a.used_tokens == 10
+    assert a.swap_in(1)
+    assert a.used_tokens == 44
+    a.release(2)
+    assert a.used_tokens == 34
+    a.swap_out(1)
+    a.release(1)               # releasing a swapped seq: no live tokens
+    assert a.used_tokens == 0
+    a.check_invariants()
+
+
+def test_allocator_bulk_append_tokens():
+    """append_tokens(k) == k successful append_token calls, all-or-nothing
+    when the pool cannot host the growth (decode-window bulk commit)."""
+    a = BlockAllocator(total_tokens=96, block_size=16)
+    a.admit(1, 10)
+    assert a.append_tokens(1, 30)          # 10 -> 40 tokens, 3 blocks
+    assert a.seq(1).n_tokens == 40
+    assert a.seq(1).n_blocks == 3
+    assert a.used_tokens == 40
+    a.admit(2, 40)                          # 3 more blocks: pool now full
+    assert not a.append_tokens(1, 20)       # would need a 4th free block
+    assert a.seq(1).n_tokens == 40          # nothing partially applied
+    assert a.append_tokens(1, 8)            # fits in the last block
+    assert a.seq(1).n_tokens == 48
+    assert a.append_tokens(1, 0)
+    a.check_invariants()
+    b = BlockAllocator(total_tokens=96, block_size=16)
+    b.admit(7, 10)
+    b.swap_out(7)
+    with pytest.raises(ValueError):
+        b.append_tokens(7, 3)
+
+
 @given(
     ops=st.lists(
-        st.tuples(st.sampled_from(["admit", "grow", "release", "swap"]),
+        st.tuples(st.sampled_from(["admit", "grow", "growk", "release",
+                                   "swap"]),
                   st.integers(0, 7), st.integers(1, 90)),
         max_size=120,
     )
@@ -153,6 +200,8 @@ def test_allocator_invariants_random_ops(ops):
                 live[sid] = True
             elif op == "grow" and sid in live and not a.seq(sid).swapped:
                 a.append_token(sid)
+            elif op == "growk" and sid in live and not a.seq(sid).swapped:
+                a.append_tokens(sid, n % 24)
             elif op == "release" and sid in live:
                 a.release(sid)
                 del live[sid]

@@ -224,6 +224,76 @@ def test_ordered_queue_grouped_repositions_only_dirty_groups():
     assert [g for g, _ in q] == [1, 2]
 
 
+def test_ordered_queue_tail_access_and_remove_static():
+    """PR-4 engine running-set surface: worst-key access at the tail and
+    O(log n) arbitrary removal via the cached key (static mode)."""
+    q = OrderedQueue(lambda x: x, dynamic=False)
+    for v in [5, 1, 4, 1.5, 9]:
+        q.push(v)
+    assert q.peek_right() == 9
+    assert q.pop_right() == 9
+    assert list(q) == [1, 1.5, 4, 5]
+    q.remove(4)
+    assert list(q) == [1, 1.5, 5]
+    # removal interacts correctly with the dead popleft prefix
+    assert q.popleft() == 1
+    q.remove(5)
+    assert list(q) == [1.5]
+    assert q.pop_right() == 1.5
+    assert not q
+    # empty-queue guards, including after an uncompacted popleft prefix
+    # (the tail slot is then a dead tombstone, not an item)
+    with pytest.raises(IndexError):
+        q.peek_right()
+    with pytest.raises(IndexError):
+        q.pop_right()
+    q2 = OrderedQueue(lambda x: x, dynamic=False)
+    q2.push(7)
+    assert q2.popleft() == 7
+    with pytest.raises(IndexError):
+        q2.pop_right()
+    with pytest.raises(ValueError):
+        OrderedQueue(lambda x: x, dynamic=True).remove("missing")
+
+
+def test_ordered_queue_tail_and_remove_grouped_and_dynamic():
+    keys = {1: 10.0, 2: 20.0, 3: 30.0}
+
+    def key_fn(item):
+        gid, rid = item
+        return (keys[gid], rid)
+
+    q = OrderedQueue(key_fn, dynamic=True, group_fn=lambda it: it[0])
+    a, b, c = (1, 0), (2, 1), (3, 2)
+    for it in (a, b, c):
+        q.push(it)
+    q.refresh()
+    assert q.peek_right() == c
+    assert q.pop_right() == c            # group bookkeeping must shrink
+    q.mark_dirty(3)                      # no-op: group 3 is gone
+    q.refresh()
+    assert list(q) == [a, b]
+    q.remove(a)
+    assert list(q) == [b]
+    # grouped removal after a pending (unrefreshed) dirty mark still finds
+    # the item at its cached-key position
+    keys[2] = 5.0
+    q.mark_dirty(2)
+    q.remove(b)
+    assert not q
+
+    # plain dynamic mode: identity-scan removal
+    qd = OrderedQueue(lambda x: x, dynamic=True)
+    for v in (3, 1, 2):
+        qd.push(v)
+    qd.refresh()
+    assert qd.peek_right() == 3
+    qd.remove(2)
+    qd.refresh()
+    assert list(qd) == [1, 3]
+    assert qd.pop_right() == 3
+
+
 def test_grouped_queue_matches_full_resort_under_simulation():
     """Randomized: grouped invalidation must equal a full re-sort as long
     as only marked groups' keys move (the agent_keyed contract)."""
