@@ -17,9 +17,11 @@ produces the same agents — so numbers are comparable run-to-run and the
 oracle check is exact.
 
 ``--quick`` restricts to the 1k-agent tier (single replica sweep + oracle
-+ 1k speedup) so the perf stage stays a few seconds of CPU; the full run
-adds the 10k/50k tiers, the 4-replica fleet sweeps, and the 10k-agent
-reference comparison the acceptance gate reads (``speedup_10k``).
++ 1k speedup + a 300-session closed-loop/token-streaming cell) so the
+perf stage stays a few seconds of CPU; the full run adds the 10k/50k
+tiers, the 4-replica fleet sweeps, the 1000-session closed-loop cell,
+and the 10k-agent reference comparison the acceptance gate reads
+(``speedup_10k``).
 """
 
 from __future__ import annotations
@@ -207,6 +209,54 @@ def check_oracle(seed: int, n: int = 1000) -> dict:
     }
 
 
+def run_closed_loop(seed: int, n: int) -> dict:
+    """Closed-loop + token-streaming cell (tracked regime since PR 5).
+
+    Serves the closed-loop session family (multi-turn chat / react loops,
+    stages generated lazily and resubmitted mid-run) through
+    ``AgentService.sim`` twice — token streaming off and on — and asserts
+    the discretized ``token_events`` overlay leaves JCTs BIT-IDENTICAL
+    before recording both throughputs; ``streaming_overhead`` is the
+    tracked cost of the emission sweep.
+    """
+    from repro.api import AgentService, specs_from_closed_loop
+
+    rows = {}
+    for stream in (False, True):
+        rng = np.random.default_rng(seed)
+        specs = specs_from_closed_loop(rng, n, n * MEAN_INTERARRIVAL_S)
+        svc = AgentService.sim(
+            "justitia", total_kv=M_TOKENS, decode_rate=DECODE_RATE,
+            record_events=False, token_events=stream,
+        )
+        t0 = time.perf_counter()
+        svc.submit_many(specs)
+        res = svc.drain()
+        wall = time.perf_counter() - t0
+        assert len(res.finish) == n
+        rows[stream] = (res, wall)
+    base, streamed = rows[False][0], rows[True][0]
+    if base.jct != streamed.jct or base.finish != streamed.finish:
+        raise AssertionError(
+            "token_events overlay perturbed closed-loop JCTs"
+        )
+    wall_off, wall_on = rows[False][1], rows[True][1]
+    return {
+        "agents": n,
+        "scheduler": "justitia",
+        "turns": streamed.event_counts.get("StageCompleted", 0),
+        "tokens_streamed": streamed.event_counts.get("TokenGenerated", 0),
+        "wall_s_stream_off": round(wall_off, 4),
+        "wall_s_stream_on": round(wall_on, 4),
+        "agents_per_s": round(n / wall_on, 1),
+        "events_per_s": round(
+            streamed.metrics.get("events", 0) / wall_on, 1
+        ),
+        "streaming_overhead": round(wall_on / max(wall_off, 1e-9), 2),
+        "jct_identical": True,
+    }
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
@@ -222,6 +272,17 @@ def main(argv=None) -> dict:
     print("== oracle: optimized vs pre-rewrite reference (seeded 1k) ==")
     oracle = check_oracle(args.seed)
     print(f"   identical JCT/finish, max |delta| = {oracle['max_abs_diff']:.2e}")
+
+    n_cl = 300 if args.quick else 1000
+    print(f"== closed-loop + token-streaming cell ({n_cl} sessions) ==")
+    closed_loop = run_closed_loop(args.seed, n_cl)
+    print(
+        f"   {closed_loop['turns']} turns, "
+        f"{closed_loop['tokens_streamed']} tokens streamed, "
+        f"agents/s={closed_loop['agents_per_s']}, "
+        f"streaming overhead {closed_loop['streaming_overhead']}x "
+        f"(JCTs bit-identical)"
+    )
 
     optimized, reference = [], []
     for n in sizes:
@@ -275,6 +336,7 @@ def main(argv=None) -> dict:
             "schedulers": list(SCHEDULERS),
         },
         "oracle": oracle,
+        "closed_loop": closed_loop,
         "optimized": optimized,
         "reference": reference,
         "speedup": {str(k): v for k, v in speedups.items()},

@@ -87,6 +87,16 @@ def render_sim(name: str, data: dict) -> list[str]:
             f"**Acceptance (10k tier): min speedup "
             f"{data['speedup_10k_min']}x.**"
         )
+    cl = data.get("closed_loop")
+    if cl:
+        lines += [
+            "",
+            f"Closed-loop + token streaming ({cl['agents']} sessions, "
+            f"{cl['turns']} turns): {_fmt(cl['agents_per_s'])} agents/s, "
+            f"{_fmt(cl['tokens_streamed'])} tokens streamed, streaming "
+            f"overhead {cl['streaming_overhead']}x (JCTs bit-identical: "
+            f"{cl['jct_identical']}).",
+        ]
     lines.append("")
     return lines
 
@@ -126,6 +136,16 @@ def render_engine(name: str, data: dict) -> list[str]:
         f"<= {data.get('host_syncs_per_decode_step_max')}",
         "",
     ]
+    cl = data.get("closed_loop")
+    if cl:
+        lines += [
+            f"Closed-loop serving ({cl['agents_per_round']} sessions/round, "
+            f"{cl['turns_timed']} turns over {cl['rounds']} timed rounds): "
+            f"{_fmt(cl['iters_per_s'])} it/s, "
+            f"{_fmt(cl['tokens_per_s'])} tok/s, avg window "
+            f"{cl['avg_window']}, swaps {_fmt(cl['swaps'])}.",
+            "",
+        ]
     return lines
 
 

@@ -3,14 +3,22 @@
 #
 #   1. smokes   — the serving launcher on BOTH backends, single and
 #                 multi-replica (ReplicatedBackend + router), ~40s CPU;
-#   2. tier-1   — the default pytest tier (slow-marked kernel/model-zoo/
-#                 training sweeps are deselected via addopts);
+#   2. tier-1   — the cross-backend event-conformance suite first (its
+#                 own named gate: the lifecycle-grammar contract every
+#                 backend must satisfy), then the default pytest tier
+#                 (slow-marked kernel/model-zoo/training sweeps are
+#                 deselected via addopts; the full tier re-runs the
+#                 conformance file — cheap, and -x keeps one red gate
+#                 from hiding behind another);
 #   3. perf     — `benchmarks/perf.py --quick` (sim core) and
 #                 `benchmarks/perf_engine.py --quick` (engine hot path):
 #                 each first PROVES the optimized core behaviour-identical
 #                 to its retained pre-rewrite oracle on seeded workloads,
 #                 then records throughput (BENCH_sim_quick.json /
-#                 BENCH_engine_quick.json); `benchmarks/trend.py` renders
+#                 BENCH_engine_quick.json) — both include the closed-loop
+#                 cell (lazy multi-turn stages + token streaming; the sim
+#                 cell additionally proves the token_events overlay leaves
+#                 JCTs bit-identical); `benchmarks/trend.py` renders
 #                 every BENCH artifact into TREND.md (all uploaded in CI);
 #   4. slow     — `pytest -m slow`: the full kernel/model/training sweeps.
 #                 Run as its own stage so a Pallas-on-CPU container gap
@@ -49,6 +57,9 @@ if [[ "${1:-}" == "--smoke" ]]; then
     echo "CI OK (smokes)"
     exit 0
 fi
+
+echo "== tier-1 gate: cross-backend event conformance =="
+python -m pytest -x -q tests/test_event_conformance.py
 
 echo "== tier-1: pytest (slow tier deselected) =="
 python -m pytest -x -q

@@ -28,6 +28,7 @@ from repro.api.events import (
     RequestSwappedIn,
     RequestSwappedOut,
     StageCompleted,
+    StageOutcome,
     TokenGenerated,
 )
 from repro.api.replicated import (
@@ -43,7 +44,11 @@ from repro.api.service import (
     MetricsRecorder,
     ServiceResult,
 )
-from repro.api.workload import specs_from_classes, service_for_backend
+from repro.api.workload import (
+    service_for_backend,
+    specs_from_classes,
+    specs_from_closed_loop,
+)
 
 __all__ = [
     "AgentSpec",
@@ -59,6 +64,7 @@ __all__ = [
     "RequestSwappedIn",
     "RequestSwappedOut",
     "StageCompleted",
+    "StageOutcome",
     "TokenGenerated",
     "AgentHandle",
     "AgentService",
@@ -70,5 +76,6 @@ __all__ = [
     "resolve_router",
     "router_names",
     "specs_from_classes",
+    "specs_from_closed_loop",
     "service_for_backend",
 ]

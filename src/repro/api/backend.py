@@ -50,6 +50,18 @@ class AgentSpec:
     token arrays per stage, used verbatim (already engine-scale); decode
     budgets still come from ``stages`` and are scaled.  When ``prompts``
     is absent the engine synthesizes prompts of the scaled lengths.
+
+    ``next_stage`` makes the agent CLOSED-LOOP: after every stage
+    completes, :class:`repro.api.AgentService` feeds the callback a
+    :class:`repro.api.events.StageOutcome` (prior stage's events: index,
+    completion time, tokens observed) and, if it returns a non-empty
+    ``InferenceSpec`` list, submits that list as the agent's next stage
+    mid-run through ``Backend.submit_stage`` — the agent only completes
+    once the callback declines.  ``stages`` then holds just the opening
+    turn(s); ``predicted_cost``/``true_cost`` should be supplied
+    explicitly (``resolved_costs`` can only see the static prefix).  The
+    callback runs inside the backend's event loop and must not call
+    ``run``/``drain`` (see ROADMAP "closed-loop clients").
     """
 
     stages: list[list[InferenceSpec]]
@@ -59,6 +71,8 @@ class AgentSpec:
     family: MemoryFamily = MemoryFamily.DENSE
     name: str = "agent"
     prompts: Optional[list[list[np.ndarray]]] = None
+    #: closed-loop stage generator: StageOutcome -> next stage's specs|None
+    next_stage: Optional[Any] = None
 
     def flat_specs(self) -> list[InferenceSpec]:
         return [s for stage in self.stages for s in stage]
@@ -111,6 +125,18 @@ class Backend(Protocol):
 
     def submit(self, spec: AgentSpec, agent_id: int) -> float: ...
 
+    def submit_stage(
+        self, agent_id: int, specs: Sequence[InferenceSpec]
+    ) -> None:
+        """Append one follow-up stage to a live agent (closed-loop).
+
+        Legal until the agent completes — including from inside an
+        ``on_stage_complete`` listener callback, which every backend
+        emits BEFORE deciding whether the agent is done, so an appended
+        stage seamlessly continues the agent.
+        """
+        ...
+
     def run(self, until: float) -> None: ...
 
     def drain(self) -> BackendResult: ...
@@ -134,6 +160,11 @@ class SimBackend:
     routers (``least_loaded``) see the sim's in-flight count drop without
     waiting for ``drain``.  Results are cumulative across submit/drain
     rounds, matching the engine backend's ``completions`` dict.
+
+    ``token_events=True`` turns on the sim's discretized token streaming
+    (``TokenGenerated`` at the closed-form boundary instants — see the
+    ``repro.sim.cluster`` module doc); off by default because the emission
+    sweep costs O(running) per event.
     """
 
     name = "sim"
@@ -146,6 +177,7 @@ class SimBackend:
         decode_rate: float = 30.0,
         prefill_rate: float = 4000.0,
         swap_penalty: float = 0.2,
+        token_events: bool = False,
     ):
         sched = _resolve_scheduler(scheduler, total_kv, decode_rate)
         self.sim = ClusterSim(
@@ -154,6 +186,7 @@ class SimBackend:
             decode_rate=decode_rate,
             prefill_rate=prefill_rate,
             swap_penalty=swap_penalty,
+            token_events=token_events,
         )
         self.scheduler = sched
 
@@ -191,7 +224,14 @@ class SimBackend:
             )
         )
 
+    def submit_stage(
+        self, agent_id: int, specs: Sequence[InferenceSpec]
+    ) -> None:
+        self.sim.append_stage(agent_id, [list(specs)])
+
     def run(self, until: float) -> None:
+        # stale horizons (at-or-before the clock) are no-ops by the sim's
+        # own contract: advance() only raises the clock floor
         self.sim.advance(until)
 
     def drain(self) -> BackendResult:
@@ -278,25 +318,39 @@ class EngineBackend:
     def to_workload_time(self, t: float) -> float:
         return float(t) / self.time_scale
 
+    def _scale_spec(
+        self, s: InferenceSpec, prompt=None
+    ) -> tuple[np.ndarray, int]:
+        """One full-scale spec -> (engine prompt, scaled decode budget).
+
+        Decode budgets always come from the (full-scale) spec and are
+        scaled down; a pinned ``prompt`` is used verbatim (engine tokens
+        already), otherwise one is synthesized at the scaled length.  The
+        ONE scaling rule for opening stages and closed-loop follow-ups
+        alike — the cross-backend token-count conformance pin depends on
+        both paths rounding identically.
+        """
+        d = max(1, int(round(s.decode / self.token_scale)))
+        if prompt is None:
+            p = max(1, int(round(s.prefill / self.token_scale)))
+            prompt = self._rng.integers(0, self._vocab, size=p)
+        else:
+            prompt = np.asarray(prompt)
+        return prompt, d
+
     def _engine_stages(
         self, spec: AgentSpec
     ) -> list[list[tuple[np.ndarray, int]]]:
-        stages = []
-        for i, stage in enumerate(spec.stages):
-            reqs = []
-            for j, s in enumerate(stage):
-                # decode budgets always come from the (full-scale) spec and
-                # are scaled down; pinned prompts are used verbatim (they
-                # are engine tokens already), synthesized ones are scaled
-                d = max(1, int(round(s.decode / self.token_scale)))
-                if spec.prompts is not None:
-                    prompt = np.asarray(spec.prompts[i][j])
-                else:
-                    p = max(1, int(round(s.prefill / self.token_scale)))
-                    prompt = self._rng.integers(0, self._vocab, size=p)
-                reqs.append((prompt, d))
-            stages.append(reqs)
-        return stages
+        return [
+            [
+                self._scale_spec(
+                    s,
+                    None if spec.prompts is None else spec.prompts[i][j],
+                )
+                for j, s in enumerate(stage)
+            ]
+            for i, stage in enumerate(spec.stages)
+        ]
 
     def submit(self, spec: AgentSpec, agent_id: int) -> float:
         pred, _ = spec.resolved_costs()
@@ -309,14 +363,37 @@ class EngineBackend:
                 arrival_iter=arrival_iter,
                 stages=self._engine_stages(spec),
                 predicted_cost=pred / (self.token_scale * self.token_scale),
+                closed_loop=spec.next_stage is not None,
             )
         )
         return arrival_iter / self.time_scale
 
+    def submit_stage(
+        self, agent_id: int, specs: Sequence[InferenceSpec]
+    ) -> None:
+        """Append a follow-up stage to a live agent (closed-loop pacing).
+
+        Token demands are scaled exactly like ``submit``'s; prompts are
+        synthesized from the backend's RNG.  Legal from inside an
+        ``on_stage_complete`` callback: the engine emits it before the
+        stage-exhaustion check, and its fused decode windows already end
+        at every closed-loop agent's stage boundary, so the appended
+        stage is admitted at the next iteration — the same cadence the
+        per-step reference engine would give it.
+        """
+        self.engine.append_stage(
+            agent_id, [self._scale_spec(s) for s in specs]
+        )
+
     def run(self, until: float) -> None:
         # ceil (with an fp guard): run must advance AT LEAST to `until`, or
         # a fleet's post-drain re-anchor could leave this engine's clock
-        # trailing the reconciled horizon by a fraction of an iteration
+        # trailing the reconciled horizon by a fraction of an iteration.
+        # But a horizon at-or-before the current clock must be a NO-OP:
+        # ceil lands one iteration PAST the clock when `until * time_scale`
+        # floats a hair above the integer `now` (stale-target regression)
+        if until <= self.now:
+            return
         self.engine.run(math.ceil(until * self.time_scale - 1e-9))
 
     def drain(self) -> BackendResult:

@@ -5,19 +5,29 @@ the same duck-typed callbacks; the service's dispatcher normalizes them into
 these frozen dataclasses with ``time`` in *workload seconds* regardless of
 the backend's native clock (the engine counts iterations internally).
 
-``TokenGenerated`` is engine-only: the simulator models decoding as a
-continuous rate and has no per-token instants.
+``TokenGenerated`` is backend-uniform: the engine streams its actually
+sampled token ids, and the simulator (with ``token_events=True`` on
+``SimBackend``/``ClusterSim``) streams the discretized token boundaries
+its closed-form decode implies, stamped at the exact boundary-crossing
+instants, with the 0-based token index as the ``token`` value.  The
+per-agent event order and the per-request token *counts* are identical
+across backends (pinned by ``tests/test_event_conformance.py``); only the
+token values differ (the sim samples none).
 
 Every event carries a ``replica`` index when served through a
 :class:`repro.api.ReplicatedBackend` (``None`` on single-backend services):
 the fleet dispatcher tags each child backend's callbacks with the replica
 that emitted them, so per-replica metrics fall out of the same stream.
+
+``StageOutcome`` is the view handed to a closed-loop
+:class:`repro.api.AgentSpec`'s ``next_stage`` callback after each stage
+completes — see ``repro.api.service``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Any, Callable, Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +74,38 @@ class AgentCompleted(AgentEvent):
     jct: float
 
 
+@dataclasses.dataclass
+class StageOutcome:
+    """What a closed-loop ``AgentSpec.next_stage`` callback is fed.
+
+    ``stage`` is the 0-based index of the stage that just completed;
+    ``time`` its completion in workload seconds; ``new_tokens`` the number
+    of ``TokenGenerated`` events observed for the agent since the previous
+    stage boundary (0 when the backend does not stream tokens — sim with
+    ``token_events=False``); ``handle`` the live :class:`AgentHandle`
+    (events/tokens are retained on it when the service records events).
+
+    ``new_tokens`` is in the backend's NATIVE token scale: full workload
+    tokens on the sim, engine tokens (demand / ``token_scale``) on the
+    engine.  A session whose control flow branches on it will therefore
+    unfold differently across backends — the stock closed-loop families
+    deliberately key only on their own turn counters (see ROADMAP
+    "closed-loop clients"), which is what the cross-backend turn-count
+    conformance pin relies on.
+
+    The callback returns the next stage's ``InferenceSpec`` list, or
+    ``None``/empty to let the agent complete.  It runs synchronously
+    inside the backend's event loop and MUST NOT call ``run``/``drain``
+    on the service (enforced) or submit new agents.
+    """
+
+    agent_id: int
+    stage: int
+    time: float
+    new_tokens: int
+    handle: Any
+
+
 Hook = Optional[Callable[[AgentEvent], None]]
 
 
@@ -72,8 +114,9 @@ class AgentHooks:
     """Per-agent lifecycle callbacks, each invoked with the typed event.
 
     Any subset may be set; ``on_swap`` fires for both swap-out and swap-in
-    (inspect the event type to distinguish).  ``on_token`` only fires on the
-    engine backend.
+    (inspect the event type to distinguish).  ``on_token`` fires on the
+    engine backend always and on the sim backend when it was built with
+    ``token_events=True``.
     """
 
     on_admit: Hook = None

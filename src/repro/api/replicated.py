@@ -272,6 +272,16 @@ class ReplicatedBackend:
         self.global_clock.register(replica, agent_id, arrival, pred)
         return arrival
 
+    def submit_stage(self, agent_id: int, specs) -> None:
+        """Route a closed-loop follow-up stage to the agent's replica."""
+        try:
+            replica = self.assignment[agent_id]
+        except KeyError:
+            raise ValueError(
+                f"agent {agent_id} was never placed on this fleet"
+            ) from None
+        self.children[replica].submit_stage(agent_id, specs)
+
     def run(self, until: float) -> None:
         """Advance the whole fleet in lockstep to ``until`` (seconds)."""
         for child in self.children:

@@ -31,6 +31,7 @@ from repro.api.events import (
     RequestSwappedIn,
     RequestSwappedOut,
     StageCompleted,
+    StageOutcome,
     TokenGenerated,
 )
 from repro.sim.metrics import JctStats, fair_ratios, fairness_stats, jct_stats
@@ -52,6 +53,11 @@ class AgentHandle:
     stage_finish: dict[int, float] = dataclasses.field(default_factory=dict)
     tokens: list[int] = dataclasses.field(default_factory=list)
     events: list[AgentEvent] = dataclasses.field(default_factory=list)
+    #: tokens observed in total / at the last stage boundary — maintained
+    #: even with ``record_events=False`` (closed-loop callbacks read the
+    #: per-stage difference via ``StageOutcome.new_tokens``)
+    token_count: int = 0
+    _stage_token_mark: int = 0
 
     @property
     def done(self) -> bool:
@@ -72,6 +78,7 @@ class AgentHandle:
             if self.hooks.on_swap:
                 self.hooks.on_swap(ev)
         elif isinstance(ev, TokenGenerated):
+            self.token_count += 1
             if self.record_events:
                 self.tokens.append(ev.token)
             if self.hooks.on_token:
@@ -205,8 +212,12 @@ class _Dispatcher:
         self, agent_id: int, stage: int, t: float, *,
         replica: Optional[int] = None,
     ) -> None:
-        self._push(agent_id, StageCompleted(agent_id, self._t(t), stage,
-                                            replica=replica))
+        ev = StageCompleted(agent_id, self._t(t), stage, replica=replica)
+        self._push(agent_id, ev)
+        # closed-loop continuation: runs INSIDE the backend's emit, which
+        # precedes its stage-exhaustion check — an appended stage keeps
+        # the agent alive in the same event/iteration
+        self.svc._advance_closed_loop(ev)
 
     def on_agent_complete(
         self, agent_id: int, t: float, *, replica: Optional[int] = None
@@ -231,6 +242,7 @@ class AgentService:
         self.recorder = MetricsRecorder()
         self.record_events = record_events
         self._next_id = 0
+        self._in_callback = False    # closed-loop re-entrancy guard
         backend.set_listener(_Dispatcher(self))
 
     # ------------------------------------------------------- constructors
@@ -324,6 +336,11 @@ class AgentService:
         May be called at any point — before, between, or after ``run``
         calls — on both backends (online arrivals).
         """
+        if self._in_callback:
+            raise RuntimeError(
+                "closed-loop stage callbacks must not submit new agents — "
+                "see ROADMAP 'closed-loop clients'"
+            )
         agent_id = self._next_id
         self._next_id += 1
         # register the handle BEFORE the backend sees the spec: an agent
@@ -351,12 +368,44 @@ class AgentService:
     ) -> list[AgentHandle]:
         return [self.submit(s) for s in specs]
 
+    def _advance_closed_loop(self, ev: StageCompleted) -> None:
+        """Feed a completed stage to the agent's ``next_stage`` callback
+        and submit whatever it returns as the agent's next stage."""
+        handle = self.handles.get(ev.agent_id)
+        if handle is None or handle.spec.next_stage is None:
+            return
+        outcome = StageOutcome(
+            agent_id=ev.agent_id,
+            stage=ev.stage,
+            time=ev.time,
+            new_tokens=handle.token_count - handle._stage_token_mark,
+            handle=handle,
+        )
+        handle._stage_token_mark = handle.token_count
+        self._in_callback = True
+        try:
+            specs = handle.spec.next_stage(outcome)
+        finally:
+            self._in_callback = False
+        if specs:
+            self.backend.submit_stage(ev.agent_id, list(specs))
+
     def run(self, until: float) -> None:
         """Advance serving time to ``until`` (workload seconds)."""
+        if self._in_callback:
+            raise RuntimeError(
+                "closed-loop stage callbacks must not call run() — see "
+                "ROADMAP 'closed-loop clients'"
+            )
         self.backend.run(until)
 
     def drain(self) -> ServiceResult:
         """Serve everything submitted so far to completion."""
+        if self._in_callback:
+            raise RuntimeError(
+                "closed-loop stage callbacks must not call drain() — see "
+                "ROADMAP 'closed-loop clients'"
+            )
         res: BackendResult = self.backend.drain()
         # the recorder's jct view is authoritative (it uses true arrival
         # stamps); fall back to the backend's numbers for any agent whose

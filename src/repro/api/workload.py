@@ -15,10 +15,18 @@ import numpy as np
 
 from repro.api.backend import AgentSpec
 from repro.api.service import AgentService
-from repro.workloads import mooncake_like_arrivals, sample_agent
+from repro.workloads import (
+    CLOSED_LOOP_CLASSES,
+    mooncake_like_arrivals,
+    sample_agent,
+    sample_closed_loop,
+)
 
 #: default small-agent mix used by the CLI drivers
 DEFAULT_CLASSES = ("EV", "FV", "CC", "KBQAV")
+
+#: default closed-loop session mix (multi-turn chat + react tool loops)
+DEFAULT_CLOSED_LOOP = tuple(CLOSED_LOOP_CLASSES)
 
 #: engine serves token demands divided by this (predicted costs by its
 #: square, since KV token-time is ~quadratic in token counts)
@@ -60,6 +68,40 @@ def specs_from_classes(
     return specs
 
 
+def specs_from_closed_loop(
+    rng: np.random.Generator,
+    n_agents: int,
+    window_s: float,
+    *,
+    classes: Sequence[str] = DEFAULT_CLOSED_LOOP,
+) -> list[AgentSpec]:
+    """Sample a closed-loop AgentSpec list (multi-turn chat / react loops).
+
+    Each spec carries only its opening turn in ``stages`` plus a stateful
+    ``next_stage`` session callback that generates later turns as earlier
+    ones complete.  Sessions hold mutable turn state, so the list is
+    SINGLE-USE: rebuild (same seed) for every serving run rather than
+    resubmitting — unlike the open-loop specs, these cannot be shared
+    across runs.
+    """
+    arrivals = mooncake_like_arrivals(rng, n_agents, window_s)
+    specs = []
+    for aid in range(n_agents):
+        cls = classes[aid % len(classes)]
+        session = sample_closed_loop(rng, cls)
+        specs.append(
+            AgentSpec(
+                stages=[list(session.first_stage)],
+                arrival=float(arrivals[aid]),
+                predicted_cost=session.expected_cost,
+                true_cost=session.expected_cost,
+                name=cls,
+                next_stage=session,
+            )
+        )
+    return specs
+
+
 def service_for_backend(
     backend: str,
     scheduler: str,
@@ -75,6 +117,7 @@ def service_for_backend(
     seed: int = 0,
     replicas: int = 1,
     router: str = "round_robin",
+    stream: bool = False,
 ) -> AgentService:
     """Build an AgentService for ``backend`` in {"sim", "engine"}.
 
@@ -86,6 +129,11 @@ def service_for_backend(
     :class:`repro.api.ReplicatedBackend` using ``router`` (a name from
     ``repro.api.router_names()``); ``pool_tokens`` stays *per replica*, so
     raising ``replicas`` adds capacity rather than splitting it.
+
+    ``stream=True`` asks for per-token events on every backend: the engine
+    always streams its sampled tokens; the sim turns on its discretized
+    ``token_events`` decode model (off by default — the emission sweep
+    costs O(running) per event).
     """
     if backend == "sim":
         return AgentService.sim(
@@ -93,6 +141,7 @@ def service_for_backend(
             total_kv=float(pool_tokens) * sim_kv_factor,
             decode_rate=decode_rate,
             replicas=replicas, router=router, seed=seed,
+            token_events=stream,
         )
     if backend != "engine":
         raise ValueError(f"unknown backend {backend!r} (sim|engine)")

@@ -44,7 +44,11 @@ behavioural oracle that pins these rules:
   device->host transfer, then replays the per-token bookkeeping (events,
   scheduler service deals, allocator growth) host-side in exact per-step
   order.  K is bucketed to powers of two (<= ``max_window``) to bound
-  compilations.
+  compilations.  Closed-loop agents (``EngineAgent.closed_loop``, set for
+  specs with a ``next_stage`` callback) bound every window at their stage
+  boundaries: a listener callback may append a follow-up stage at any
+  completion (``append_stage``), which the sizer could otherwise not
+  foresee.
 * **Donated buffers.**  The KV cache and the slot tensors are donated to
   every jitted hot-path call (decode window, prefill write, swap-in
   scatter), so XLA updates them in place instead of rebuilding the full
@@ -219,6 +223,12 @@ class EngineAgent:
     arrival_iter: int
     stages: list[list[tuple[np.ndarray, int]]]  # stage -> [(prompt, d)]
     predicted_cost: float
+    #: closed-loop client: a listener callback may append stages at any
+    #: stage boundary (``append_stage``), so fused decode windows must end
+    #: at EVERY stage completion of this agent — the window sizer cannot
+    #: prove a "final" completion schedules nothing when a callback can
+    #: still submit work there
+    closed_loop: bool = False
     # runtime
     next_stage: int = 0
     live: int = 0
@@ -305,6 +315,10 @@ class ServeEngine:
         self.pending: list[tuple[int, int, EngineAgent]] = []
         self.now = 0               # iteration counter
         self.completions: dict[int, int] = {}   # agent -> finish iter
+        # re-entrancy guards (listener rule): _in_run covers the drivers,
+        # _in_step catches a callback re-entering step() itself
+        self._in_run = False
+        self._in_step = False
         self._rid = 0
         self._submit_seq = 0
         self.metrics = {"prefills": 0, "decode_steps": 0, "swaps": 0,
@@ -415,6 +429,44 @@ class ServeEngine:
             _, _, agent = heapq.heappop(self.pending)
             self._arrive(agent)
 
+    def append_stage(
+        self, agent_id: int, stage: list[tuple[np.ndarray, int]]
+    ) -> None:
+        """Append one follow-up stage to a live agent (closed-loop).
+
+        May be called from inside an ``on_stage_complete`` listener
+        callback — the engine emits it BEFORE the stage-exhaustion check
+        in ``_complete``, so the appended stage keeps the agent alive and
+        its requests enter the waiting queue in the same iteration.  The
+        callback must not re-enter ``run``/``run_until_idle``/``step``.
+
+        Requires ``agent.closed_loop`` (set automatically by the
+        ``EngineBackend`` for specs with a ``next_stage`` callback): the
+        window sizer only ends fused decode windows at stage boundaries
+        of closed-loop agents, so appending to an agent submitted without
+        the flag would let a window span its "final" completion and defer
+        the appended stage by up to the window width — silently breaking
+        the same-iteration cadence this method promises.
+        """
+        agent = self.agents.get(agent_id)
+        if agent is None or agent.finish_iter >= 0:
+            raise ValueError(f"agent {agent_id} is not live")
+        if not agent.closed_loop:
+            raise ValueError(
+                f"agent {agent_id} was submitted without closed_loop=True; "
+                "fused decode windows do not end at its stage boundaries, "
+                "so appended stages would miss the same-iteration cadence"
+            )
+        for prompt, d in stage:
+            if len(prompt) + int(d) + 1 > self.cache_len:
+                raise ValueError(
+                    f"request p={len(prompt)} d={d} exceeds cache_len "
+                    f"{self.cache_len}"
+                )
+        agent.stages.append(
+            [(np.asarray(p, np.int32), int(d)) for p, d in stage]
+        )
+
     def _submit_stage(self, agent: EngineAgent) -> None:
         stage = agent.stages[agent.next_stage]
         agent.next_stage += 1
@@ -441,17 +493,23 @@ class ServeEngine:
         K-step window (see module doc) and the clock advances by K.
         ``limit`` caps the advance (``run`` passes ``until - now``).
         """
-        start = self.now
-        self._release_arrivals()
-        self._admit()
-        if limit is not None:
-            # the admission pass may itself advance the clock (chunked
-            # prefill cost); shrink the decode budget so a fused window
-            # never runs past the caller's `until` horizon
-            limit = max(1, int(limit) - (self.now - start))
-        k = self._decode_once(limit)
-        self.now += 1
-        return k
+        if self._in_step:
+            raise RuntimeError("re-entrant step() from a listener callback")
+        self._in_step = True
+        try:
+            start = self.now
+            self._release_arrivals()
+            self._admit()
+            if limit is not None:
+                # the admission pass may itself advance the clock (chunked
+                # prefill cost); shrink the decode budget so a fused window
+                # never runs past the caller's `until` horizon
+                limit = max(1, int(limit) - (self.now - start))
+            k = self._decode_once(limit)
+            self.now += 1
+            return k
+        finally:
+            self._in_step = False
 
     @property
     def busy(self) -> bool:
@@ -466,15 +524,21 @@ class ServeEngine:
         agents with sparse future ``arrival_iter``s and simply ``run`` past
         them.
         """
-        while self.now < until:
-            if not self.busy:
-                nxt = self.pending[0][0] if self.pending else until
-                if nxt > self.now:
-                    self.now = min(int(nxt), until)
-                    if self.now >= until:
-                        break
-                    continue
-            self.step(until - self.now)
+        if self._in_run:
+            raise RuntimeError("re-entrant run() from a listener callback")
+        self._in_run = True
+        try:
+            while self.now < until:
+                if not self.busy:
+                    nxt = self.pending[0][0] if self.pending else until
+                    if nxt > self.now:
+                        self.now = min(int(nxt), until)
+                        if self.now >= until:
+                            break
+                        continue
+                self.step(until - self.now)
+        finally:
+            self._in_run = False
 
     def run_until_idle(self, max_iters: int = 200_000) -> dict[int, int]:
         """Drain every queue (including pending future arrivals).
@@ -483,18 +547,27 @@ class ServeEngine:
         count their full width), not wall steps — idle gaps before
         scheduled arrivals are jumped in O(1) and don't count.
         """
-        steps = 0
-        while self.busy or self.pending:
-            if steps >= max_iters:
-                raise EngineStalledError(
-                    self._stall_report(max_iters),
-                    dict(self.completions),
-                    dict(self.metrics),
-                )
-            if not self.busy:
-                # idle gap before the next scheduled arrival: jump the clock
-                self.now = max(self.now, int(self.pending[0][0]))
-            steps += self.step()
+        if self._in_run:
+            raise RuntimeError(
+                "re-entrant run_until_idle() from a listener callback"
+            )
+        self._in_run = True
+        try:
+            steps = 0
+            while self.busy or self.pending:
+                if steps >= max_iters:
+                    raise EngineStalledError(
+                        self._stall_report(max_iters),
+                        dict(self.completions),
+                        dict(self.metrics),
+                    )
+                if not self.busy:
+                    # idle gap before the next scheduled arrival: jump the
+                    # clock
+                    self.now = max(self.now, int(self.pending[0][0]))
+                steps += self.step()
+        finally:
+            self._in_run = False
         return dict(self.completions)
 
     def _stall_report(self, max_iters: int) -> str:
@@ -807,7 +880,9 @@ class ServeEngine:
             cap = min(cap, max(last_done.values()))
             for aid, t_stage in last_done.items():
                 agent = self.agents[aid]
-                if agent.next_stage < len(agent.stages):
+                # closed-loop agents: a callback may append a stage at ANY
+                # completion, so every stage boundary bounds the window
+                if agent.closed_loop or agent.next_stage < len(agent.stages):
                     cap = min(cap, t_stage)
         if cap <= 1:
             return 1

@@ -65,8 +65,37 @@ wrapper.
 The simulator emits the same duck-typed lifecycle callbacks as the engine
 (``on_arrival``, ``on_admit``, ``on_swap_out``, ``on_swap_in``,
 ``on_stage_complete``, ``on_agent_complete``) to an optional ``listener`` —
-``repro.api`` builds its backend-agnostic event stream on these.  Per-token
-events are not emitted: decoding is continuous here, not discrete.
+``repro.api`` builds its backend-agnostic event stream on these.
+
+Discretized token streaming (off by default)
+--------------------------------------------
+Decoding is a continuous fluid rate here, but with ``token_events=True``
+the simulator ALSO emits ``on_token(agent_id, rid, token, t)`` at the
+instants the closed-form decode crosses integer token boundaries:
+token ``k`` of a sequence is stamped ``prefill_done + (k - d_base) /
+decode_rate`` from the same anchored closed form that drives every event
+time, so the stream is exact and bit-identical between this core and the
+frozen reference.  The emission is a pure OVERLAY: a sweep at the top of
+every event trip reads the closed form and a per-sequence emitted counter
+— it never touches the accounting anchors, the calendars, or the
+scheduler, so completions/JCTs/swap decisions are bit-identical with the
+flag on or off (``tests/test_sim_equivalence.py`` pins this).  Token
+"values" are the 0-based index within the request (the sim samples no
+real tokens).  Tokens are emitted at event times — between events the
+stream is quiet and catches up at the next trip; each trip's batch is
+emitted time-sorted and the sweep runs before any of the trip's own
+emits, so the stream is timestamp-monotone per agent and globally.  The
+sweep is O(running + tokens) per event, which is why it is gated off by
+default.
+
+Closed-loop clients
+-------------------
+``append_stage`` extends a live agent's stage list at any time — including
+from inside an ``on_stage_complete`` listener callback, which both cores
+deliberately emit BEFORE checking whether the agent has stages left, so a
+callback-appended stage seamlessly continues the agent (this is what
+``repro.api``'s closed-loop ``AgentSpec.next_stage`` builds on).  Listener
+callbacks must NOT re-enter ``advance``/``drain`` (guarded).
 """
 
 from __future__ import annotations
@@ -112,6 +141,7 @@ class _Running:
     version: int = 0             # invalidates stale calendar-heap entries
     order: int = 0               # (re-)admission sequence number
     key: Any = None              # cached static scheduler key
+    tokens_emitted: int = 0      # token boundaries streamed (token_events)
 
     def decoded(self, t: float, decode_rate: float) -> float:
         """Stable closed form, anchored at (re-)admission only.
@@ -156,6 +186,7 @@ class ClusterSim:
         prefill_rate: float = 4000.0,    # prompt tokens/s
         swap_penalty: float = 0.2,       # seconds added on re-admission
         listener: Any = None,
+        token_events: bool = False,
     ):
         self.sched = scheduler
         self.m = float(total_kv)
@@ -163,6 +194,8 @@ class ClusterSim:
         self.prefill_rate = float(prefill_rate)
         self.swap_penalty = float(swap_penalty)
         self.listener = listener
+        self.token_events = bool(token_events)
+        self._in_run = False             # re-entrancy guard (listener rule)
 
         # clock + result (cumulative across submit/advance/drain rounds)
         self.t = 0.0
@@ -216,6 +249,47 @@ class ClusterSim:
             fn = getattr(self.listener, event, None)
             if fn is not None:
                 fn(*args)
+
+    def _sweep_tokens(self, t: float) -> None:
+        """Emit every token boundary the closed-form decode crossed by ``t``.
+
+        Pure overlay (see module doc): reads only the anchored closed form
+        and advances the per-sequence ``tokens_emitted`` counter — the
+        accounting anchors, the calendars, and the scheduler are untouched,
+        so dynamics with the flag on are bit-identical to the flag off.
+        Runs at the top of every event trip, before any of the trip's own
+        emits.  Every boundary crossed since the previous sweep lies in
+        ``(prev_event, t]``, so sorting each sweep's batch by (time,
+        running-set position, token index) keeps the whole stream — per
+        agent and globally — timestamp-monotone even when parallel
+        requests' backlogs are flushed together.  LOCKSTEP: the reference
+        core carries the identical sweep (same float expressions, same
+        running-set iteration order, same sort key).
+        """
+        rate = self.decode_rate
+        batch: list[tuple[float, int, int, int, int]] = []
+        for idx, r in enumerate(self._running.values()):
+            d = r.decoded(t, rate)
+            n = int(d + 1e-9)
+            cap = int(r.req.spec.decode)
+            if n > cap:
+                n = cap
+            k = r.tokens_emitted
+            if n <= k:
+                continue
+            pf = r.prefill_done
+            base = r.d_base
+            aid, rid = r.req.agent_id, r.req.rid
+            while k < n:
+                k += 1
+                tk = pf + (k - base) / rate
+                if tk > t:          # cap-snap window: never post-date the
+                    tk = t          # event that observed the boundary
+                batch.append((tk, idx, k, aid, rid))
+            r.tokens_emitted = n
+        batch.sort(key=lambda e: e[:3])
+        for tk, _, k, aid, rid in batch:
+            self._emit("on_token", aid, rid, k - 1, tk)
 
     # ----------------------------------------------------------------- keys
 
@@ -510,6 +584,22 @@ class ClusterSim:
         self._live_agents += 1
         return agent.arrival
 
+    def append_stage(
+        self, agent_id: int, stages: list[list[InferenceSpec]]
+    ) -> None:
+        """Append follow-up stages to a live agent (closed-loop clients).
+
+        Legal at any point before the agent completes — including from
+        inside an ``on_stage_complete`` listener callback, which fires
+        BEFORE the core checks for remaining stages, so an appended stage
+        seamlessly continues the agent in the same event.  The callback
+        must not re-enter ``advance``/``drain``.
+        """
+        agent = self._by_id.get(agent_id)
+        if agent is None or agent.finish != float("inf"):
+            raise ValueError(f"agent {agent_id} is not live")
+        agent.stages.extend([list(s) for s in stages])
+
     def _submit_stage(self, agent: SimAgent, now: float) -> None:
         specs = agent.stages[agent.next_stage]
         agent.next_stage += 1
@@ -610,6 +700,8 @@ class ClusterSim:
         self.t = max(self.t, t)
         self._last_event_t = t
         self.result.events += 1
+        if self.token_events:
+            self._sweep_tokens(t)
         if self.sched.dynamic:
             # dynamic keys (and VTC's counter lift) read the service
             # counters at decision time: replicate the reference's eager
@@ -724,15 +816,29 @@ class ClusterSim:
 
     def advance(self, until: float) -> None:
         """Process all events at or before ``until``; raise the clock floor."""
+        if self._in_run:
+            raise RuntimeError(
+                "re-entrant advance() from a listener callback"
+            )
         until = float(until)
-        while self._step(until):
-            pass
+        self._in_run = True
+        try:
+            while self._step(until):
+                pass
+        finally:
+            self._in_run = False
         self.t = max(self.t, until)
 
     def drain(self) -> SimResult:
         """Serve everything submitted so far; cumulative results snapshot."""
-        while self._step(float("inf")):
-            pass
+        if self._in_run:
+            raise RuntimeError("re-entrant drain() from a listener callback")
+        self._in_run = True
+        try:
+            while self._step(float("inf")):
+                pass
+        finally:
+            self._in_run = False
         self.result.sched_decisions = self._decisions
         self.result.sched_time = self._sched_clock
         self.result.sorts = self._waiting.sorts + self._swapped.sorts

@@ -23,7 +23,11 @@ pass can no longer push occupancy past M (except for the documented
 oversized-request-on-idle-pool escape hatch).
 
 Do not grow features here — this file only changes when the *semantics*
-of the simulator change, in lockstep with ``cluster.py``.
+of the simulator change, in lockstep with ``cluster.py``.  The one
+post-rewrite lockstep addition is the ``token_events`` discretized
+token-boundary emission overlay (see the cluster.py module doc): a pure
+emission sweep at the top of every event trip, identical float-for-float
+in both cores, off by default and provably inert to the dynamics.
 """
 
 from __future__ import annotations
@@ -53,6 +57,7 @@ class _Running:
     # event times is enough to flip exact-tie VTC counter comparisons
     # between the two cores
     fin: float = float("inf")
+    tokens_emitted: int = 0      # token boundaries streamed (token_events)
 
     def occupancy(self, t: float, decode_rate: float) -> float:
         return self.req.spec.prefill + self.decoded(t, decode_rate)
@@ -92,6 +97,7 @@ class ReferenceClusterSim:
         prefill_rate: float = 4000.0,    # prompt tokens/s
         swap_penalty: float = 0.2,       # seconds added on re-admission
         listener: Any = None,
+        token_events: bool = False,
     ):
         self.sched = scheduler
         self.m = float(total_kv)
@@ -99,6 +105,7 @@ class ReferenceClusterSim:
         self.prefill_rate = float(prefill_rate)
         self.swap_penalty = float(swap_penalty)
         self.listener = listener
+        self.token_events = bool(token_events)
 
     def _emit(self, event: str, *args) -> None:
         if self.listener is not None:
@@ -248,6 +255,37 @@ class ReferenceClusterSim:
             for ev in deferred:
                 self._emit(*ev)
 
+        def sweep_tokens(now: float) -> None:
+            """Token-boundary emission overlay — LOCKSTEP with the
+            optimized core's ``_sweep_tokens`` (same float expressions,
+            same running-list iteration order, same sort key); see the
+            cluster.py module doc.
+            """
+            rate = self.decode_rate
+            batch = []
+            for idx, r in enumerate(running):
+                d = r.decoded(now, rate)
+                n = int(d + 1e-9)
+                cap = int(r.req.spec.decode)
+                if n > cap:
+                    n = cap
+                k = r.tokens_emitted
+                if n <= k:
+                    continue
+                pf = r.prefill_done
+                base = r.d_base
+                aid, rid = r.req.agent_id, r.req.rid
+                while k < n:
+                    k += 1
+                    tk = pf + (k - base) / rate
+                    if tk > now:
+                        tk = now
+                    batch.append((tk, idx, k, aid, rid))
+                r.tokens_emitted = n
+            batch.sort(key=lambda e: e[:3])
+            for tk, _, k, aid, rid in batch:
+                self._emit("on_token", aid, rid, k - 1, tk)
+
         def saturation_time(now: float) -> float:
             """When does pool occupancy hit M at current decode rates?
 
@@ -294,6 +332,8 @@ class ReferenceClusterSim:
             account(t_next)
             t = t_next
             result.events += 1
+            if self.token_events:
+                sweep_tokens(t)
 
             if t_arr <= t + 1e-12 and ai < len(arrivals):
                 agent = arrivals[ai]

@@ -2,11 +2,15 @@
 
 from repro.workloads.agents import (
     AGENT_CLASSES,
+    CLOSED_LOOP_CLASSES,
     SIZE_BUCKETS,
     SIZE_PROBS,
     AgentClass,
+    ClosedLoopClass,
+    ClosedLoopSession,
     SampledAgent,
     sample_agent,
+    sample_closed_loop,
     sample_mixed_suite,
     skew_normal,
 )
@@ -18,11 +22,15 @@ from repro.workloads.arrivals import (
 
 __all__ = [
     "AGENT_CLASSES",
+    "CLOSED_LOOP_CLASSES",
     "SIZE_BUCKETS",
     "SIZE_PROBS",
     "AgentClass",
+    "ClosedLoopClass",
+    "ClosedLoopSession",
     "SampledAgent",
     "sample_agent",
+    "sample_closed_loop",
     "sample_mixed_suite",
     "skew_normal",
     "DENSITY_WINDOWS_S",

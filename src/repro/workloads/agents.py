@@ -221,3 +221,124 @@ def sample_mixed_suite(
         cls_name = str(rng.choice(SIZE_BUCKETS[str(s)]))
         out.append(sample_agent(rng, cls_name))
     return out
+
+
+# --------------------------------------------------------------------------
+# Closed-loop workload family: agents whose NEXT stage is only known once
+# the previous stage finished — the interactive regime the paper's workload
+# suite abstracts away (its task graphs are fixed at arrival).  Each session
+# is a stateful callable compatible with ``repro.api.AgentSpec.next_stage``:
+# the serving layer feeds it the completed stage's ``StageOutcome`` and it
+# returns the next turn's InferenceSpecs (or None to end the session).
+# Turn demands are sampled LAZILY from the session's own child RNG, so the
+# spec sequence is deterministic per session and — because it depends only
+# on the turn counter, never on backend-specific outcome fields — identical
+# across sim/engine/replicated backends (what the cross-backend conformance
+# suite pins).  ``StageOutcome.new_tokens``/``time`` are available to custom
+# sessions that want genuinely reactive behaviour.
+
+
+@dataclasses.dataclass(frozen=True)
+class ClosedLoopClass:
+    """One closed-loop session family."""
+
+    name: str
+    turns: tuple[int, int]               # [lo, hi] total turns
+    prefill: tuple[float, float, float]  # fresh per-turn prompt (skew-normal)
+    decode: tuple[float, float, float]
+    #: fraction of the session's accumulated outputs re-read each turn
+    #: (chat: the whole conversation history; react: the last observations)
+    carry: float
+    fanout: tuple[int, int] = (1, 1)     # parallel tool calls per turn
+    stop_prob: float = 0.0               # per-turn early stop (react loops)
+
+
+CLOSED_LOOP_CLASSES: dict[str, ClosedLoopClass] = {
+    # multi-turn chat: one inference per turn, prompt grows with the full
+    # conversation history
+    "chat": ClosedLoopClass(
+        "chat", (3, 8), (140, 40, 1.5), (90, 30, 2.0), carry=1.0,
+    ),
+    # tool-call react loop: thought -> 1-3 parallel tool calls, short
+    # decodes, carries only the recent observations, may stop early
+    "react": ClosedLoopClass(
+        "react", (2, 10), (240, 60, 2.0), (48, 16, 2.0), carry=0.35,
+        fanout=(1, 3), stop_prob=0.2,
+    ),
+}
+
+
+@dataclasses.dataclass
+class ClosedLoopSession:
+    """Stateful ``next_stage`` generator for one closed-loop agent.
+
+    ``first_stage`` seeds ``AgentSpec.stages``; every later turn is drawn
+    from ``_rng`` when the serving layer asks for it.  ``expected_cost``
+    is the a-priori cost estimate (expected turns x expected per-turn
+    demand through the cost model) — the honest analogue of the paper's
+    predictor output, since a closed-loop agent's true cost is unknowable
+    at arrival.
+    """
+
+    cls: ClosedLoopClass
+    first_stage: list[InferenceSpec]
+    expected_cost: float
+    max_turns: int
+    _rng: np.random.Generator
+    _turn: int = 1
+    _history: float = 0.0                # accumulated output tokens
+
+    def _sample_stage(self) -> list[InferenceSpec]:
+        c = self.cls
+        n = int(self._rng.integers(c.fanout[0], c.fanout[1] + 1))
+        specs = []
+        for _ in range(n):
+            p = c.carry * self._history / max(1, n)
+            p += float(np.clip(skew_normal(self._rng, *c.prefill), 16, 65536))
+            p = min(p, 4096.0)           # context-window clamp
+            d = float(np.clip(skew_normal(self._rng, *c.decode), 4, 8192))
+            specs.append(InferenceSpec(prefill=int(p), decode=max(1, int(d))))
+        self._history += float(sum(s.decode for s in specs))
+        return specs
+
+    def __call__(self, outcome) -> Optional[list[InferenceSpec]]:
+        if self._turn >= self.max_turns:
+            return None
+        if self.cls.stop_prob and self._rng.random() < self.cls.stop_prob:
+            return None
+        self._turn += 1
+        return self._sample_stage()
+
+
+def sample_closed_loop(
+    rng: np.random.Generator, cls_name: str
+) -> ClosedLoopSession:
+    """Sample one closed-loop session (first turn eager, rest lazy)."""
+    cls = CLOSED_LOOP_CLASSES[cls_name]
+    child = np.random.default_rng(int(rng.integers(0, 2**63)))
+    max_turns = int(child.integers(cls.turns[0], cls.turns[1] + 1))
+    session = ClosedLoopSession(
+        cls=cls,
+        first_stage=[],
+        expected_cost=0.0,
+        max_turns=max_turns,
+        _rng=child,
+    )
+    session.first_stage = session._sample_stage()
+
+    # expected cost from the family's location parameters: E[turns] more
+    # stages shaped like the mean turn, history growing by the mean decode
+    exp_turns = 0.5 * (cls.turns[0] + cls.turns[1])
+    if cls.stop_prob:
+        exp_turns = min(exp_turns, 1.0 / max(cls.stop_prob, 1e-9))
+    fan = 0.5 * (cls.fanout[0] + cls.fanout[1])
+    est, hist = [], 0.0
+    for _ in range(max(1, int(round(exp_turns)))):
+        p = min(4096.0, cls.prefill[0] + cls.carry * hist / max(1.0, fan))
+        est.extend(
+            [InferenceSpec(int(p), int(cls.decode[0]))]
+            * max(1, int(round(fan)))
+        )
+        hist += fan * cls.decode[0]
+    session.expected_cost = agent_cost(est)
+    return session

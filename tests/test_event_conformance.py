@@ -1,0 +1,440 @@
+"""Cross-backend event-conformance suite (the PR 5 headline test work).
+
+For identical workloads served through :class:`repro.api.AgentService` on
+the sim, engine, and replicated backends, every agent's event stream must
+satisfy the same lifecycle grammar:
+
+    Arrival <= Admit <= (SwapOut/SwapIn)* <= StageComplete* <= AgentComplete
+
+with timestamps monotone non-decreasing in workload seconds (in emission
+order), per-request ``TokenGenerated`` counts summing to each stage's
+decode demand, and — on a :class:`ReplicatedBackend` fleet — the
+``replica`` field set on every event.  The sim streams tokens through its
+discretized ``token_events`` decode model, the engine through its real
+sampled tokens, so the grammar (not the token values) is the
+backend-uniform contract.
+
+Also here: the closed-loop acceptance scenario (multi-turn sessions end to
+end on sim, engine, and a 2-replica fleet, with identical per-agent turn
+counts across all three), the closed-loop re-entrancy guard, and the
+stale-``until`` no-op regressions for ``EngineBackend.run`` /
+``SimBackend.run``.
+"""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.api import (
+    AgentArrived,
+    AgentCompleted,
+    AgentService,
+    AgentSpec,
+    EngineBackend,
+    ReplicatedBackend,
+    RequestAdmitted,
+    RequestSwappedIn,
+    RequestSwappedOut,
+    SimBackend,
+    StageCompleted,
+    TokenGenerated,
+    specs_from_closed_loop,
+)
+from repro.configs import get_config
+from repro.core import InferenceSpec
+from repro.models import Model
+
+VOCAB = 256
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("granite-3-2b").reduced(vocab=VOCAB)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+# ------------------------------------------------------ conformance checker
+
+
+def assert_conformant_stream(
+    handle, *, expect_replica=False, token_demands=None, expect_tokens=True
+):
+    """Assert one agent's event stream satisfies the lifecycle grammar.
+
+    ``token_demands``: multiset (sorted list) of per-request decode demands
+    the agent was served with — compared against the per-rid token counts.
+    """
+    evs = handle.events
+    aid = handle.agent_id
+    assert evs, f"agent {aid}: no events recorded"
+    assert isinstance(evs[0], AgentArrived), f"agent {aid}: first event"
+    assert isinstance(evs[-1], AgentCompleted), f"agent {aid}: last event"
+    assert sum(isinstance(e, AgentArrived) for e in evs) == 1
+    assert sum(isinstance(e, AgentCompleted) for e in evs) == 1
+
+    # timestamps monotone non-decreasing in emission order
+    times = [e.time for e in evs]
+    for a, b in zip(times, times[1:]):
+        assert b >= a - 1e-9, f"agent {aid}: time went backwards {a}->{b}"
+
+    admitted: set = set()
+    swapped_out: dict = {}
+    token_counts: dict = {}
+    stages_seen = 0
+    for ev in evs[1:-1]:
+        assert ev.agent_id == aid
+        if expect_replica:
+            assert ev.replica is not None, f"agent {aid}: {ev} lacks replica"
+        if isinstance(ev, RequestAdmitted):
+            assert ev.rid not in admitted, (
+                f"agent {aid}: rid {ev.rid} admitted twice"
+            )
+            admitted.add(ev.rid)
+        elif isinstance(ev, RequestSwappedOut):
+            assert ev.rid in admitted, f"agent {aid}: swap-out before admit"
+            assert not swapped_out.get(ev.rid), (
+                f"agent {aid}: rid {ev.rid} swapped out twice in a row"
+            )
+            swapped_out[ev.rid] = True
+        elif isinstance(ev, RequestSwappedIn):
+            assert swapped_out.get(ev.rid), (
+                f"agent {aid}: swap-in without a prior swap-out"
+            )
+            swapped_out[ev.rid] = False
+        elif isinstance(ev, TokenGenerated):
+            assert ev.rid in admitted, f"agent {aid}: token before admit"
+            assert not swapped_out.get(ev.rid), (
+                f"agent {aid}: token from a swapped-out request"
+            )
+            token_counts[ev.rid] = token_counts.get(ev.rid, 0) + 1
+        elif isinstance(ev, StageCompleted):
+            assert ev.stage == stages_seen, (
+                f"agent {aid}: stage {ev.stage} completed out of order "
+                f"(expected {stages_seen})"
+            )
+            stages_seen += 1
+    assert stages_seen >= 1, f"agent {aid}: no StageCompleted"
+    assert not any(swapped_out.values()), (
+        f"agent {aid}: completed while a request was swapped out"
+    )
+    if expect_tokens:
+        assert token_counts, f"agent {aid}: no TokenGenerated events"
+    if token_demands is not None:
+        assert sorted(token_counts.values()) == sorted(token_demands), (
+            f"agent {aid}: per-request token counts "
+            f"{sorted(token_counts.values())} != decode demands "
+            f"{sorted(token_demands)}"
+        )
+    return stages_seen
+
+
+def _specs(raw):
+    return [
+        AgentSpec(
+            stages=[[InferenceSpec(p, d) for p, d in stage]
+                    for stage in stages],
+            arrival=float(arr),
+        )
+        for arr, stages in raw
+    ]
+
+
+def _demands(raw_agent):
+    _, stages = raw_agent
+    return [d for stage in stages for _, d in stage]
+
+
+# per-agent: 1-2 stages x 1-2 parallel inferences, staggered arrivals
+workload_strategy = st.lists(
+    st.tuples(
+        st.floats(min_value=0.0, max_value=30.0),
+        st.lists(
+            st.lists(
+                st.tuples(
+                    st.integers(min_value=40, max_value=300),   # prefill
+                    st.integers(min_value=5, max_value=60),     # decode
+                ),
+                min_size=1, max_size=2,
+            ),
+            min_size=1, max_size=2,
+        ),
+    ),
+    min_size=1, max_size=6,
+)
+
+
+# ------------------------------------------------------------ sim backend
+
+
+@given(
+    workload_strategy,
+    st.sampled_from([900.0, 4000.0]),          # swap pressure / roomy
+    st.sampled_from(["justitia", "vtc"]),
+)
+@settings(max_examples=25, deadline=None)
+def test_sim_stream_conformance(raw, m, sched):
+    svc = AgentService(
+        SimBackend(sched, total_kv=m, token_events=True)
+    )
+    handles = svc.submit_many(_specs(raw))
+    res = svc.drain()
+    assert len(res.finish) == len(raw)
+    for h, raw_agent in zip(handles, raw):
+        assert_conformant_stream(h, token_demands=_demands(raw_agent))
+
+
+@given(workload_strategy)
+@settings(max_examples=15, deadline=None)
+def test_replicated_sim_stream_conformance(raw):
+    svc = AgentService.sim(
+        "justitia", replicas=2, router="round_robin",
+        total_kv=2000.0, token_events=True,
+    )
+    handles = svc.submit_many(_specs(raw))
+    res = svc.drain()
+    assert len(res.finish) == len(raw)
+    assert isinstance(svc.backend, ReplicatedBackend)
+    for h, raw_agent in zip(handles, raw):
+        assert_conformant_stream(
+            h, expect_replica=True, token_demands=_demands(raw_agent)
+        )
+        assert h.replica == svc.backend.assignment[h.agent_id]
+
+
+# ----------------------------------------------------------- engine backend
+
+
+@pytest.mark.parametrize("pool_tokens", [2048, 128])   # roomy / swap-heavy
+def test_engine_stream_conformance(tiny_model, pool_tokens):
+    model, params = tiny_model
+    rng = np.random.default_rng(11)
+    raw = [
+        (
+            float(i),
+            [
+                [
+                    (int(rng.integers(8, 25)), int(rng.integers(4, 12)))
+                    for _ in range(1 + int(rng.integers(0, 2)))
+                ]
+                for _ in range(1 + int(rng.integers(0, 2)))
+            ],
+        )
+        for i in range(6)
+    ]
+    svc = AgentService(
+        EngineBackend(
+            model, params, "justitia",
+            pool_tokens=pool_tokens, block_size=16, max_batch=4,
+            cache_len=64, token_scale=1, time_scale=1.0,
+        )
+    )
+    handles = svc.submit_many(_specs(raw))
+    res = svc.drain()
+    assert len(res.finish) == len(raw)
+    swaps = 0
+    for h, raw_agent in zip(handles, raw):
+        assert_conformant_stream(h, token_demands=_demands(raw_agent))
+        swaps += sum(isinstance(e, RequestSwappedOut) for e in h.events)
+    if pool_tokens == 128:
+        assert swaps > 0, "swap-heavy cell produced no swaps"
+
+
+def test_replicated_engine_stream_conformance(tiny_model):
+    model, params = tiny_model
+    svc = AgentService.engine(
+        model, params, "justitia", replicas=2, router="round_robin",
+        pool_tokens=256, block_size=16, max_batch=2, cache_len=64,
+        token_scale=1, time_scale=1.0,
+    )
+    raw = [(float(i), [[(16, 6)]]) for i in range(4)]
+    handles = svc.submit_many(_specs(raw))
+    res = svc.drain()
+    assert len(res.finish) == 4
+    for h, raw_agent in zip(handles, raw):
+        assert_conformant_stream(
+            h, expect_replica=True, token_demands=_demands(raw_agent)
+        )
+
+
+# --------------------------------------------------- closed-loop acceptance
+
+
+def _spied_closed_loop_specs(seed, n_agents, window_s):
+    """Closed-loop specs whose callbacks record the stages they generate."""
+    rng = np.random.default_rng(seed)
+    specs = specs_from_closed_loop(rng, n_agents, window_s)
+    generated = {i: [list(s.stages[0])] for i, s in enumerate(specs)}
+    for i, spec in enumerate(specs):
+        session = spec.next_stage
+
+        def spy(outcome, _session=session, _aid=i):
+            stage = _session(outcome)
+            if stage:
+                generated[_aid].append(list(stage))
+            return stage
+
+        spec.next_stage = spy
+    return specs, generated
+
+
+def test_closed_loop_multi_turn_all_backends(tiny_model):
+    """Acceptance: a closed-loop multi-turn workload runs end-to-end on
+    sim, engine, and a 2-replica fleet through AgentService — with the
+    SAME per-agent turn counts on all three backends (sessions depend only
+    on their own turn counters), conformant event streams, and token
+    counts matching the lazily generated stages' decode demands."""
+    model, params = tiny_model
+    n, seed = 5, 20260731
+    turn_counts = {}
+
+    # --- sim (token streaming on)
+    specs, generated = _spied_closed_loop_specs(seed, n, 20.0)
+    svc = AgentService(
+        SimBackend("justitia", total_kv=16384.0, token_events=True)
+    )
+    handles = svc.submit_many(specs)
+    res = svc.drain()
+    assert len(res.finish) == n
+    for h in handles:
+        demands = [
+            s.decode for stage in generated[h.agent_id] for s in stage
+        ]
+        turns = assert_conformant_stream(h, token_demands=demands)
+        assert turns == len(generated[h.agent_id])
+        turn_counts[h.agent_id] = turns
+    assert any(t > 1 for t in turn_counts.values()), (
+        "workload degenerated: no multi-turn session"
+    )
+
+    # --- 2-replica sim fleet
+    specs, generated = _spied_closed_loop_specs(seed, n, 20.0)
+    svc = AgentService.sim(
+        "justitia", replicas=2, router="round_robin",
+        total_kv=8192.0, token_events=True,
+    )
+    handles = svc.submit_many(specs)
+    res = svc.drain()
+    assert len(res.finish) == n
+    for h in handles:
+        demands = [
+            s.decode for stage in generated[h.agent_id] for s in stage
+        ]
+        turns = assert_conformant_stream(
+            h, expect_replica=True, token_demands=demands
+        )
+        assert turns == turn_counts[h.agent_id], (
+            f"agent {h.agent_id}: fleet served {turns} turns, "
+            f"single sim {turn_counts[h.agent_id]}"
+        )
+
+    # --- engine (scaled demands; same turn structure)
+    specs, generated = _spied_closed_loop_specs(seed, n, 20.0)
+    svc = AgentService.engine(
+        model, params, "justitia",
+        pool_tokens=4096, max_batch=4, cache_len=512,
+        token_scale=16, time_scale=1.0, seed=seed,
+    )
+    handles = svc.submit_many(specs)
+    res = svc.drain()
+    assert len(res.finish) == n
+    for h in handles:
+        demands = [
+            max(1, int(round(s.decode / 16)))
+            for stage in generated[h.agent_id]
+            for s in stage
+        ]
+        turns = assert_conformant_stream(h, token_demands=demands)
+        assert turns == turn_counts[h.agent_id], (
+            f"agent {h.agent_id}: engine served {turns} turns, "
+            f"sim {turn_counts[h.agent_id]}"
+        )
+
+
+def test_closed_loop_callback_must_not_reenter_service():
+    """ROADMAP invariant: stage callbacks must not call run/drain."""
+    svc = AgentService(SimBackend("justitia", total_kv=4096.0))
+
+    def bad(outcome):
+        svc.run(100.0)
+
+    svc.submit(AgentSpec(stages=[[InferenceSpec(32, 8)]], next_stage=bad))
+    with pytest.raises(RuntimeError, match="must not call run"):
+        svc.drain()
+
+
+def test_backend_reentrancy_guards_direct():
+    """The backends themselves also refuse re-entrant advancement (a raw
+    listener bypassing the service layer gets the same protection)."""
+    from repro.core import make_scheduler
+    from repro.sim import ClusterSim, SimAgent
+
+    sim = ClusterSim(make_scheduler("justitia", 4096.0), 4096.0)
+
+    class Evil:
+        def on_stage_complete(self, aid, stage, t):
+            sim.advance(1e9)
+
+    sim.listener = Evil()
+    sim.submit(SimAgent(0, 0.0, [[InferenceSpec(32, 8)]], 1.0, 1.0))
+    with pytest.raises(RuntimeError, match="re-entrant"):
+        sim.drain()
+
+
+# --------------------------------------------- stale-until no-op regressions
+
+
+def test_engine_backend_run_stale_until_is_noop(tiny_model):
+    """``run(until)`` at-or-before the current clock must not advance the
+    engine.  At large clocks ``until * time_scale`` floats far enough
+    above the integer ``now`` that the old ``ceil(x - 1e-9)`` produced a
+    STALE target one iteration past the clock: ``now=543101033090`` with
+    ``time_scale=1000.0`` overshoots by 6.1e-5 — way past the fp guard —
+    so ``run(until=now)`` used to advance the engine by one iteration."""
+    import math
+
+    model, params = tiny_model
+    be = EngineBackend(
+        model, params, "justitia",
+        pool_tokens=256, max_batch=2, cache_len=64,
+        token_scale=1, time_scale=1000.0,
+    )
+    svc = AgentService(be)
+    svc.submit(AgentSpec(stages=[[InferenceSpec(16, 8)]], arrival=0.0))
+    res = svc.drain()
+    assert set(res.finish) == {0}
+    # park the idle engine at a big clock (a legal idle jump: run() does
+    # exactly this over empty stretches)
+    big = 543_101_033_090
+    be.engine.now = big
+    # this IS the overshooting case the old code mis-ceiled
+    assert math.ceil((big / 1000.0) * 1000.0 - 1e-9) > big
+    for until in (be.now, be.now - 1e-6, 0.0):
+        svc.run(until=until)
+        assert be.engine.now == big, (
+            f"run(until={until}) advanced the clock "
+            f"{big} -> {be.engine.now}"
+        )
+    # a genuinely future horizon still advances
+    svc.run(until=be.now + 1.0)
+    assert be.engine.now > big
+
+
+def test_sim_backend_run_stale_until_is_noop():
+    be = SimBackend("justitia", total_kv=4096.0)
+    svc = AgentService(be)
+    svc.submit(AgentSpec(stages=[[InferenceSpec(64, 2000)]], arrival=0.0))
+    svc.run(until=10.0)
+    assert be.now == 10.0
+    events_before = be.sim.result.events
+    for until in (10.0, 7.5, 0.0):
+        svc.run(until=until)
+        assert be.now == 10.0, f"run(until={until}) moved the sim clock"
+        assert be.sim.result.events == events_before, (
+            "stale advance() processed events"
+        )
+    res = svc.drain()
+    assert set(res.finish) == {0}

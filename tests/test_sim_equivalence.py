@@ -138,6 +138,140 @@ def test_equivalence_on_paper_workload_suite():
         assert new.key_evals <= ref.key_evals
 
 
+# ------------------------------------------------- token-stream overlay
+
+
+class _StreamCollector(_CompletionOrder):
+    """Captures the full token/swap/completion emission sequence."""
+
+    def __init__(self):
+        super().__init__()
+        self.stream = []
+
+    def on_token(self, agent_id, rid, tok, t):
+        self.stream.append(("tok", agent_id, rid, tok, t))
+
+    def on_swap_out(self, agent_id, rid, t):
+        self.stream.append(("out", agent_id, rid, t))
+
+    def on_swap_in(self, agent_id, rid, t):
+        self.stream.append(("in", agent_id, rid, t))
+
+
+@given(
+    agents_strategy,
+    st.sampled_from([1200.0, 4000.0, 16384.0]),
+    st.sampled_from(SCHEDS),
+)
+@settings(max_examples=20, deadline=None)
+def test_token_streaming_inert_and_identical_across_cores(raw, m, sched):
+    """The ``token_events`` overlay must (a) leave completions/JCTs/swap
+    and event counts BIT-IDENTICAL to the non-streaming run, and (b) make
+    both cores emit the exact same token stream (ids, order, stamps)."""
+    base = ClusterSim(
+        make_scheduler(sched, m, service_rate=DECODE_RATE), m
+    ).run(_sim_agents(raw))
+    la, lb = _StreamCollector(), _StreamCollector()
+    new = ClusterSim(
+        make_scheduler(sched, m, service_rate=DECODE_RATE), m,
+        listener=la, token_events=True,
+    ).run(_sim_agents(raw))
+    ref = ReferenceClusterSim(
+        make_scheduler(sched, m, service_rate=DECODE_RATE), m,
+        listener=lb, token_events=True,
+    ).run(_sim_agents(raw))
+    # (a) inert: bit-identical dynamics with streaming on
+    assert new.jct == base.jct and new.finish == base.finish
+    assert (new.swaps, new.events) == (base.swaps, base.events)
+    # (b) lockstep: identical streams from both cores
+    assert la.stream == lb.stream, f"token stream diverged under {sched}"
+    assert la.order == lb.order
+    # token counts per request sum to the decode demands
+    per_rid: dict = {}
+    for kind, _, rid, *_ in la.stream:
+        if kind == "tok":
+            per_rid[rid] = per_rid.get(rid, 0) + 1
+    demands = sorted(
+        d for _, stages in raw for stage in stages for _, d in stage
+    )
+    assert sorted(per_rid.values()) == demands
+
+
+def test_token_streaming_invariant_to_advance_cadence():
+    """The emitted token stream (ids AND stamps) must not depend on how
+    often the driver polls ``advance`` — tokens catch up at event times,
+    which horizon polling never adds or removes."""
+    raw = [
+        (float(i * 1.3), [[(120, 40), (90, 25)], [(60, 15)]])
+        for i in range(8)
+    ]
+    m = 1500.0
+
+    def run(horizons):
+        lc = _StreamCollector()
+        sim = ClusterSim(
+            make_scheduler("justitia", m, service_rate=DECODE_RATE), m,
+            listener=lc, token_events=True,
+        )
+        for a in sorted(
+            _sim_agents(raw), key=lambda a: (a.arrival, a.agent_id)
+        ):
+            sim.submit(a)
+        for h in horizons:
+            sim.advance(h)
+        sim.drain()
+        return lc.stream
+
+    batch = run(())
+    assert batch == run(tuple(np.arange(0.9, 40.0, 0.9)))
+    assert batch == run((3.0, 17.0, 23.0))
+
+
+def test_closed_loop_stage_append_identical_across_cores():
+    """Closed-loop lockstep: both cores emit ``on_stage_complete`` BEFORE
+    the stage-exhaustion check, so a listener appending stages drives the
+    same multi-turn continuation — with identical JCTs and streams."""
+
+    class _Chainer(_StreamCollector):
+        """Appends one extra stage per agent at its first stage boundary."""
+
+        def __init__(self, sim_agents):
+            super().__init__()
+            self.by_id = {a.agent_id: a for a in sim_agents}
+            self.chained: set = set()
+
+        def on_stage_complete(self, agent_id, stage, t):
+            self.stream.append(("stage", agent_id, stage, t))
+            if agent_id not in self.chained:
+                self.chained.add(agent_id)
+                self.by_id[agent_id].stages.append(
+                    [InferenceSpec(48, 12 + agent_id)]
+                )
+
+    m = 2000.0
+
+    def agents():
+        return _sim_agents(
+            [(float(i), [[(100 + 10 * i, 20 + i)]]) for i in range(6)]
+        )
+
+    a_new, a_ref = agents(), agents()
+    la, lb = _Chainer(a_new), _Chainer(a_ref)
+    new = ClusterSim(
+        make_scheduler("justitia", m, service_rate=DECODE_RATE), m,
+        listener=la, token_events=True,
+    ).run(a_new)
+    ref = ReferenceClusterSim(
+        make_scheduler("justitia", m, service_rate=DECODE_RATE), m,
+        listener=lb, token_events=True,
+    ).run(a_ref)
+    assert new.finish == ref.finish and new.jct == ref.jct
+    assert la.stream == lb.stream
+    # every agent really served the appended second stage
+    stages = [e for e in la.stream if e[0] == "stage"]
+    assert sorted(e[1] for e in stages if e[2] == 1) == list(range(6))
+
+
 # ------------------------------------------------------------------- GPS
 
 

@@ -1,0 +1,163 @@
+"""Tests for ``benchmarks/trend.py`` (satellite: previously untested).
+
+Golden-renders a tiny synthetic BENCH_sim/BENCH_engine JSON pair into the
+TREND.md markdown and asserts the table rows, the speedup/ratio lines, the
+closed-loop cells, and the CLI surface (default discovery, --out, unknown
+benchmark kinds, missing paths).
+"""
+
+import json
+
+import pytest
+
+from benchmarks.trend import DEFAULT_CANDIDATES, main as trend_main, render
+
+SIM_DATA = {
+    "benchmark": "sim_core_perf",
+    "quick": True,
+    "seed": 0,
+    "oracle": {"match": True, "max_abs_diff": 1.5e-9},
+    "optimized": [
+        {
+            "agents": 1000, "scheduler": "justitia", "replicas": 1,
+            "events_per_s": 6100.5, "agents_per_s": 800.25,
+            "sorts": 0, "swaps": 42,
+        },
+        {
+            "agents": 1000, "scheduler": "vtc", "replicas": 4,
+            "events_per_s": 4000.0, "agents_per_s": 650.0,
+            "sorts": 1234, "swaps": 7,
+        },
+    ],
+    "speedup": {"1000": {"justitia": 2.27, "vtc": 1.75}},
+    "speedup_10k_min": 7.5,
+    "closed_loop": {
+        "agents": 300, "scheduler": "justitia", "turns": 1318,
+        "tokens_streamed": 150664, "agents_per_s": 164.7,
+        "events_per_s": 5000.0, "streaming_overhead": 2.22,
+        "jct_identical": True,
+    },
+}
+
+ENGINE_DATA = {
+    "benchmark": "engine_hot_path_perf",
+    "quick": False,
+    "seed": 0,
+    "oracle": {"match": True, "cells": 6, "rounds_checked_per_cell": 4},
+    "sim_equivalence": {"match": True, "schedulers": ["justitia", "vtc"]},
+    "cells": [
+        {
+            "scheduler": "justitia", "pressure": "low",
+            "optimized": {
+                "iters_per_s": 2218.5, "swaps": 0, "avg_window": 6.8,
+                "host_syncs_per_decode_step": 0.28,
+            },
+            "baseline": {"iters_per_s": 658.7, "swaps": 0},
+            "speedup": 3.37,
+        },
+    ],
+    "speedup_min": 2.98,
+    "speedup_geomean": 4.11,
+    "host_syncs_per_decode_step_max": 0.352,
+    "closed_loop": {
+        "scheduler": "justitia", "agents_per_round": 6, "rounds": 2,
+        "turns_timed": 61, "iters_per_s": 372.5, "tokens_per_s": 1159.5,
+        "swaps": 0, "avg_window": 1.9,
+        "host_syncs_per_decode_step": 0.61,
+    },
+}
+
+
+@pytest.fixture
+def bench_pair(tmp_path):
+    sim = tmp_path / "BENCH_sim_quick.json"
+    eng = tmp_path / "BENCH_engine.json"
+    sim.write_text(json.dumps(SIM_DATA))
+    eng.write_text(json.dumps(ENGINE_DATA))
+    return sim, eng
+
+
+def test_render_golden_rows(bench_pair):
+    sim, eng = bench_pair
+    md = render([sim, eng])
+    lines = md.splitlines()
+
+    # header names both sources and the regen command
+    assert lines[0] == "# Perf trend — tracked BENCH artifacts"
+    assert any(
+        "`BENCH_sim_quick.json`, `BENCH_engine.json`" in ln for ln in lines
+    )
+    assert any("python -m benchmarks.trend" in ln for ln in lines)
+
+    # sim section: tier, oracle verdict, one table row per sweep cell
+    assert "## BENCH_sim_quick.json — simulator core (`benchmarks/perf.py`)" \
+        in lines
+    assert any(
+        "Tier: **quick (CI)**" in ln and "**True**" in ln
+        and "1.5e-09" in ln for ln in lines
+    )
+    assert "| 1,000 | justitia | 1 | 6,100.5 | 800.2 | 0 | 42 |" in lines
+    assert "| 1,000 | vtc | 4 | 4,000.0 | 650.0 | 1,234 | 7 |" in lines
+    # speedup ratio line + acceptance line
+    assert any(
+        "Speedup vs pre-rewrite reference core" in ln
+        and "justitia 2.27x, vtc 1.75x" in ln
+        for ln in lines
+    )
+    assert "**Acceptance (10k tier): min speedup 7.5x.**" in lines
+    # closed-loop cell
+    assert any(
+        "Closed-loop + token streaming (300 sessions, 1318 turns)" in ln
+        and "150,664 tokens streamed" in ln
+        and "overhead 2.22x" in ln
+        for ln in lines
+    )
+
+    # engine section: tier, oracle, table row, ratio line, closed-loop
+    assert ("## BENCH_engine.json — serving engine hot path "
+            "(`benchmarks/perf_engine.py`)") in lines
+    assert any(
+        "Tier: **full**" in ln and "(6 cells x 4 rounds)" in ln
+        and "justitia, vtc" in ln for ln in lines
+    )
+    assert ("| justitia | low | 2,218.5 | 658.7 | 3.37x | 6.8 | 0 "
+            "| 0.28 |") in lines
+    assert any(
+        "**Speedup vs pre-rewrite engine: min 2.98x, geomean 4.11x**" in ln
+        and "<= 0.352" in ln for ln in lines
+    )
+    assert any(
+        "Closed-loop serving (6 sessions/round, 61 turns over 2 timed "
+        "rounds)" in ln
+        and "372.5 it/s" in ln and "1,159.5 tok/s" in ln
+        for ln in lines
+    )
+
+
+def test_render_skips_unknown_benchmark_kind(tmp_path):
+    weird = tmp_path / "BENCH_weird.json"
+    weird.write_text(json.dumps({"benchmark": "nope", "rows": []}))
+    md = render([weird])
+    assert "## BENCH_weird.json" in md
+    assert "unknown benchmark kind" in md and "`nope`" in md
+
+
+def test_main_writes_out_and_discovers_defaults(bench_pair, tmp_path,
+                                                capsys):
+    sim, eng = bench_pair
+    out = tmp_path / "TREND.md"
+    md = trend_main([str(sim), str(eng), "--out", str(out)])
+    assert out.exists() and out.read_text() == md
+    assert "simulator core" in md and "serving engine hot path" in md
+    capsys.readouterr()
+
+    # explicit missing path: a clean SystemExit, not a traceback
+    with pytest.raises(SystemExit, match="missing BENCH files"):
+        trend_main([str(tmp_path / "nope.json")])
+
+    # the default candidate list is the repo-root contract other tooling
+    # (ci.sh artifact upload) relies on
+    assert DEFAULT_CANDIDATES == (
+        "BENCH_sim.json", "BENCH_sim_quick.json",
+        "BENCH_engine.json", "BENCH_engine_quick.json",
+    )
