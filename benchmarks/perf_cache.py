@@ -1,0 +1,370 @@
+"""Prefix-cache benchmark: fairness-versus-hit-rate on the chat family.
+
+    PYTHONPATH=src python -m benchmarks.perf_cache [--quick] [--out PATH]
+
+The PR 6 tracked benchmark for the prefix-aware KV reuse subsystem
+(``repro.kvcache.prefix``) and its locality-aware fair scheduler
+(``locality_fair``).  One closed-loop chat fleet (deterministic canonical
+prompt streams sharing the family system prefix) is served through
+``AgentService.engine`` under each scheduler, cache OFF then cache ON,
+and the cells record the three-way trade every serving policy makes on
+conversational workloads:
+
+  * **cache hit rate** — engine-scale prefill tokens served from cached
+    blocks over all prefill tokens (``prefill_tokens_saved / total``);
+  * **prefill tokens saved** — absolute reuse (clock iterations skipped
+    scale with it at ``prefill_chunk`` granularity);
+  * **JCT delta** — mean/max JCT with the cache on minus the same
+    scheduler's cache-off run (negative = the cache helps end-to-end).
+
+Matching sim cells run the simulator's ANALYTIC hit model (group
+seeding + per-request hints, no eviction) through ``AgentService.sim``
+— the modeled ceiling the engine's realized hit rate approaches as
+eviction pressure vanishes.
+
+Four gates run IN-BAND before anything is recorded (the run aborts on
+any failure, same contract as benchmarks/perf_engine.py):
+
+  * **cache-off oracle**: with ``prefix_cache=False`` (the default) the
+    optimized ``ServeEngine`` must stay bit-identical to the frozen
+    ``ReferenceServeEngine`` — completions, clock, and token/prefill/
+    swap/decode-step counts — proving the subsystem is inert when off;
+  * **allocator invariants**: ``check_invariants`` after every drain
+    (block conservation, refcount consistency, used_tokens exactness);
+  * **reuse reality**: every cache-on engine cell must save a strictly
+    positive number of prefill tokens (so the cells measure a live
+    cache, not a no-op), and the sim's analytic model must agree that
+    savings exist;
+  * **locality win, bounded delay**: ``locality_fair`` must beat
+    ``justitia`` on hit rate while its max JCT stays within
+    ``DELAY_BOUND_RATIO`` of justitia's — the paper-style claim
+    (selective pampering is fair but cache-oblivious; deficit-bounded
+    longest-prefix-match keeps the fairness envelope AND the locality).
+
+The full tier adds two more seeds and a deficit-bound sweep
+(``locality_fair`` hit rate as the pampering bound shrinks from 4 pools
+to half a pool, degrading toward VTC's interleaved order).  Results land
+in ``BENCH_cache.json`` at the repo root (CI uploads the ``--quick``
+variant per commit; the committed file is the full-tier record);
+``benchmarks/trend.py`` renders the trajectory alongside the other
+BENCH files.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.perf_engine import (
+    ORACLE_KEYS,
+    _snapshot,
+    bench_model,
+    synth_agents,
+)
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_OUT = REPO_ROOT / "BENCH_cache.json"
+
+SCHEDULERS = ("justitia", "vtc", "locality_fair")
+#: serving regime: ~1.5 scaled prompts of pool per 4 batch slots keeps
+#: the free list exhausted, so idle session chains actually face
+#: LRU eviction between turns — the regime where admission ORDER moves
+#: the hit rate (wider pools make every policy hit alike)
+POOL = 384
+N_AGENTS = 32
+WINDOW_S = 30.0
+TOKEN_SCALE = 8
+PREFILL_CHUNK = 32
+MAX_BATCH = 4
+CACHE_LEN = 512
+#: locality_fair's max JCT may exceed justitia's by at most this factor
+DELAY_BOUND_RATIO = 1.15
+#: deficit-bound sweep, in pool capacities (full tier)
+DEFICIT_SWEEP = (0.5, 1.0, 4.0)
+
+
+def check_cache_off_oracle(model, params) -> dict:
+    """Cache-off ServeEngine must stay bit-identical to the frozen
+    reference engine (the PR 6 subsystem is strictly additive)."""
+    from repro.core import make_scheduler
+    from repro.engine import ReferenceServeEngine, ServeEngine
+
+    checked = []
+    for sched in ("justitia", "vtc"):
+        engines = {}
+        for name, cls in (("optimized", ServeEngine),
+                          ("baseline", ReferenceServeEngine)):
+            engines[name] = cls(
+                model, params, make_scheduler(sched, 256.0),
+                pool_tokens=256, max_batch=MAX_BATCH, cache_len=96,
+            )
+        for name, eng in engines.items():
+            for a in synth_agents(3, 10):
+                eng.submit_agent(a)
+            eng.run_until_idle(max_iters=5_000_000)
+            eng.alloc.check_invariants()
+        snaps = {n: _snapshot(e) for n, e in engines.items()}
+        if snaps["optimized"] != snaps["baseline"]:
+            diff = {
+                k: (snaps["optimized"][k], snaps["baseline"][k])
+                for k in snaps["optimized"]
+                if snaps["optimized"][k] != snaps["baseline"][k]
+            }
+            raise AssertionError(
+                f"cache-off oracle mismatch ({sched}): optimized vs "
+                f"frozen reference differ on {diff}"
+            )
+        checked.append(sched)
+    return {
+        "schedulers": checked,
+        "compared": ["completions", "now", *ORACLE_KEYS],
+        "match": True,
+    }
+
+
+def run_engine(model, params, sched: str, seed: int, *,
+               prefix_cache: bool, deficit_mult=None) -> dict:
+    """One closed-loop chat serving run through AgentService.engine."""
+    from repro.api import AgentService, specs_from_closed_loop
+
+    svc = AgentService.engine(
+        model, params, sched,
+        pool_tokens=POOL, max_batch=MAX_BATCH, cache_len=CACHE_LEN,
+        prefill_chunk=PREFILL_CHUNK, token_scale=TOKEN_SCALE,
+        time_scale=1.0, seed=0, prefix_cache=prefix_cache,
+        record_events=False,
+    )
+    eng = svc.backend.engine
+    if deficit_mult is not None:
+        eng.sched.deficit_bound = float(deficit_mult) * POOL
+    rng = np.random.default_rng(seed)
+    specs = specs_from_closed_loop(rng, N_AGENTS, WINDOW_S,
+                                   classes=("chat",))
+    svc.submit_many(specs)
+    t0 = time.perf_counter()
+    res = svc.drain()
+    wall = time.perf_counter() - t0
+    eng.alloc.check_invariants()              # gate: every drain
+    saved = res.metrics.get("prefill_tokens_saved", 0)
+    total = sum(eng.agent_prefill_tokens.values())
+    hf = res.metrics.get("hit_fractions", {})
+    jcts = sorted(res.jct.values())
+    return {
+        "hit_rate": round(saved / max(1, total), 4),
+        "hit_fraction_mean": round(
+            float(np.mean(list(hf.values()))) if hf else 0.0, 4
+        ),
+        "prefill_tokens_saved": int(saved),
+        "prefill_tokens_total": int(total),
+        "evictions": int(getattr(eng.alloc, "evictions", 0)),
+        "cow_copies": int(getattr(eng.alloc, "cow_copies", 0)),
+        "jct_mean": round(float(np.mean(jcts)), 1),
+        "jct_max": round(float(max(jcts)), 1),
+        "makespan": round(res.makespan, 1),
+        "wall_s": round(wall, 2),
+    }
+
+
+def run_sim(sched: str, seed: int, *, prefix_cache: bool) -> dict:
+    """Matching sim run: the analytic hit model (group seeding + hints,
+    no eviction) on the SAME sampled fleet at full workload scale."""
+    from repro.api import AgentService, specs_from_closed_loop
+
+    svc = AgentService.sim(
+        sched, total_kv=16384.0, decode_rate=30.0,
+        prefix_cache=prefix_cache, record_events=False,
+    )
+    rng = np.random.default_rng(seed)
+    specs = specs_from_closed_loop(rng, N_AGENTS, WINDOW_S,
+                                   classes=("chat",))
+    svc.submit_many(specs)
+    res = svc.drain()
+    saved = res.metrics.get("prefill_tokens_saved", 0.0)
+    hf = res.metrics.get("hit_fractions", {})
+    jcts = sorted(res.jct.values())
+    return {
+        "hit_fraction_mean": round(
+            float(np.mean(list(hf.values()))) if hf else 0.0, 4
+        ),
+        "prefill_tokens_saved": round(float(saved), 1),
+        "jct_mean": round(float(np.mean(jcts)), 2),
+        "jct_max": round(float(max(jcts)), 2),
+        "makespan": round(res.makespan, 2),
+    }
+
+
+def _mean(rows: list, key: str) -> float:
+    return sum(r[key] for r in rows) / len(rows)
+
+
+def engine_cell(model, params, sched: str, seeds) -> dict:
+    """Cache-off/cache-on pair per seed; aggregates are seed means."""
+    off = [run_engine(model, params, sched, s, prefix_cache=False)
+           for s in seeds]
+    on = [run_engine(model, params, sched, s, prefix_cache=True)
+          for s in seeds]
+    for s, row in zip(seeds, on):              # gate: live cache
+        if row["prefill_tokens_saved"] <= 0:
+            raise AssertionError(
+                f"cache-on engine cell saved no prefill tokens "
+                f"({sched}, seed {s}) — the cells would measure a no-op"
+            )
+    return {
+        "scheduler": sched,
+        "seeds": list(seeds),
+        "hit_rate": round(_mean(on, "hit_rate"), 4),
+        "hit_fraction_mean": round(_mean(on, "hit_fraction_mean"), 4),
+        "prefill_tokens_saved": round(_mean(on, "prefill_tokens_saved"), 1),
+        "evictions": round(_mean(on, "evictions"), 1),
+        "jct_mean_delta": round(
+            _mean(on, "jct_mean") - _mean(off, "jct_mean"), 1
+        ),
+        "jct_max_delta": round(
+            _mean(on, "jct_max") - _mean(off, "jct_max"), 1
+        ),
+        "jct_max_on": round(_mean(on, "jct_max"), 1),
+        "makespan_delta": round(
+            _mean(on, "makespan") - _mean(off, "makespan"), 1
+        ),
+        "cache_on": on,
+        "cache_off": off,
+    }
+
+
+def sim_cell(sched: str, seeds) -> dict:
+    off = [run_sim(sched, s, prefix_cache=False) for s in seeds]
+    on = [run_sim(sched, s, prefix_cache=True) for s in seeds]
+    for s, row in zip(seeds, on):              # gate: analytic savings
+        if row["prefill_tokens_saved"] <= 0:
+            raise AssertionError(
+                f"sim analytic model saved no prefill tokens "
+                f"({sched}, seed {s})"
+            )
+    return {
+        "scheduler": sched,
+        "seeds": list(seeds),
+        "hit_fraction_mean": round(_mean(on, "hit_fraction_mean"), 4),
+        "prefill_tokens_saved": round(_mean(on, "prefill_tokens_saved"), 1),
+        "jct_mean_delta": round(
+            _mean(on, "jct_mean") - _mean(off, "jct_mean"), 2
+        ),
+        "jct_max_delta": round(
+            _mean(on, "jct_max") - _mean(off, "jct_max"), 2
+        ),
+        "cache_on": on,
+        "cache_off": off,
+    }
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="one seed, no deficit sweep (the CI perf stage)")
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    args = ap.parse_args(argv)
+
+    seeds = (7,) if args.quick else (7, 11, 13)
+    model, params = bench_model()
+
+    print("== cache-off oracle: ServeEngine vs frozen reference ==")
+    oracle = check_cache_off_oracle(model, params)
+    print(f"   bit-identical for {oracle['schedulers']}")
+
+    engine_cells, sim_cells = [], []
+    for sched in SCHEDULERS:
+        cell = engine_cell(model, params, sched, seeds)
+        engine_cells.append(cell)
+        print(
+            f"engine {sched:>14}: hit={cell['hit_rate']:.3f} "
+            f"saved={cell['prefill_tokens_saved']:8.1f} "
+            f"evict={cell['evictions']:6.1f} "
+            f"dJCT={cell['jct_mean_delta']:+7.1f} "
+            f"dJCTmax={cell['jct_max_delta']:+7.1f}"
+        )
+        cell = sim_cell(sched, seeds)
+        sim_cells.append(cell)
+        print(
+            f"   sim {sched:>14}: hf={cell['hit_fraction_mean']:.3f} "
+            f"saved={cell['prefill_tokens_saved']:9.1f} "
+            f"dJCT={cell['jct_mean_delta']:+8.2f}"
+        )
+
+    by_sched = {c["scheduler"]: c for c in engine_cells}
+    loc, jus = by_sched["locality_fair"], by_sched["justitia"]
+    delay_ratio = loc["jct_max_on"] / max(1.0, jus["jct_max_on"])
+    # gate: the paper-style claim the cells exist to track
+    if not (loc["hit_rate"] > jus["hit_rate"]
+            and delay_ratio <= DELAY_BOUND_RATIO):
+        raise AssertionError(
+            f"locality gate failed: locality_fair hit "
+            f"{loc['hit_rate']:.4f} vs justitia {jus['hit_rate']:.4f}, "
+            f"max-delay ratio {delay_ratio:.3f} "
+            f"(bound {DELAY_BOUND_RATIO})"
+        )
+    print(
+        f"gate: locality_fair hit {loc['hit_rate']:.3f} > justitia "
+        f"{jus['hit_rate']:.3f} at max-delay ratio {delay_ratio:.3f} "
+        f"<= {DELAY_BOUND_RATIO}"
+    )
+
+    deficit_sweep = []
+    if not args.quick:
+        for mult in DEFICIT_SWEEP:
+            rows = [
+                run_engine(model, params, "locality_fair", s,
+                           prefix_cache=True, deficit_mult=mult)
+                for s in seeds
+            ]
+            deficit_sweep.append({
+                "bound_pools": mult,
+                "hit_rate": round(_mean(rows, "hit_rate"), 4),
+                "jct_max": round(_mean(rows, "jct_max"), 1),
+                "evictions": round(_mean(rows, "evictions"), 1),
+            })
+            print(
+                f"deficit {mult:4.1f} pools: "
+                f"hit={deficit_sweep[-1]['hit_rate']:.3f} "
+                f"jct_max={deficit_sweep[-1]['jct_max']:.1f}"
+            )
+
+    out = {
+        "benchmark": "prefix_cache_perf",
+        "quick": bool(args.quick),
+        "config": {
+            "model": "granite-3-2b reduced(d_model=64, L=2, vocab=256)",
+            "family": "chat",
+            "agents": N_AGENTS,
+            "window_s": WINDOW_S,
+            "pool_tokens": POOL,
+            "max_batch": MAX_BATCH,
+            "cache_len": CACHE_LEN,
+            "prefill_chunk": PREFILL_CHUNK,
+            "token_scale": TOKEN_SCALE,
+            "seeds": list(seeds),
+            "schedulers": list(SCHEDULERS),
+            "delay_bound_ratio": DELAY_BOUND_RATIO,
+        },
+        "oracle_cache_off": oracle,
+        "engine_cells": engine_cells,
+        "sim_cells": sim_cells,
+        "deficit_sweep": deficit_sweep,
+        "gates": {
+            "cache_off_bit_identical": True,
+            "invariants_every_drain": True,
+            "prefill_saved_positive": True,
+            "locality_hit_gt_justitia": True,
+            "max_delay_ratio": round(delay_ratio, 3),
+        },
+    }
+    path = Path(args.out)
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {path}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -28,8 +28,10 @@ schedulers are accused of costing (FairBatching, arXiv:2510.14392; VTC,
 arXiv:2401.00588).  Each cell runs one warmup round (compiles both
 engines' programs; the jitted hot path is shared process-wide for the
 optimized engine) and then R timed submit/drain rounds on the SAME engine
-instances; the per-engine rate is the best round (noise floor), and every
-round is oracle-checked.
+instances; the per-engine rate is the best round (noise floor), the
+reported speedup is a symmetric TRIMMED MEAN of the paired per-round
+ratios (back-to-back runs cancel drift; the trim drops hiccup rounds),
+and every round is oracle-checked.
 
 Results land in ``BENCH_engine.json`` at the repo root (CI uploads the
 ``--quick`` variant as an artifact per commit; the committed file is the
@@ -59,6 +61,16 @@ POOLS = {"low": 8192, "high": 256}
 MAX_BATCH = 4
 CACHE_LEN = 96
 ORACLE_KEYS = ("tokens", "prefills", "swaps", "decode_steps")
+
+
+def trimmed_mean(values, trim: float = 0.25) -> float:
+    """Mean of ``values`` after dropping ``floor(n * trim)`` samples from
+    EACH end (symmetric trim; plain mean below 4 samples, where trimming
+    would discard half the data)."""
+    vs = sorted(values)
+    k = int(len(vs) * trim)
+    kept = vs[k:len(vs) - k] if k and len(vs) - 2 * k >= 2 else vs
+    return sum(kept) / len(kept)
 
 
 def bench_model():
@@ -187,17 +199,16 @@ def run_cell(model, params, sched_name: str, pressure: str, *,
         return row
 
     opt, base = summarize("optimized"), summarize("baseline")
-    # speedup = median of PAIRED per-round ratios: each round's optimized
-    # and baseline runs execute back to back, so slow drift on a shared
-    # CPU cancels instead of landing on one engine's column
+    # speedup = TRIMMED MEAN of PAIRED per-round ratios: each round's
+    # optimized and baseline runs execute back to back, so slow drift on
+    # a shared CPU cancels instead of landing on one engine's column;
+    # trimming the extreme round(s) then discards one-off scheduler
+    # hiccups that a single paired ratio (or a plain mean) would keep
+    # (the ROADMAP "multi-iteration trimmed mean" follow-up)
     paired = sorted(
         o / b for o, b in zip(rates["optimized"], rates["baseline"])
     )
-    mid = len(paired) // 2
-    speedup = (
-        paired[mid] if len(paired) % 2
-        else (paired[mid - 1] + paired[mid]) / 2
-    )
+    speedup = trimmed_mean(paired)
     return {
         "scheduler": sched_name,
         "pressure": pressure,
@@ -207,6 +218,7 @@ def run_cell(model, params, sched_name: str, pressure: str, *,
         "optimized": opt,
         "baseline": base,
         "speedup": round(speedup, 2),
+        "speedup_rounds": [round(r, 3) for r in paired],
         "speedup_best": round(opt["iters_per_s"] / base["iters_per_s"], 2),
     }
 
@@ -327,10 +339,11 @@ def main(argv=None) -> dict:
     args = ap.parse_args(argv)
 
     # same workload regime in both tiers (backlog depth is swept by the
-    # pressure axis); the full tier adds statistical strength (one more
-    # timed round) and the remaining three scheduler policies
+    # pressure axis); the full tier adds statistical strength (two more
+    # timed rounds) and the remaining three scheduler policies.  Four or
+    # more timed rounds let the paired-ratio trimmed mean actually trim.
     n_agents = 12
-    rounds = 3 if args.quick else 4
+    rounds = 4 if args.quick else 6
     schedulers = (
         SCHEDULERS if args.quick
         else SCHEDULERS + ("srjf", "parrot", "vllm-sjf")

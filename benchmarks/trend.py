@@ -29,6 +29,8 @@ DEFAULT_CANDIDATES = (
     "BENCH_sim_quick.json",
     "BENCH_engine.json",
     "BENCH_engine_quick.json",
+    "BENCH_cache.json",
+    "BENCH_cache_quick.json",
 )
 
 
@@ -149,9 +151,56 @@ def render_engine(name: str, data: dict) -> list[str]:
     return lines
 
 
+def render_cache(name: str, data: dict) -> list[str]:
+    lines = [f"## {name} — prefix cache fairness-vs-hit-rate "
+             "(`benchmarks/perf_cache.py`)", ""]
+    tier = "quick (CI)" if data.get("quick") else "full"
+    gates = data.get("gates", {})
+    cfg = data.get("config", {})
+    lines.append(
+        f"Tier: **{tier}** · {cfg.get('family', '?')} family, "
+        f"{cfg.get('agents', '?')} sessions, pool "
+        f"{cfg.get('pool_tokens', '?')} · cache-off bit-identical: "
+        f"**{gates.get('cache_off_bit_identical', '?')}** · "
+        f"locality hit > justitia: "
+        f"**{gates.get('locality_hit_gt_justitia', '?')}** at max-delay "
+        f"ratio {gates.get('max_delay_ratio', '?')} "
+        f"(bound {cfg.get('delay_bound_ratio', '?')})"
+    )
+    lines.append("")
+    lines.append("| scheduler | hit rate | prefill tokens saved "
+                 "| evictions | ΔJCT mean | ΔJCT max | sim hit frac "
+                 "| sim ΔJCT |")
+    lines.append("|---|---:|---:|---:|---:|---:|---:|---:|")
+    sim_by = {c["scheduler"]: c for c in data.get("sim_cells", [])}
+    for cell in data.get("engine_cells", []):
+        sim = sim_by.get(cell["scheduler"], {})
+        lines.append(
+            f"| {cell['scheduler']} | {cell['hit_rate']:.3f} "
+            f"| {_fmt(cell['prefill_tokens_saved'])} "
+            f"| {_fmt(cell['evictions'])} "
+            f"| {cell['jct_mean_delta']:+.1f} "
+            f"| {cell['jct_max_delta']:+.1f} "
+            f"| {sim.get('hit_fraction_mean', float('nan')):.3f} "
+            f"| {sim.get('jct_mean_delta', float('nan')):+.2f} |"
+        )
+    sweep = data.get("deficit_sweep", [])
+    if sweep:
+        parts = [
+            f"{row['bound_pools']}x pool: hit {row['hit_rate']:.3f}, "
+            f"max JCT {_fmt(row['jct_max'])}"
+            for row in sweep
+        ]
+        lines += ["", "Deficit-bound sweep (locality_fair) — "
+                  + "; ".join(parts)]
+    lines.append("")
+    return lines
+
+
 RENDERERS = {
     "sim_core_perf": render_sim,
     "engine_hot_path_perf": render_engine,
+    "prefix_cache_perf": render_cache,
 }
 
 

@@ -10,15 +10,17 @@
 #                 deselected via addopts; the full tier re-runs the
 #                 conformance file — cheap, and -x keeps one red gate
 #                 from hiding behind another);
-#   3. perf     — `benchmarks/perf.py --quick` (sim core) and
-#                 `benchmarks/perf_engine.py --quick` (engine hot path):
-#                 each first PROVES the optimized core behaviour-identical
-#                 to its retained pre-rewrite oracle on seeded workloads,
-#                 then records throughput (BENCH_sim_quick.json /
-#                 BENCH_engine_quick.json) — both include the closed-loop
-#                 cell (lazy multi-turn stages + token streaming; the sim
-#                 cell additionally proves the token_events overlay leaves
-#                 JCTs bit-identical); `benchmarks/trend.py` renders
+#   3. perf     — `benchmarks/perf.py --quick` (sim core),
+#                 `benchmarks/perf_engine.py --quick` (engine hot path),
+#                 and `benchmarks/perf_cache.py --quick` (prefix-cache
+#                 fairness-vs-hit-rate): each first PROVES the optimized
+#                 core behaviour-identical to its retained pre-rewrite
+#                 oracle on seeded workloads (the cache bench proves the
+#                 cache-OFF engine bit-identical, then gates saved>0,
+#                 allocator invariants, and the locality_fair-vs-justitia
+#                 hit/delay claim in-band), then records throughput
+#                 (BENCH_sim_quick.json / BENCH_engine_quick.json /
+#                 BENCH_cache_quick.json); `benchmarks/trend.py` renders
 #                 every BENCH artifact into TREND.md (all uploaded in CI);
 #   4. slow     — `pytest -m slow`: the full kernel/model/training sweeps.
 #                 Run as its own stage so a Pallas-on-CPU container gap
@@ -72,6 +74,9 @@ python -m benchmarks.perf --quick --out BENCH_sim_quick.json
 
 echo "== perf: benchmarks/perf_engine.py --quick (engine oracle + hot-path bench) =="
 python -m benchmarks.perf_engine --quick --out BENCH_engine_quick.json
+
+echo "== perf: benchmarks/perf_cache.py --quick (cache-off oracle + prefix-cache bench) =="
+python -m benchmarks.perf_cache --quick --out BENCH_cache_quick.json
 
 echo "== perf: benchmarks/trend.py -> TREND.md =="
 python -m benchmarks.trend --out TREND.md > /dev/null

@@ -24,6 +24,7 @@ from repro.api.events import (
     AgentCompleted,
     AgentEvent,
     AgentHooks,
+    PrefixHit,
     RequestAdmitted,
     RequestSwappedIn,
     RequestSwappedOut,
@@ -60,6 +61,7 @@ __all__ = [
     "AgentCompleted",
     "AgentEvent",
     "AgentHooks",
+    "PrefixHit",
     "RequestAdmitted",
     "RequestSwappedIn",
     "RequestSwappedOut",

@@ -62,6 +62,27 @@ class AgentSpec:
     explicitly (``resolved_costs`` can only see the static prefix).  The
     callback runs inside the backend's event loop and must not call
     ``run``/``drain`` (see ROADMAP "closed-loop clients").
+
+    Prefix-cache metadata (all optional — see ROADMAP "Prefix cache"):
+
+      * ``prompt_ids`` pins CANONICAL full-scale prompt token ids per
+        stage/inference.  Unlike ``prompts`` (engine-scale, verbatim),
+        these are workload-scale streams the engine down-converts with
+        ``ids[:ceil_scaled_len] % vocab`` — a conversion that preserves
+        prefix-extension, so two prompts sharing a canonical prefix
+        share an engine-token prefix too.  ``prompts`` wins when both
+        are set.
+      * ``prefix_group`` names the shared-system-prompt family (e.g. the
+        closed-loop class) and ``shared_prefix`` the family's shared
+        prefix length in full-scale tokens — the simulator's analytic
+        cache model grants cross-agent hits of ``shared_prefix`` once
+        any group member has been admitted.
+      * ``cached_hints`` gives the a-priori expected cached-prefix
+        length (full-scale tokens) per stage/inference.  Backends pass
+        it to the scheduler as the STATIC ``Request.cached_prefix``
+        hint (locality-aware policies sort on it) and the simulator's
+        analytic model uses it for within-session hits.  It never
+        touches the engine's real allocator, which matches by content.
     """
 
     stages: list[list[InferenceSpec]]
@@ -73,6 +94,10 @@ class AgentSpec:
     prompts: Optional[list[list[np.ndarray]]] = None
     #: closed-loop stage generator: StageOutcome -> next stage's specs|None
     next_stage: Optional[Any] = None
+    prompt_ids: Optional[list[list[np.ndarray]]] = None
+    prefix_group: str = ""
+    shared_prefix: float = 0.0
+    cached_hints: Optional[list[list[float]]] = None
 
     def flat_specs(self) -> list[InferenceSpec]:
         return [s for stage in self.stages for s in stage]
@@ -126,7 +151,12 @@ class Backend(Protocol):
     def submit(self, spec: AgentSpec, agent_id: int) -> float: ...
 
     def submit_stage(
-        self, agent_id: int, specs: Sequence[InferenceSpec]
+        self,
+        agent_id: int,
+        specs: Sequence[InferenceSpec],
+        *,
+        prompt_ids: Optional[Sequence[np.ndarray]] = None,
+        hints: Optional[Sequence[float]] = None,
     ) -> None:
         """Append one follow-up stage to a live agent (closed-loop).
 
@@ -134,6 +164,10 @@ class Backend(Protocol):
         ``on_stage_complete`` listener callback, which every backend
         emits BEFORE deciding whether the agent is done, so an appended
         stage seamlessly continues the agent.
+
+        ``prompt_ids``/``hints`` carry the stage's canonical prompt
+        token streams and expected cached-prefix lengths (same
+        semantics as the :class:`AgentSpec` fields); both optional.
         """
         ...
 
@@ -178,6 +212,7 @@ class SimBackend:
         prefill_rate: float = 4000.0,
         swap_penalty: float = 0.2,
         token_events: bool = False,
+        prefix_cache: bool = False,
     ):
         sched = _resolve_scheduler(scheduler, total_kv, decode_rate)
         self.sim = ClusterSim(
@@ -187,6 +222,7 @@ class SimBackend:
             prefill_rate=prefill_rate,
             swap_penalty=swap_penalty,
             token_events=token_events,
+            prefix_cache=prefix_cache,
         )
         self.scheduler = sched
 
@@ -221,13 +257,31 @@ class SimBackend:
                 true_cost=true,
                 family=spec.family,
                 name=spec.name,
+                prefix_group=spec.prefix_group,
+                shared_prefix=float(spec.shared_prefix),
+                cached_hints=(
+                    None
+                    if spec.cached_hints is None
+                    else [list(h) for h in spec.cached_hints]
+                ),
             )
         )
 
     def submit_stage(
-        self, agent_id: int, specs: Sequence[InferenceSpec]
+        self,
+        agent_id: int,
+        specs: Sequence[InferenceSpec],
+        *,
+        prompt_ids: Optional[Sequence[np.ndarray]] = None,
+        hints: Optional[Sequence[float]] = None,
     ) -> None:
-        self.sim.append_stage(agent_id, [list(specs)])
+        # the sim's analytic cache model needs only the hints; canonical
+        # prompt ids are an engine-side concern
+        self.sim.append_stage(
+            agent_id,
+            [list(specs)],
+            hints=None if hints is None else [list(hints)],
+        )
 
     def run(self, until: float) -> None:
         # stale horizons (at-or-before the clock) are no-ops by the sim's
@@ -249,6 +303,8 @@ class SimBackend:
                 "key_evals": res.key_evals,
                 "sorts": res.sorts,
                 "peak_occupancy": res.peak_occupancy,
+                "prefill_tokens_saved": res.prefill_tokens_saved,
+                "hit_fractions": self.sim.hit_fractions(),
             },
         )
 
@@ -281,6 +337,7 @@ class EngineBackend:
         time_scale: float = 1.0,
         seed: int = 0,
         max_iters: int = 200_000,
+        prefix_cache: bool = False,
     ):
         sched = _resolve_scheduler(scheduler, float(pool_tokens), 1.0)
         self.engine = ServeEngine(
@@ -293,6 +350,7 @@ class EngineBackend:
             cache_len=cache_len,
             prefill_chunk=prefill_chunk,
             max_window=max_window,
+            prefix_cache=prefix_cache,
         )
         self.scheduler = sched
         self.token_scale = int(token_scale)
@@ -338,18 +396,52 @@ class EngineBackend:
             prompt = np.asarray(prompt)
         return prompt, d
 
+    def _canon_prompt(self, s: InferenceSpec, ids) -> np.ndarray:
+        """Canonical full-scale token ids -> engine prompt.
+
+        Engine token ``k`` is canonical token ``k * token_scale``
+        (stride subsampling), folded into the engine vocab.  The stride
+        — not a head slice of the scaled length — is what keeps scaled
+        prompts faithful: two canonical streams sharing an L-token
+        prefix map to engine prompts sharing a ``~L / token_scale``
+        prefix (matching ``_scale_hints``), and a prompt that is 60%
+        shared content at full scale stays 60% shared at engine scale.
+        A head slice would instead keep only the stream's head — at
+        scale 8 every chat prompt up to 2048 canonical tokens would
+        collapse into the family's 256-id system prefix, making all
+        sessions' engine prompts identical.  The stream must be at
+        least ``prefill`` ids long (the sessions guarantee it).
+        """
+        p = max(1, int(round(s.prefill / self.token_scale)))
+        return np.asarray(ids)[:: self.token_scale][:p] % self._vocab
+
+    def _stage_prompt(
+        self, spec: AgentSpec, i: int, j: int, s: InferenceSpec
+    ) -> Optional[np.ndarray]:
+        if spec.prompts is not None:
+            return spec.prompts[i][j]
+        if spec.prompt_ids is not None:
+            return self._canon_prompt(s, spec.prompt_ids[i][j])
+        return None
+
     def _engine_stages(
         self, spec: AgentSpec
     ) -> list[list[tuple[np.ndarray, int]]]:
         return [
             [
-                self._scale_spec(
-                    s,
-                    None if spec.prompts is None else spec.prompts[i][j],
-                )
+                self._scale_spec(s, self._stage_prompt(spec, i, j, s))
                 for j, s in enumerate(stage)
             ]
             for i, stage in enumerate(spec.stages)
+        ]
+
+    def _scale_hints(self, hints) -> Optional[list]:
+        """Full-scale cached-prefix hints -> engine-token hints."""
+        if hints is None:
+            return None
+        return [
+            None if h is None else float(h) / self.token_scale
+            for h in hints
         ]
 
     def submit(self, spec: AgentSpec, agent_id: int) -> float:
@@ -364,25 +456,47 @@ class EngineBackend:
                 stages=self._engine_stages(spec),
                 predicted_cost=pred / (self.token_scale * self.token_scale),
                 closed_loop=spec.next_stage is not None,
+                hints=(
+                    None
+                    if spec.cached_hints is None
+                    else [self._scale_hints(h) for h in spec.cached_hints]
+                ),
             )
         )
         return arrival_iter / self.time_scale
 
     def submit_stage(
-        self, agent_id: int, specs: Sequence[InferenceSpec]
+        self,
+        agent_id: int,
+        specs: Sequence[InferenceSpec],
+        *,
+        prompt_ids: Optional[Sequence[np.ndarray]] = None,
+        hints: Optional[Sequence[float]] = None,
     ) -> None:
         """Append a follow-up stage to a live agent (closed-loop pacing).
 
-        Token demands are scaled exactly like ``submit``'s; prompts are
-        synthesized from the backend's RNG.  Legal from inside an
-        ``on_stage_complete`` callback: the engine emits it before the
-        stage-exhaustion check, and its fused decode windows already end
-        at every closed-loop agent's stage boundary, so the appended
-        stage is admitted at the next iteration — the same cadence the
-        per-step reference engine would give it.
+        Token demands are scaled exactly like ``submit``'s; prompts come
+        from ``prompt_ids`` (canonical full-scale streams, converted as
+        in ``AgentSpec.prompt_ids``) or are synthesized from the
+        backend's RNG.  Legal from inside an ``on_stage_complete``
+        callback: the engine emits it before the stage-exhaustion check,
+        and its fused decode windows already end at every closed-loop
+        agent's stage boundary, so the appended stage is admitted at the
+        next iteration — the same cadence the per-step reference engine
+        would give it.
         """
         self.engine.append_stage(
-            agent_id, [self._scale_spec(s) for s in specs]
+            agent_id,
+            [
+                self._scale_spec(
+                    s,
+                    None
+                    if prompt_ids is None
+                    else self._canon_prompt(s, prompt_ids[j]),
+                )
+                for j, s in enumerate(specs)
+            ],
+            hints=self._scale_hints(hints),
         )
 
     def run(self, until: float) -> None:
@@ -399,6 +513,8 @@ class EngineBackend:
     def drain(self) -> BackendResult:
         completions = self.engine.run_until_idle(max_iters=self.max_iters)
         self.engine.alloc.check_invariants()
+        metrics = dict(self.engine.metrics)
+        metrics["hit_fractions"] = self.engine.hit_fractions()
         finish = {
             aid: it / self.time_scale for aid, it in completions.items()
         }
@@ -412,5 +528,5 @@ class EngineBackend:
             jct=jct,
             makespan=self.now,
             swaps=self.engine.metrics["swaps"],
-            metrics=dict(self.engine.metrics),
+            metrics=metrics,
         )

@@ -65,6 +65,21 @@ class TokenGenerated(AgentEvent):
 
 
 @dataclasses.dataclass(frozen=True)
+class PrefixHit(AgentEvent):
+    """One admission reused ``cached`` of its ``prefill`` prompt tokens
+    from the prefix cache (backend-native token scale; emitted only when
+    the backend was built with ``prefix_cache=True`` and the hit is
+    non-zero).  The engine reports the exact full-block match its
+    allocator found; the simulator reports its analytic model's hit —
+    identical by construction when prompts are block-aligned (pinned by
+    the sim-vs-engine hit-fraction equivalence test)."""
+
+    rid: int
+    cached: int
+    prefill: int
+
+
+@dataclasses.dataclass(frozen=True)
 class StageCompleted(AgentEvent):
     stage: int
 
@@ -124,3 +139,5 @@ class AgentHooks:
     on_stage_complete: Hook = None
     on_complete: Hook = None
     on_token: Hook = None
+    #: fires on prefix-cache hits (backends built with ``prefix_cache=True``)
+    on_prefix_hit: Hook = None

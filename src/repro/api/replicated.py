@@ -176,6 +176,11 @@ class _ReplicaChannel:
     def on_token(self, agent_id: int, rid: int, token: int, t: float) -> None:
         self._forward("on_token", agent_id, t, rid, token)
 
+    def on_prefix_hit(
+        self, agent_id: int, rid: int, cached: int, prefill: int, t: float
+    ) -> None:
+        self._forward("on_prefix_hit", agent_id, t, rid, cached, prefill)
+
     def on_stage_complete(self, agent_id: int, stage: int, t: float) -> None:
         self._forward("on_stage_complete", agent_id, t, stage)
 
@@ -272,15 +277,20 @@ class ReplicatedBackend:
         self.global_clock.register(replica, agent_id, arrival, pred)
         return arrival
 
-    def submit_stage(self, agent_id: int, specs) -> None:
-        """Route a closed-loop follow-up stage to the agent's replica."""
+    def submit_stage(self, agent_id: int, specs, **kw) -> None:
+        """Route a closed-loop follow-up stage to the agent's replica.
+
+        ``**kw`` forwards the optional prefix-cache metadata
+        (``prompt_ids``/``hints``) untouched — each child scales it to
+        its own granularity.
+        """
         try:
             replica = self.assignment[agent_id]
         except KeyError:
             raise ValueError(
                 f"agent {agent_id} was never placed on this fleet"
             ) from None
-        self.children[replica].submit_stage(agent_id, specs)
+        self.children[replica].submit_stage(agent_id, specs, **kw)
 
     def run(self, until: float) -> None:
         """Advance the whole fleet in lockstep to ``until`` (seconds)."""

@@ -27,6 +27,7 @@ from repro.api.events import (
     AgentCompleted,
     AgentEvent,
     AgentHooks,
+    PrefixHit,
     RequestAdmitted,
     RequestSwappedIn,
     RequestSwappedOut,
@@ -77,6 +78,9 @@ class AgentHandle:
         elif isinstance(ev, (RequestSwappedOut, RequestSwappedIn)):
             if self.hooks.on_swap:
                 self.hooks.on_swap(ev)
+        elif isinstance(ev, PrefixHit):
+            if self.hooks.on_prefix_hit:
+                self.hooks.on_prefix_hit(ev)
         elif isinstance(ev, TokenGenerated):
             self.token_count += 1
             if self.record_events:
@@ -207,6 +211,16 @@ class _Dispatcher:
     ) -> None:
         self._push(agent_id, TokenGenerated(agent_id, self._t(t), rid, token,
                                             replica=replica))
+
+    def on_prefix_hit(
+        self, agent_id: int, rid: int, cached: int, prefill: int, t: float,
+        *, replica: Optional[int] = None,
+    ) -> None:
+        self._push(
+            agent_id,
+            PrefixHit(agent_id, self._t(t), rid, cached, prefill,
+                      replica=replica),
+        )
 
     def on_stage_complete(
         self, agent_id: int, stage: int, t: float, *,
@@ -388,7 +402,17 @@ class AgentService:
         finally:
             self._in_callback = False
         if specs:
-            self.backend.submit_stage(ev.agent_id, list(specs))
+            # sessions that pin canonical prompt streams / cached-prefix
+            # hints for the stage they just returned expose them as
+            # ``last_prompt_ids`` / ``last_cached_hints`` (the stock
+            # closed-loop families do; plain callables simply don't)
+            session = handle.spec.next_stage
+            self.backend.submit_stage(
+                ev.agent_id,
+                list(specs),
+                prompt_ids=getattr(session, "last_prompt_ids", None),
+                hints=getattr(session, "last_cached_hints", None),
+            )
 
     def run(self, until: float) -> None:
         """Advance serving time to ``until`` (workload seconds)."""

@@ -83,6 +83,12 @@ def specs_from_closed_loop(
     SINGLE-USE: rebuild (same seed) for every serving run rather than
     resubmitting — unlike the open-loop specs, these cannot be shared
     across runs.
+
+    Specs carry the sessions' prefix-cache metadata: canonical prompt
+    token streams (``prompt_ids``), per-inference expected cached-prefix
+    hints (``cached_hints``), and the family's shared system prefix
+    (``prefix_group``/``shared_prefix``) — inert on cache-oblivious
+    backends, exploited by ones built with ``prefix_cache=True``.
     """
     arrivals = mooncake_like_arrivals(rng, n_agents, window_s)
     specs = []
@@ -97,6 +103,14 @@ def specs_from_closed_loop(
                 true_cost=session.expected_cost,
                 name=cls,
                 next_stage=session,
+                prompt_ids=(
+                    None
+                    if session.last_prompt_ids is None
+                    else [list(session.last_prompt_ids)]
+                ),
+                cached_hints=[list(session.last_cached_hints)],
+                prefix_group=cls,
+                shared_prefix=float(session.cls.sys_prefix),
             )
         )
     return specs
@@ -118,6 +132,7 @@ def service_for_backend(
     replicas: int = 1,
     router: str = "round_robin",
     stream: bool = False,
+    prefix_cache: bool = False,
 ) -> AgentService:
     """Build an AgentService for ``backend`` in {"sim", "engine"}.
 
@@ -134,6 +149,11 @@ def service_for_backend(
     always streams its sampled tokens; the sim turns on its discretized
     ``token_events`` decode model (off by default — the emission sweep
     costs O(running) per event).
+
+    ``prefix_cache=True`` turns on prefix-aware KV reuse on both
+    backends (the engine's content-hash block index / the sim's analytic
+    hit model) — per-agent hit fractions and ``prefill_tokens_saved``
+    land in the drained result's ``metrics``.
     """
     if backend == "sim":
         return AgentService.sim(
@@ -142,6 +162,7 @@ def service_for_backend(
             decode_rate=decode_rate,
             replicas=replicas, router=router, seed=seed,
             token_events=stream,
+            prefix_cache=prefix_cache,
         )
     if backend != "engine":
         raise ValueError(f"unknown backend {backend!r} (sim|engine)")
@@ -158,4 +179,5 @@ def service_for_backend(
         pool_tokens=pool_tokens, max_batch=max_batch, cache_len=cache_len,
         token_scale=token_scale, time_scale=1.0,
         replicas=replicas, router=router, seed=seed,
+        prefix_cache=prefix_cache,
     )

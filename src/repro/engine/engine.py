@@ -96,6 +96,7 @@ from repro.core.cost import InferenceSpec, kv_token_time
 from repro.core.queueing import OrderedQueue
 from repro.core.schedulers import AgentScheduler, Request
 from repro.kvcache.allocator import BlockAllocator
+from repro.kvcache.prefix import PrefixAwareAllocator
 from repro.models import Model
 
 
@@ -184,10 +185,16 @@ class EngineRequest:
     prompt: np.ndarray             # (p,) int32
     max_new_tokens: int
     submit_iter: int = 0
+    #: expected cached-prefix length (engine-scale tokens) from workload
+    #: metadata — a STATIC scheduler hint (locality_fair reads it through
+    #: ``Request.cached_prefix``); keys must not query the live allocator
+    cached_hint: float = 0.0
     # runtime
     slot: int = -1
     generated: int = 0
     done: bool = False
+    #: measured prefix-cache hit at admission (engine-scale tokens)
+    cached_tokens: int = 0
     swapped_kv: Any = None         # host copy when swapped out
     _last_tok: int = 0
     _sched_req: Optional[Request] = dataclasses.field(
@@ -213,6 +220,7 @@ class EngineRequest:
                 spec=self.spec,
                 submit_time=float(self.submit_iter),
                 pred_cost=kv_token_time(len(self.prompt), self.max_new_tokens),
+                cached_prefix=float(self.cached_hint),
             )
         return self._sched_req
 
@@ -229,6 +237,9 @@ class EngineAgent:
     #: prove a "final" completion schedules nothing when a callback can
     #: still submit work there
     closed_loop: bool = False
+    #: optional per-stage expected cached-prefix hints (engine-scale
+    #: tokens), aligned with ``stages``; entries may be None
+    hints: Optional[list] = None
     # runtime
     next_stage: int = 0
     live: int = 0
@@ -264,12 +275,21 @@ class ServeEngine:
         prefill_chunk: int = 512,
         max_window: int = 32,
         listener: Any = None,
+        prefix_cache: bool = False,
     ):
         self.model = model
         self.params = params
         self.sched = scheduler
         self.listener = listener
-        self.alloc = BlockAllocator(pool_tokens, block_size)
+        #: prefix-aware KV reuse (PR 6): admission looks up each prompt's
+        #: cached full-block prefix, charges only the uncached suffix to
+        #: prefill clock cost + scheduler service, and keeps released
+        #: prompt blocks matchable until evicted.  Off (the default) the
+        #: engine builds the plain allocator and is bit-identical to the
+        #: pre-cache behaviour.
+        self.prefix_cache = bool(prefix_cache)
+        alloc_cls = PrefixAwareAllocator if prefix_cache else BlockAllocator
+        self.alloc = alloc_cls(pool_tokens, block_size)
         self.max_batch = max_batch
         self.cache_len = cache_len
         self.prefill_chunk = prefill_chunk
@@ -323,7 +343,11 @@ class ServeEngine:
         self._submit_seq = 0
         self.metrics = {"prefills": 0, "decode_steps": 0, "swaps": 0,
                         "tokens": 0, "sorts": 0, "key_evals": 0,
-                        "host_syncs": 0, "windows": 0}
+                        "host_syncs": 0, "windows": 0,
+                        "prefill_tokens_saved": 0, "prefix_hits": 0}
+        # per-agent prefix-cache accounting (engine-scale tokens)
+        self.agent_prefill_tokens: dict[int, int] = {}
+        self.agent_hit_tokens: dict[int, int] = {}
 
     # -------------------------------------------------------------- warmup
 
@@ -380,6 +404,16 @@ class ServeEngine:
 
     # ------------------------------------------------------------- events
 
+    def hit_fractions(self) -> dict[int, float]:
+        """Per-agent prefix-cache hit fraction: cached / total prefill
+        tokens over every admission of the agent's requests (0.0 without
+        hits; empty with the cache off and no admissions)."""
+        return {
+            aid: self.agent_hit_tokens.get(aid, 0) / tot
+            for aid, tot in self.agent_prefill_tokens.items()
+            if tot > 0
+        }
+
     def _emit(self, event: str, *args) -> None:
         if self.listener is not None:
             fn = getattr(self.listener, event, None)
@@ -430,7 +464,8 @@ class ServeEngine:
             self._arrive(agent)
 
     def append_stage(
-        self, agent_id: int, stage: list[tuple[np.ndarray, int]]
+        self, agent_id: int, stage: list[tuple[np.ndarray, int]],
+        hints: Optional[list[float]] = None,
     ) -> None:
         """Append one follow-up stage to a live agent (closed-loop).
 
@@ -466,12 +501,21 @@ class ServeEngine:
         agent.stages.append(
             [(np.asarray(p, np.int32), int(d)) for p, d in stage]
         )
+        if hints is not None:
+            if agent.hints is None:
+                agent.hints = [None] * (len(agent.stages) - 1)
+            while len(agent.hints) < len(agent.stages) - 1:
+                agent.hints.append(None)
+            agent.hints.append(list(hints))
 
     def _submit_stage(self, agent: EngineAgent) -> None:
         stage = agent.stages[agent.next_stage]
+        hints = None
+        if agent.hints is not None and agent.next_stage < len(agent.hints):
+            hints = agent.hints[agent.next_stage]
         agent.next_stage += 1
         agent.live += len(stage)
-        for prompt, d in stage:
+        for i, (prompt, d) in enumerate(stage):
             self.waiting.push(
                 EngineRequest(
                     agent_id=agent.agent_id,
@@ -479,6 +523,10 @@ class ServeEngine:
                     prompt=np.asarray(prompt, np.int32),
                     max_new_tokens=int(d),
                     submit_iter=self.now,
+                    cached_hint=(
+                        float(hints[i])
+                        if hints is not None and i < len(hints) else 0.0
+                    ),
                 )
             )
             self._rid += 1
@@ -626,10 +674,17 @@ class ServeEngine:
         batch: list[EngineRequest] = []
         while self.waiting and len(self.slot_free) > len(batch):
             req = self.waiting.peek()
-            if not self.alloc.can_admit(len(req.prompt) + 1):
-                break
-            self.waiting.popleft()
-            self.alloc.admit(req.rid, len(req.prompt))
+            if self.prefix_cache:
+                if not self.alloc.can_admit_prefix(req.prompt):
+                    break
+                self.waiting.popleft()
+                _, hit = self.alloc.admit_prefix(req.rid, req.prompt)
+                req.cached_tokens = int(hit)
+            else:
+                if not self.alloc.can_admit(len(req.prompt) + 1):
+                    break
+                self.waiting.popleft()
+                self.alloc.admit(req.rid, len(req.prompt))
             batch.append(req)
         if batch:
             self._prefill_batch(batch)
@@ -699,17 +754,42 @@ class ServeEngine:
                 self.slot_pos[req.slot] = p
                 self.running.push(req)
                 self.metrics["prefills"] += 1
-                self.sched.on_service(req.agent_id, prefill_tokens=float(p))
+                # a prefix-cache hit skips the cached chunk: only the
+                # uncached suffix is charged to the scheduler's service
+                # deal (cached_tokens is 0 with the cache off, so the
+                # expression — and the off path — is unchanged)
+                self.sched.on_service(
+                    req.agent_id,
+                    prefill_tokens=float(p - req.cached_tokens),
+                )
                 if self._grouped:
                     self._dirty_agents.add(req.agent_id)
                 self._emit("on_admit", req.agent_id, req.rid, float(now0))
+                self.agent_prefill_tokens[req.agent_id] = (
+                    self.agent_prefill_tokens.get(req.agent_id, 0) + p
+                )
+                if req.cached_tokens:
+                    self.agent_hit_tokens[req.agent_id] = (
+                        self.agent_hit_tokens.get(req.agent_id, 0)
+                        + req.cached_tokens
+                    )
+                    self.metrics["prefill_tokens_saved"] += req.cached_tokens
+                    self.metrics["prefix_hits"] += 1
+                    self._emit(
+                        "on_prefix_hit", req.agent_id, req.rid,
+                        int(req.cached_tokens), int(p), float(now0),
+                    )
         self._slots_stale = True
         # prefill costs ceil(p / prefill_chunk) iterations of engine time
-        # per request; the accounting stays serial-equivalent (sum, exactly
-        # as the reference engine charged it) but lands after the pass
+        # per request — with the prefix cache on, only the uncached suffix
+        # is charged (a full hit costs 0 extra iterations); the accounting
+        # stays serial-equivalent (sum, exactly as the reference engine
+        # charged it) but lands after the pass
         self.now = now0 + sum(
             max(1, -(-p // self.prefill_chunk)) - 1
-            for p in (len(r.prompt) for r in batch)
+            for p in (
+                len(r.prompt) - r.cached_tokens for r in batch
+            )
         )
 
     # --------------------------------------------------------------- swaps
@@ -802,33 +882,47 @@ class ServeEngine:
         if not self.slot_free:
             return False          # both admission paths need a free slot
         free = self.alloc.free_blocks
-        if free == 0:
+        # prefix cache: a swapped sequence whose cached chain survived may
+        # need 0 fresh blocks, so zero free is not conclusive there
+        if free == 0 and not self.prefix_cache:
             return False
         static = not self.sched.dynamic
         if self.swapped:
             # a non-empty swapped queue blocks the waiting queue entirely
             if static:
-                s = self.alloc.seq(self.swapped.peek().rid)
-                return self.alloc.blocks_for(max(1, s.n_tokens)) <= free
+                return self._swap_in_fits(self.swapped.peek(), free)
             if len(self.swapped) > 64:
                 return True
             return any(
-                self.alloc.blocks_for(
-                    max(1, self.alloc.seq(req.rid).n_tokens)
-                ) <= free
-                for req in self.swapped
+                self._swap_in_fits(req, free) for req in self.swapped
             )
         if self.waiting:
             if static:
-                head = self.waiting.peek()
-                return self.alloc.blocks_for(len(head.prompt) + 1) <= free
+                return self._admit_fits(self.waiting.peek(), free)
             if len(self.waiting) > 64:
                 return True
             return any(
-                self.alloc.blocks_for(len(req.prompt) + 1) <= free
-                for req in self.waiting
+                self._admit_fits(req, free) for req in self.waiting
             )
         return False
+
+    def _swap_in_fits(self, req: EngineRequest, free: int) -> bool:
+        """Would ``swap_in`` succeed for this request right now?
+
+        Prefix cache: fresh-block need shrinks by the surviving cached
+        chain.  Within a fused window matches only disappear (eviction)
+        and free blocks only shrink, so a False answer stays False — the
+        monotonicity `_queued_admittable` relies on.
+        """
+        if self.prefix_cache:
+            return self.alloc.can_swap_in(req.rid)
+        s = self.alloc.seq(req.rid)
+        return self.alloc.blocks_for(max(1, s.n_tokens)) <= free
+
+    def _admit_fits(self, req: EngineRequest, free: int) -> bool:
+        if self.prefix_cache:
+            return self.alloc.can_admit_prefix(req.prompt)
+        return self.alloc.blocks_for(len(req.prompt) + 1) <= free
 
     def _window_size(self, limit: Optional[int]) -> int:
         """Largest provably scheduling-free decode window (pow2 capped).

@@ -1,5 +1,12 @@
 """Paged KV-cache block accounting."""
 
 from repro.kvcache.allocator import BlockAllocator, OutOfBlocks, SeqAlloc
+from repro.kvcache.prefix import PrefixAwareAllocator, PrefixNode
 
-__all__ = ["BlockAllocator", "OutOfBlocks", "SeqAlloc"]
+__all__ = [
+    "BlockAllocator",
+    "OutOfBlocks",
+    "PrefixAwareAllocator",
+    "PrefixNode",
+    "SeqAlloc",
+]

@@ -121,6 +121,13 @@ class SimAgent:
     true_cost: float = 0.0                       # for metrics
     family: MemoryFamily = MemoryFamily.DENSE
     name: str = "agent"
+    #: prefix-cache metadata (PR 6; read only with ``prefix_cache=True``):
+    #: agents sharing a ``prefix_group`` share a ``shared_prefix``-token
+    #: system prompt, and ``cached_hints`` (per stage, per spec) carries
+    #: the expected cached conversation-history prefix of each prompt
+    prefix_group: str = ""
+    shared_prefix: float = 0.0
+    cached_hints: Any = None
 
     # runtime
     finish: float = float("inf")
@@ -175,6 +182,14 @@ class SimResult:
     key_evals: int = 0                     # scheduler request_key invocations
     sorts: int = 0                         # queue re-sorts (dynamic policies)
     peak_occupancy: float = 0.0            # max pool occupancy observed
+    # prefix-cache accounting (populated only with ``prefix_cache=True``)
+    prefill_tokens_saved: float = 0.0
+    agent_prefill_tokens: dict[int, float] = dataclasses.field(
+        default_factory=dict
+    )
+    agent_hit_tokens: dict[int, float] = dataclasses.field(
+        default_factory=dict
+    )
 
 
 class ClusterSim:
@@ -187,6 +202,7 @@ class ClusterSim:
         swap_penalty: float = 0.2,       # seconds added on re-admission
         listener: Any = None,
         token_events: bool = False,
+        prefix_cache: bool = False,
     ):
         self.sched = scheduler
         self.m = float(total_kv)
@@ -195,6 +211,16 @@ class ClusterSim:
         self.swap_penalty = float(swap_penalty)
         self.listener = listener
         self.token_events = bool(token_events)
+        #: analytic prefix-cache model (PR 6): an admission's prefill
+        #: event is shortened by the request's modeled cache hit and only
+        #: the uncached suffix is charged as prefill service.  Pool
+        #: occupancy stays the full logical prompt (the engine's shared
+        #: blocks dedup physically, not logically).  Strictly flag-gated:
+        #: off, every expression reduces to the pre-cache arithmetic
+        #: bit-for-bit.  LOCKSTEP: the frozen reference core carries the
+        #: identical model (frozen-oracle invariant, like token_events).
+        self.prefix_cache = bool(prefix_cache)
+        self._seeded_groups: set[str] = set()
         self._in_run = False             # re-entrancy guard (listener rule)
 
         # clock + result (cumulative across submit/advance/drain rounds)
@@ -508,9 +534,14 @@ class ClusterSim:
                     None if self.sched.dynamic else self._waiting.head_key()
                 )
                 self._waiting.popleft()
-                pf = now + req.spec.prefill / self.prefill_rate
+                # analytic prefix-cache hit shortens the prefill event and
+                # the charged prefill service; 0.0 with the cache off, and
+                # `x - 0.0 == x` bitwise for positive prefills, so the off
+                # path is unchanged
+                hit = self._prefix_hit(req, now, deferred)
+                pf = now + (req.spec.prefill - hit) / self.prefill_rate
                 self.sched.on_service(
-                    req.agent_id, prefill_tokens=req.spec.prefill
+                    req.agent_id, prefill_tokens=req.spec.prefill - hit
                 )
                 if self._grouped:
                     self._dirty_agents.add(req.agent_id)
@@ -545,6 +576,55 @@ class ClusterSim:
             self.result.peak_occupancy = occ
         for ev in deferred:
             self._emit(*ev)
+
+    def _prefix_hit(self, req: Request, now: float,
+                    deferred: list) -> float:
+        """Modeled cache hit for an admission (0.0 with the cache off).
+
+        The hit is the larger of the request's conversation-history hint
+        (``Request.cached_prefix``: a later turn re-sends everything the
+        previous turn cached) and the agent's family-shared system prefix
+        — the latter only once some agent of the group has admitted and
+        seeded the cache.  Admission itself seeds the group.  The model
+        is optimistic about eviction (the engine may report less under
+        pool pressure) and block-oblivious (the engine rounds hits down
+        to full blocks); the equivalence test sizes prompts so both
+        effects vanish.
+        """
+        if not self.prefix_cache:
+            return 0.0
+        agent = self._by_id[req.agent_id]
+        base = 0.0
+        if agent.prefix_group and agent.prefix_group in self._seeded_groups:
+            base = float(agent.shared_prefix)
+        hit = max(base, float(req.cached_prefix))
+        if hit > req.spec.prefill:
+            hit = float(req.spec.prefill)
+        if agent.prefix_group:
+            self._seeded_groups.add(agent.prefix_group)
+        res = self.result
+        aid = req.agent_id
+        res.agent_prefill_tokens[aid] = (
+            res.agent_prefill_tokens.get(aid, 0.0) + req.spec.prefill
+        )
+        if hit > 0.0:
+            res.agent_hit_tokens[aid] = (
+                res.agent_hit_tokens.get(aid, 0.0) + hit
+            )
+            res.prefill_tokens_saved += hit
+            deferred.append(
+                ("on_prefix_hit", aid, req.rid, hit, float(req.spec.prefill),
+                 now)
+            )
+        return hit
+
+    def hit_fractions(self) -> dict[int, float]:
+        """Per-agent modeled hit fraction: cached / total prefill tokens."""
+        return {
+            aid: self.result.agent_hit_tokens.get(aid, 0.0) / tot
+            for aid, tot in self.result.agent_prefill_tokens.items()
+            if tot > 0
+        }
 
     # ------------------------------------------------------ calendar peeks
 
@@ -585,7 +665,8 @@ class ClusterSim:
         return agent.arrival
 
     def append_stage(
-        self, agent_id: int, stages: list[list[InferenceSpec]]
+        self, agent_id: int, stages: list[list[InferenceSpec]],
+        hints: Any = None,
     ) -> None:
         """Append follow-up stages to a live agent (closed-loop clients).
 
@@ -594,17 +675,30 @@ class ClusterSim:
         BEFORE the core checks for remaining stages, so an appended stage
         seamlessly continues the agent in the same event.  The callback
         must not re-enter ``advance``/``drain``.
+
+        ``hints`` (optional, aligned with ``stages``) carries per-spec
+        expected cached-prefix lengths for the prefix-cache model.
         """
         agent = self._by_id.get(agent_id)
         if agent is None or agent.finish != float("inf"):
             raise ValueError(f"agent {agent_id} is not live")
+        if hints is not None:
+            if agent.cached_hints is None:
+                agent.cached_hints = [None] * len(agent.stages)
+            while len(agent.cached_hints) < len(agent.stages):
+                agent.cached_hints.append(None)
+            agent.cached_hints.extend([list(h) for h in hints])
         agent.stages.extend([list(s) for s in stages])
 
     def _submit_stage(self, agent: SimAgent, now: float) -> None:
         specs = agent.stages[agent.next_stage]
+        hints = None
+        if (agent.cached_hints is not None
+                and agent.next_stage < len(agent.cached_hints)):
+            hints = agent.cached_hints[agent.next_stage]
         agent.next_stage += 1
         agent.live_inferences += len(specs)
-        for spec in specs:
+        for i, spec in enumerate(specs):
             self._waiting.push(
                 Request(
                     agent_id=agent.agent_id,
@@ -612,6 +706,10 @@ class ClusterSim:
                     spec=spec,
                     submit_time=now,
                     pred_cost=inference_cost(spec, agent.family),
+                    cached_prefix=(
+                        float(hints[i])
+                        if hints is not None and i < len(hints) else 0.0
+                    ),
                 )
             )
             self._rid += 1

@@ -23,11 +23,19 @@ pass can no longer push occupancy past M (except for the documented
 oversized-request-on-idle-pool escape hatch).
 
 Do not grow features here — this file only changes when the *semantics*
-of the simulator change, in lockstep with ``cluster.py``.  The one
-post-rewrite lockstep addition is the ``token_events`` discretized
-token-boundary emission overlay (see the cluster.py module doc): a pure
-emission sweep at the top of every event trip, identical float-for-float
-in both cores, off by default and provably inert to the dynamics.
+of the simulator change, in lockstep with ``cluster.py``.  Two
+post-rewrite lockstep additions exist, both off by default and provably
+inert to the dynamics when off:
+
+* ``token_events`` — the discretized token-boundary emission overlay
+  (see the cluster.py module doc): a pure emission sweep at the top of
+  every event trip, identical float-for-float in both cores.
+* ``prefix_cache`` (PR 6) — the analytic prefix-cache model: an
+  admission's prefill event is shortened by the modeled hit and only the
+  uncached suffix is charged as prefill service, with the identical
+  float expressions as the optimized core.  Off, every expression
+  reduces to the pre-cache arithmetic bit-for-bit (``hit == 0.0`` and
+  ``x - 0.0 == x`` for positive prefills).
 """
 
 from __future__ import annotations
@@ -98,6 +106,7 @@ class ReferenceClusterSim:
         swap_penalty: float = 0.2,       # seconds added on re-admission
         listener: Any = None,
         token_events: bool = False,
+        prefix_cache: bool = False,
     ):
         self.sched = scheduler
         self.m = float(total_kv)
@@ -106,6 +115,7 @@ class ReferenceClusterSim:
         self.swap_penalty = float(swap_penalty)
         self.listener = listener
         self.token_events = bool(token_events)
+        self.prefix_cache = bool(prefix_cache)
 
     def _emit(self, event: str, *args) -> None:
         if self.listener is not None:
@@ -128,6 +138,7 @@ class ReferenceClusterSim:
         rid_counter = 0
         t = 0.0
         result = SimResult(jct={}, finish={})
+        seeded_groups: set[str] = set()
         _sched_clock = 0.0
         _decisions = 0
         _key_evals = 0
@@ -140,9 +151,13 @@ class ReferenceClusterSim:
         def submit_stage(agent: SimAgent, now: float) -> None:
             nonlocal rid_counter
             specs = agent.stages[agent.next_stage]
+            hints = None
+            if (agent.cached_hints is not None
+                    and agent.next_stage < len(agent.cached_hints)):
+                hints = agent.cached_hints[agent.next_stage]
             agent.next_stage += 1
             agent.live_inferences += len(specs)
-            for spec in specs:
+            for i, spec in enumerate(specs):
                 waiting.append(
                     Request(
                         agent_id=agent.agent_id,
@@ -150,9 +165,44 @@ class ReferenceClusterSim:
                         spec=spec,
                         submit_time=now,
                         pred_cost=inference_cost(spec, agent.family),
+                        cached_prefix=(
+                            float(hints[i])
+                            if hints is not None and i < len(hints) else 0.0
+                        ),
                     )
                 )
                 rid_counter += 1
+
+        def prefix_hit(req: Request, now: float, deferred: list) -> float:
+            """Analytic prefix-cache hit — LOCKSTEP with the optimized
+            core's ``_prefix_hit`` (same expressions, same seeded-group
+            rule, same accounting); 0.0 with the cache off."""
+            if not self.prefix_cache:
+                return 0.0
+            agent = by_id[req.agent_id]
+            base = 0.0
+            if agent.prefix_group and agent.prefix_group in seeded_groups:
+                base = float(agent.shared_prefix)
+            hit = max(base, float(req.cached_prefix))
+            if hit > req.spec.prefill:
+                hit = float(req.spec.prefill)
+            if agent.prefix_group:
+                seeded_groups.add(agent.prefix_group)
+            aid = req.agent_id
+            result.agent_prefill_tokens[aid] = (
+                result.agent_prefill_tokens.get(aid, 0.0)
+                + req.spec.prefill
+            )
+            if hit > 0.0:
+                result.agent_hit_tokens[aid] = (
+                    result.agent_hit_tokens.get(aid, 0.0) + hit
+                )
+                result.prefill_tokens_saved += hit
+                deferred.append(
+                    ("on_prefix_hit", aid, req.rid, hit,
+                     float(req.spec.prefill), now)
+                )
+            return hit
 
         def occupancy(now: float) -> float:
             return sum(r.occupancy(now, self.decode_rate) for r in running)
@@ -225,9 +275,10 @@ class ReferenceClusterSim:
                     if not (fits or solo_oversized):
                         break
                     waiting.pop(0)
-                    pf = now + req.spec.prefill / self.prefill_rate
+                    hit = prefix_hit(req, now, deferred)
+                    pf = now + (req.spec.prefill - hit) / self.prefill_rate
                     self.sched.on_service(
-                        req.agent_id, prefill_tokens=req.spec.prefill
+                        req.agent_id, prefill_tokens=req.spec.prefill - hit
                     )
                     deferred.append(("on_admit", req.agent_id, req.rid, now))
                     r_new = _Running(

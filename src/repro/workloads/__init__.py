@@ -2,6 +2,7 @@
 
 from repro.workloads.agents import (
     AGENT_CLASSES,
+    CANON_VOCAB,
     CLOSED_LOOP_CLASSES,
     SIZE_BUCKETS,
     SIZE_PROBS,
@@ -9,6 +10,7 @@ from repro.workloads.agents import (
     ClosedLoopClass,
     ClosedLoopSession,
     SampledAgent,
+    family_prefix_ids,
     sample_agent,
     sample_closed_loop,
     sample_mixed_suite,
@@ -22,6 +24,7 @@ from repro.workloads.arrivals import (
 
 __all__ = [
     "AGENT_CLASSES",
+    "CANON_VOCAB",
     "CLOSED_LOOP_CLASSES",
     "SIZE_BUCKETS",
     "SIZE_PROBS",
@@ -29,6 +32,7 @@ __all__ = [
     "ClosedLoopClass",
     "ClosedLoopSession",
     "SampledAgent",
+    "family_prefix_ids",
     "sample_agent",
     "sample_closed_loop",
     "sample_mixed_suite",

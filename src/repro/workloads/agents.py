@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import zlib
 from typing import Callable, Optional
 
 import numpy as np
@@ -251,21 +252,52 @@ class ClosedLoopClass:
     carry: float
     fanout: tuple[int, int] = (1, 1)     # parallel tool calls per turn
     stop_prob: float = 0.0               # per-turn early stop (react loops)
+    #: shared system-prompt length (tokens) prepended to EVERY turn's
+    #: prompt — identical across all sessions of the family, so a
+    #: prefix-aware KV cache reuses it across agents (and across turns)
+    sys_prefix: int = 0
 
 
 CLOSED_LOOP_CLASSES: dict[str, ClosedLoopClass] = {
     # multi-turn chat: one inference per turn, prompt grows with the full
-    # conversation history
+    # conversation history behind a family-shared system prompt
     "chat": ClosedLoopClass(
         "chat", (3, 8), (140, 40, 1.5), (90, 30, 2.0), carry=1.0,
+        sys_prefix=256,
     ),
     # tool-call react loop: thought -> 1-3 parallel tool calls, short
-    # decodes, carries only the recent observations, may stop early
+    # decodes, carries only the recent observations, may stop early;
+    # the (larger) shared prefix models the tool-catalog preamble
     "react": ClosedLoopClass(
         "react", (2, 10), (240, 60, 2.0), (48, 16, 2.0), carry=0.35,
-        fanout=(1, 3), stop_prob=0.2,
+        fanout=(1, 3), stop_prob=0.2, sys_prefix=384,
     ),
 }
+
+
+#: canonical (workload-scale) token-id space for the deterministic prompt
+#: streams; engine backends fold ids into their own vocab with ``%``
+CANON_VOCAB = 1 << 20
+
+_PREFIX_IDS: dict[str, np.ndarray] = {}
+
+
+def family_prefix_ids(cls_name: str) -> np.ndarray:
+    """The family's shared system-prompt token ids (deterministic).
+
+    Seeded from a CRC of the family name — stable across processes and
+    runs (unlike ``hash``), so every session of a family, in every
+    backend and every benchmark process, sees the byte-identical prefix.
+    """
+    ids = _PREFIX_IDS.get(cls_name)
+    if ids is None:
+        cls = CLOSED_LOOP_CLASSES[cls_name]
+        seed = zlib.crc32(f"sys-prefix:{cls_name}".encode())
+        ids = np.random.default_rng(seed).integers(
+            0, CANON_VOCAB, size=int(cls.sys_prefix)
+        )
+        _PREFIX_IDS[cls_name] = ids
+    return ids
 
 
 @dataclasses.dataclass
@@ -287,18 +319,62 @@ class ClosedLoopSession:
     _rng: np.random.Generator
     _turn: int = 1
     _history: float = 0.0                # accumulated output tokens
+    #: separate RNG for the session's canonical prompt token stream —
+    #: decoupled from ``_rng`` so demand sampling is unaffected by how
+    #: many prompt ids a turn consumes.  ``None``: no pinned prompts
+    #: (manually built sessions), backends synthesize instead.
+    _token_rng: Optional[np.random.Generator] = None
+    _stream: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, dtype=np.int64)
+    )
+    _seen_prompt: int = 0                # longest prompt issued so far
+    #: canonical prompt ids / expected cached-prefix lengths of the most
+    #: recently sampled stage (what the serving layer forwards through
+    #: ``Backend.submit_stage``)
+    last_prompt_ids: Optional[list] = None
+    last_cached_hints: Optional[list] = None
+
+    def _prompt_for(self, p: int) -> np.ndarray:
+        """Canonical ids for a ``p``-token prompt: the family's shared
+        system prefix followed by this session's private stream.  Every
+        prompt of a session is a prefix of every longer one — each turn
+        literally re-sends the conversation so far, which is the reuse
+        a prefix cache exploits."""
+        base = family_prefix_ids(self.cls.name)
+        if p <= len(base):
+            return base[:p]
+        need = p - len(base)
+        while len(self._stream) < need:
+            grow = max(1024, need - len(self._stream))
+            self._stream = np.concatenate(
+                [self._stream, self._token_rng.integers(0, CANON_VOCAB,
+                                                        size=grow)]
+            )
+        return np.concatenate([base, self._stream[:need]])
 
     def _sample_stage(self) -> list[InferenceSpec]:
         c = self.cls
         n = int(self._rng.integers(c.fanout[0], c.fanout[1] + 1))
         specs = []
+        prompt_ids: list[np.ndarray] = []
+        hints: list[float] = []
         for _ in range(n):
-            p = c.carry * self._history / max(1, n)
+            p = c.sys_prefix + c.carry * self._history / max(1, n)
             p += float(np.clip(skew_normal(self._rng, *c.prefill), 16, 65536))
             p = min(p, 4096.0)           # context-window clamp
             d = float(np.clip(skew_normal(self._rng, *c.decode), 4, 8192))
             specs.append(InferenceSpec(prefill=int(p), decode=max(1, int(d))))
+            # the hint is what THIS session knows it already sent (turn 1
+            # hints 0 even though the family prefix may be warm — the
+            # sim's group seeding / the engine's allocator add that part)
+            hints.append(float(min(int(p), self._seen_prompt)))
+            if self._token_rng is not None:
+                prompt_ids.append(self._prompt_for(int(p)))
+            self._seen_prompt = max(self._seen_prompt, int(p))
         self._history += float(sum(s.decode for s in specs))
+        self.last_prompt_ids = prompt_ids if self._token_rng is not None \
+            else None
+        self.last_cached_hints = hints
         return specs
 
     def __call__(self, outcome) -> Optional[list[InferenceSpec]]:
@@ -316,6 +392,9 @@ def sample_closed_loop(
     """Sample one closed-loop session (first turn eager, rest lazy)."""
     cls = CLOSED_LOOP_CLASSES[cls_name]
     child = np.random.default_rng(int(rng.integers(0, 2**63)))
+    # the prompt-stream RNG is seeded by one dedicated draw so demand
+    # sampling and token-id generation cannot perturb each other
+    token_rng = np.random.default_rng(int(child.integers(0, 2**63)))
     max_turns = int(child.integers(cls.turns[0], cls.turns[1] + 1))
     session = ClosedLoopSession(
         cls=cls,
@@ -323,6 +402,7 @@ def sample_closed_loop(
         expected_cost=0.0,
         max_turns=max_turns,
         _rng=child,
+        _token_rng=token_rng,
     )
     session.first_stage = session._sample_stage()
 
@@ -334,7 +414,10 @@ def sample_closed_loop(
     fan = 0.5 * (cls.fanout[0] + cls.fanout[1])
     est, hist = [], 0.0
     for _ in range(max(1, int(round(exp_turns)))):
-        p = min(4096.0, cls.prefill[0] + cls.carry * hist / max(1.0, fan))
+        p = min(
+            4096.0,
+            cls.sys_prefix + cls.prefill[0] + cls.carry * hist / max(1.0, fan),
+        )
         est.extend(
             [InferenceSpec(int(p), int(cls.decode[0]))]
             * max(1, int(round(fan)))

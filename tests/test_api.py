@@ -83,6 +83,7 @@ def test_registry_unknown_name_and_duplicates():
 def test_all_schedulers_canonical_order():
     assert core.ALL_SCHEDULERS == [
         "vllm-fcfs", "vllm-sjf", "parrot", "vtc", "srjf", "justitia",
+        "locality_fair",
     ]
 
 

@@ -160,4 +160,70 @@ def test_main_writes_out_and_discovers_defaults(bench_pair, tmp_path,
     assert DEFAULT_CANDIDATES == (
         "BENCH_sim.json", "BENCH_sim_quick.json",
         "BENCH_engine.json", "BENCH_engine_quick.json",
+        "BENCH_cache.json", "BENCH_cache_quick.json",
+    )
+
+
+CACHE_DATA = {
+    "benchmark": "prefix_cache_perf",
+    "quick": True,
+    "config": {
+        "family": "chat", "agents": 32, "pool_tokens": 384,
+        "delay_bound_ratio": 1.15,
+    },
+    "gates": {
+        "cache_off_bit_identical": True,
+        "locality_hit_gt_justitia": True,
+        "max_delay_ratio": 0.972,
+    },
+    "engine_cells": [
+        {
+            "scheduler": "justitia", "hit_rate": 0.728,
+            "prefill_tokens_saved": 11600.0, "evictions": 162.0,
+            "jct_mean_delta": -259.0, "jct_max_delta": -468.0,
+        },
+        {
+            "scheduler": "locality_fair", "hit_rate": 0.754,
+            "prefill_tokens_saved": 12016.0, "evictions": 135.0,
+            "jct_mean_delta": -401.1, "jct_max_delta": -523.0,
+        },
+    ],
+    "sim_cells": [
+        {
+            "scheduler": "justitia", "hit_fraction_mean": 0.813,
+            "jct_mean_delta": -0.94,
+        },
+        {
+            "scheduler": "locality_fair", "hit_fraction_mean": 0.813,
+            "jct_mean_delta": -0.97,
+        },
+    ],
+    "deficit_sweep": [
+        {"bound_pools": 0.5, "hit_rate": 0.567, "jct_max": 795.0},
+        {"bound_pools": 1.0, "hit_rate": 0.754, "jct_max": 651.0},
+    ],
+}
+
+
+def test_render_cache_golden_rows(tmp_path):
+    path = tmp_path / "BENCH_cache_quick.json"
+    path.write_text(json.dumps(CACHE_DATA))
+    md = render([path])
+    lines = md.splitlines()
+    assert ("## BENCH_cache_quick.json — prefix cache fairness-vs-hit-rate "
+            "(`benchmarks/perf_cache.py`)") in lines
+    assert any(
+        "Tier: **quick (CI)**" in ln and "chat family, 32 sessions" in ln
+        and "cache-off bit-identical: **True**" in ln
+        and "max-delay ratio 0.972" in ln
+        for ln in lines
+    )
+    assert ("| justitia | 0.728 | 11,600.0 | 162.0 | -259.0 | -468.0 "
+            "| 0.813 | -0.94 |") in lines
+    assert ("| locality_fair | 0.754 | 12,016.0 | 135.0 | -401.1 "
+            "| -523.0 | 0.813 | -0.97 |") in lines
+    assert any(
+        "Deficit-bound sweep (locality_fair)" in ln
+        and "0.5x pool: hit 0.567" in ln and "1.0x pool: hit 0.754" in ln
+        for ln in lines
     )
