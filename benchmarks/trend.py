@@ -31,6 +31,8 @@ DEFAULT_CANDIDATES = (
     "BENCH_engine_quick.json",
     "BENCH_cache.json",
     "BENCH_cache_quick.json",
+    "BENCH_slo.json",
+    "BENCH_slo_quick.json",
 )
 
 
@@ -197,10 +199,47 @@ def render_cache(name: str, data: dict) -> list[str]:
     return lines
 
 
+def render_slo(name: str, data: dict) -> list[str]:
+    lines = [f"## {name} — fused prefill SLO latency "
+             "(`benchmarks/perf_slo.py`)", ""]
+    tier = "quick (CI)" if data.get("quick") else "full"
+    gates = data.get("gates", {})
+    cfg = data.get("config", {})
+    lines.append(
+        f"Tier: **{tier}** · {'/'.join(cfg.get('families', []))} tiers, "
+        f"{cfg.get('agents', '?')} sessions, pool "
+        f"{cfg.get('pool_tokens', '?')}, chunk "
+        f"{cfg.get('prefill_chunk', '?')} · fused-off bit-identical: "
+        f"**{gates.get('fused_off_bit_identical', '?')}** · fused TTFT "
+        f"p99 improves: **{gates.get('fused_ttft_p99_improves', '?')}** "
+        f"at JCT ratio {gates.get('jct_ratio', '?')} "
+        f"(bound {cfg.get('jct_bound_ratio', '?')})"
+    )
+    lines.append("")
+    lines.append("| scheduler | TTFT p99 off | TTFT p99 fused "
+                 "| SLO off | SLO fused | JCT ratio | sim TTFT p99 "
+                 "| sim SLO |")
+    lines.append("|---|---:|---:|---:|---:|---:|---:|---:|")
+    sim_by = {c["scheduler"]: c for c in data.get("sim_cells", [])}
+    for cell in data.get("engine_cells", []):
+        sim = sim_by.get(cell["scheduler"], {})
+        lines.append(
+            f"| {cell['scheduler']} | {_fmt(cell['ttft_p99_off'])} "
+            f"| {_fmt(cell['ttft_p99_on'])} "
+            f"| {cell['slo_off']:.3f} | {cell['slo_on']:.3f} "
+            f"| {cell['jct_ratio']:.3f} "
+            f"| {_fmt(sim.get('ttft_p99', float('nan')))} "
+            f"| {sim.get('slo_attainment', float('nan')):.3f} |"
+        )
+    lines.append("")
+    return lines
+
+
 RENDERERS = {
     "sim_core_perf": render_sim,
     "engine_hot_path_perf": render_engine,
     "prefix_cache_perf": render_cache,
+    "slo_perf": render_slo,
 }
 
 

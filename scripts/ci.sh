@@ -78,6 +78,9 @@ python -m benchmarks.perf_engine --quick --out BENCH_engine_quick.json
 echo "== perf: benchmarks/perf_cache.py --quick (cache-off oracle + prefix-cache bench) =="
 python -m benchmarks.perf_cache --quick --out BENCH_cache_quick.json
 
+echo "== perf: benchmarks/perf_slo.py --quick (fused-off oracle + SLO latency bench) =="
+python -m benchmarks.perf_slo --quick --out BENCH_slo_quick.json
+
 echo "== perf: benchmarks/trend.py -> TREND.md =="
 python -m benchmarks.trend --out TREND.md > /dev/null
 

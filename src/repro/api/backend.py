@@ -338,6 +338,7 @@ class EngineBackend:
         seed: int = 0,
         max_iters: int = 200_000,
         prefix_cache: bool = False,
+        fused_prefill: bool = False,
     ):
         sched = _resolve_scheduler(scheduler, float(pool_tokens), 1.0)
         self.engine = ServeEngine(
@@ -351,6 +352,7 @@ class EngineBackend:
             prefill_chunk=prefill_chunk,
             max_window=max_window,
             prefix_cache=prefix_cache,
+            fused_prefill=fused_prefill,
         )
         self.scheduler = sched
         self.token_scale = int(token_scale)

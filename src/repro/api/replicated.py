@@ -304,6 +304,12 @@ class ReplicatedBackend:
         swaps = decisions = 0
         sched_time = 0.0
         makespan = 0.0
+        # fleet-level prefix-cache metrics, aggregated exactly like jct:
+        # hit_fractions dict-merge (agent ids are fleet-unique — the
+        # service assigns them before routing), prefill_tokens_saved
+        # summed (children report backend-native token scales)
+        hit_fractions: dict[int, float] = {}
+        prefill_tokens_saved = 0
         for idx, child in enumerate(self.children):
             res = child.drain()
             finish.update(res.finish)
@@ -312,6 +318,10 @@ class ReplicatedBackend:
             decisions += res.sched_decisions
             sched_time += res.sched_time
             makespan = max(makespan, res.makespan)
+            hit_fractions.update(res.metrics.get("hit_fractions") or {})
+            prefill_tokens_saved += res.metrics.get(
+                "prefill_tokens_saved", 0
+            ) or 0
             per_replica.append(
                 {
                     "backend": child.name,
@@ -344,6 +354,8 @@ class ReplicatedBackend:
                 "global_virtual_time": snap.global_virtual_time,
                 "virtual_lag": snap.lag,
                 "virtual_times": list(snap.virtual_times),
+                "hit_fractions": hit_fractions,
+                "prefill_tokens_saved": prefill_tokens_saved,
             },
         )
 

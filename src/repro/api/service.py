@@ -35,7 +35,17 @@ from repro.api.events import (
     StageOutcome,
     TokenGenerated,
 )
-from repro.sim.metrics import JctStats, fair_ratios, fairness_stats, jct_stats
+from repro.sim.metrics import (
+    JctStats,
+    LatencyStats,
+    SloStats,
+    SloTier,
+    fair_ratios,
+    fairness_stats,
+    jct_stats,
+    latency_stats,
+    slo_attainment,
+)
 
 
 @dataclasses.dataclass
@@ -113,17 +123,77 @@ class MetricsRecorder:
         self.finish: dict[int, float] = {}
         self.event_counts: dict[str, int] = {}
         self.replica_jct: dict[int, dict[int, float]] = {}
+        # latency accounting (PR 7), fed by the streamed token events —
+        # both backends stamp them in workload seconds, so TTFT/TBT fall
+        # out of the same stream on either
+        self.arrival: dict[int, float] = {}
+        self.first_token: dict[int, float] = {}       # agent -> time
+        self.last_token: dict[int, float] = {}
+        #: per-request token spans, keyed (replica, rid) — rids are only
+        #: unique per child backend in a replicated fleet
+        self._req_first: dict = {}
+        self._req_last: dict = {}
+        self._req_count: dict = {}
+        self._req_agent: dict = {}
 
     def record(self, ev: AgentEvent) -> None:
         kind = type(ev).__name__
         self.event_counts[kind] = self.event_counts.get(kind, 0) + 1
-        if isinstance(ev, AgentCompleted):
+        if isinstance(ev, AgentArrived):
+            self.arrival[ev.agent_id] = ev.time
+        elif isinstance(ev, TokenGenerated):
+            aid = ev.agent_id
+            self.first_token.setdefault(aid, ev.time)
+            self.last_token[aid] = ev.time
+            key = (ev.replica, ev.rid)
+            self._req_first.setdefault(key, ev.time)
+            self._req_last[key] = ev.time
+            self._req_count[key] = self._req_count.get(key, 0) + 1
+            self._req_agent[key] = aid
+        elif isinstance(ev, AgentCompleted):
             self.jct[ev.agent_id] = ev.jct
             self.finish[ev.agent_id] = ev.time
             if ev.replica is not None:
                 self.replica_jct.setdefault(ev.replica, {})[
                     ev.agent_id
                 ] = ev.jct
+
+    def ttfts(self) -> dict[int, float]:
+        """Per-agent TTFT: arrival -> first streamed token (any request).
+
+        Queueing-inclusive — the latency the agent's user experiences,
+        which is where admission-stall interference shows up.  Empty
+        without token streaming.
+        """
+        return {
+            aid: t - self.arrival.get(aid, 0.0)
+            for aid, t in self.first_token.items()
+        }
+
+    def tbts(self) -> dict[int, float]:
+        """Per-agent mean time-between-tokens, pooled over the agent's
+        requests (``sum(span) / sum(tokens - 1)``): cross-stage queueing
+        and prefill gaps are excluded, so this is pure decode cadence.
+        Agents whose requests all decoded a single token have no sample.
+        """
+        span: dict[int, float] = {}
+        gaps: dict[int, int] = {}
+        for key, n in self._req_count.items():
+            if n < 2:
+                continue
+            aid = self._req_agent[key]
+            span[aid] = span.get(aid, 0.0) + (
+                self._req_last[key] - self._req_first[key]
+            )
+            gaps[aid] = gaps.get(aid, 0) + (n - 1)
+        return {aid: span[aid] / gaps[aid] for aid in span}
+
+    def latency_stats(self) -> LatencyStats:
+        return latency_stats(self.ttfts(), self.tbts())
+
+    def slo_stats(self, tiers: "dict[int, SloTier]") -> SloStats:
+        """SLO attainment for the given agent -> tier assignment."""
+        return slo_attainment(self.ttfts(), self.tbts(), tiers)
 
     def jct_stats(self) -> JctStats:
         return jct_stats(self.jct)
@@ -156,6 +226,10 @@ class ServiceResult:
     event_counts: dict
     #: replica -> JctStats when served by a replicated fleet (else empty)
     per_replica: dict = dataclasses.field(default_factory=dict)
+    #: TTFT/TBT percentiles from the streamed token events (all-zero
+    #: unless the service streamed tokens — engine default, sim
+    #: ``token_events=True``)
+    latency: Optional[LatencyStats] = None
 
 
 class _Dispatcher:
@@ -450,4 +524,5 @@ class AgentService:
             metrics=res.metrics,
             event_counts=dict(self.recorder.event_counts),
             per_replica=self.recorder.per_replica_jct_stats(),
+            latency=self.recorder.latency_stats(),
         )

@@ -133,6 +133,7 @@ def service_for_backend(
     router: str = "round_robin",
     stream: bool = False,
     prefix_cache: bool = False,
+    fused_prefill: bool = False,
 ) -> AgentService:
     """Build an AgentService for ``backend`` in {"sim", "engine"}.
 
@@ -154,6 +155,13 @@ def service_for_backend(
     backends (the engine's content-hash block index / the sim's analytic
     hit model) — per-agent hit fractions and ``prefill_tokens_saved``
     land in the drained result's ``metrics``.
+
+    ``fused_prefill=True`` (engine only; ignored by the sim, whose
+    analytic prefill never stalls decoders) streams each admitted
+    prompt's uncached suffix into the fused decode windows one
+    ``prefill_chunk`` slice per iteration instead of charging a blocking
+    whole-prefill pass at admission — the interference-aware batch
+    formation path.
     """
     if backend == "sim":
         return AgentService.sim(
@@ -179,5 +187,5 @@ def service_for_backend(
         pool_tokens=pool_tokens, max_batch=max_batch, cache_len=cache_len,
         token_scale=token_scale, time_scale=1.0,
         replicas=replicas, router=router, seed=seed,
-        prefix_cache=prefix_cache,
+        prefix_cache=prefix_cache, fused_prefill=fused_prefill,
     )

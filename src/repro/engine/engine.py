@@ -139,6 +139,70 @@ def _decode_window_jit(model, k: int, params, cache, state):
     return cache, state, toks
 
 
+@functools.partial(jax.jit, static_argnums=(0, 1, 2), donate_argnums=(4, 5))
+def _fused_window_jit(model, k: int, chunk: int, params, cache, state,
+                      pf_tokens, pf_meta):
+    """K fused decode+prefill iterations: each scanned step advances all B
+    decode slots one token (same body as ``_decode_window_jit``) AND runs
+    one bounded lens-masked prefill slice of the single admitted
+    (prefilling) slot through ``Model.prefill_slice``.
+
+    ``pf_tokens``: (K, chunk) int32 prompt slices (zero-padded);
+    ``pf_meta``: (3,) int32 [slot, start0, total] — the prefilling cache
+    row, the first slice's absolute write offset, and the full prompt
+    length.  The prefilling slot rides the decode batch frozen (its
+    ``rem`` row is 0) but its ``pos`` row is overridden to chase the next
+    slice start: step i's frozen-slot decode garbage lands at
+    ``start0 + i*chunk`` — exactly the rows the same step's slice
+    immediately overwrites — and the carried-out ``pos`` equals the next
+    window's ``start0``, so consecutive fused windows chain without a
+    host round-trip.
+
+    Returns the (K, B+1) token matrix: columns 0..B-1 are the decode
+    samples, column B is the prefill slot's argmax at the prompt's final
+    position — valid only at the step whose slice exhausts the prompt
+    (the request's first token; garbage at earlier steps).  Still ONE
+    device->host transfer per window."""
+    slot, start0, total = pf_meta[0], pf_meta[1], pf_meta[2]
+    n_slots = state.shape[1]
+    is_pf = jnp.arange(n_slots, dtype=jnp.int32) == slot
+
+    def body(carry, xs):
+        cache, state = carry
+        toks_slice, i = xs
+        last_tok, pos, rem = state
+        logits, cache = model.decode(params, cache, last_tok[:, None], pos)
+        nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+        live = rem > 0
+        new_pos = jnp.where(live, pos + 1, pos)
+        new_pos = jnp.where(is_pf, start0 + (i + 1) * chunk, new_pos)
+        state = jnp.stack([
+            jnp.where(live, nxt, last_tok),
+            new_pos,
+            rem - live.astype(rem.dtype),
+        ])
+        pf_logits, cache = model.prefill_slice(
+            params, cache, toks_slice, slot, start0 + i * chunk, total
+        )
+        pf_tok = jnp.argmax(pf_logits, axis=-1).astype(jnp.int32)
+        return (cache, state), jnp.concatenate([nxt, pf_tok[None]])
+
+    (cache, state), toks = jax.lax.scan(
+        body, (cache, state), (pf_tokens, jnp.arange(k, dtype=jnp.int32))
+    )
+    return cache, state, toks
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _clear_slot_kvpos_jit(cache, slot):
+    """Invalidate one slot's attention rows (``kv_pos = -1``) ahead of a
+    fused prefill: the slices only write the prompt's own positions, so a
+    reused slot's stale-but-valid rows from its previous occupant must be
+    masked out first (the batched ``_prefill_write_jit`` path instead
+    overwrites the whole slot, lens-masked)."""
+    return dict(cache, kv_pos=cache["kv_pos"].at[:, slot].set(-1))
+
+
 @functools.partial(jax.jit, static_argnums=(0, 1, 2), donate_argnums=(4,))
 def _prefill_write_jit(model, cache_len: int, chunk: int, params, cache,
                        tokens, lens, slots):
@@ -226,6 +290,24 @@ class EngineRequest:
 
 
 @dataclasses.dataclass
+class _FusedPrefill:
+    """The single in-flight fused prefill (``fused_prefill=True`` only).
+
+    The request holds a slot and its blocks (all allocated at admission)
+    but is NOT in ``slot_req`` or the running queue until its last slice
+    lands — it cannot decode, be a swap victim, or complete while
+    prefilling.  ``written`` counts K/V rows already resident (starts at
+    the prefix-cache hit); the remaining slices cover
+    ``[written, total)``.
+    """
+
+    req: EngineRequest
+    slot: int
+    total: int          # len(prompt)
+    written: int        # rows already written (prefix hit + done slices)
+
+
+@dataclasses.dataclass
 class EngineAgent:
     agent_id: int
     arrival_iter: int
@@ -276,6 +358,7 @@ class ServeEngine:
         max_window: int = 32,
         listener: Any = None,
         prefix_cache: bool = False,
+        fused_prefill: bool = False,
     ):
         self.model = model
         self.params = params
@@ -288,6 +371,29 @@ class ServeEngine:
         #: engine builds the plain allocator and is bit-identical to the
         #: pre-cache behaviour.
         self.prefix_cache = bool(prefix_cache)
+        #: fused prefill-in-window (PR 7): admission claims a slot and its
+        #: blocks at ZERO clock cost, then the prompt's uncached suffix is
+        #: prefilled one bounded ``prefill_chunk`` slice per iteration
+        #: INSIDE the fused decode windows (``_fused_window_jit``), so
+        #: running decoders keep producing tokens while a prompt streams
+        #: in instead of stalling ``ceil(suffix/chunk)-1`` iterations at
+        #: every admission.  One fused prefill is in flight at a time;
+        #: windows end exactly at slice exhaustion (the new ``_window_size``
+        #: trigger — that is the first instant admission can become
+        #: possible again).  Off (the default) no fused code path runs and
+        #: the engine stays bit-identical to ``engine/reference.py``.
+        self.fused_prefill = bool(fused_prefill)
+        if self.fused_prefill:
+            ring = bool(model.cfg.sliding_window) and min(
+                cache_len, model.cfg.sliding_window
+            ) < cache_len
+            if model.cfg.kind not in ("dense", "moe", "vlm") or ring:
+                raise ValueError(
+                    "fused_prefill=True needs a full-cache attention "
+                    f"family (dense/moe/vlm, no ring buffer); got "
+                    f"kind={model.cfg.kind!r} ring={ring}"
+                )
+        self._pf: Optional[_FusedPrefill] = None
         alloc_cls = PrefixAwareAllocator if prefix_cache else BlockAllocator
         self.alloc = alloc_cls(pool_tokens, block_size)
         self.max_batch = max_batch
@@ -344,7 +450,8 @@ class ServeEngine:
         self.metrics = {"prefills": 0, "decode_steps": 0, "swaps": 0,
                         "tokens": 0, "sorts": 0, "key_evals": 0,
                         "host_syncs": 0, "windows": 0,
-                        "prefill_tokens_saved": 0, "prefix_hits": 0}
+                        "prefill_tokens_saved": 0, "prefix_hits": 0,
+                        "fused_slices": 0}
         # per-agent prefix-cache accounting (engine-scale tokens)
         self.agent_prefill_tokens: dict[int, int] = {}
         self.agent_hit_tokens: dict[int, int] = {}
@@ -376,7 +483,23 @@ class ServeEngine:
                 self.model, k, self.params, self.cache, self._d_state
             )
             jax.block_until_ready(toks)
+            if self.fused_prefill:
+                # fused windows: the dummy prefill targets the OOB slot
+                # (scatter-dropped) and no slot is live, so state/cache are
+                # untouched beyond one garbage row the first admission
+                # clears or overwrites
+                pf_tokens = jnp.zeros((k, self.prefill_chunk), jnp.int32)
+                pf_meta = jnp.array([self.max_batch, 0, 1], jnp.int32)
+                self.cache, self._d_state, toks = _fused_window_jit(
+                    self.model, k, self.prefill_chunk, self.params,
+                    self.cache, self._d_state, pf_tokens, pf_meta,
+                )
+                jax.block_until_ready(toks)
             k <<= 1
+        if self.fused_prefill:
+            self.cache = _clear_slot_kvpos_jit(self.cache, 0)
+            jax.block_until_ready(self.cache["kv_pos"])
+            self._slots_stale = True
         batched_ok = self.model.cfg.kind in ("dense", "moe", "vlm")
         # cover the pow2 CEILING of max_batch: _prefill_batch pads a
         # k-request pass to 1 << (k-1).bit_length(), which exceeds
@@ -562,7 +685,10 @@ class ServeEngine:
     @property
     def busy(self) -> bool:
         """Work is queued or running (pending future arrivals excluded)."""
-        return bool(self.waiting or self.swapped or self.slot_req)
+        return bool(
+            self.waiting or self.swapped or self.slot_req
+            or self._pf is not None
+        )
 
     def run(self, until: int) -> None:
         """Advance the engine clock to iteration ``until`` (re-entrant).
@@ -630,6 +756,7 @@ class ServeEngine:
             f"{self.now}): waiting={len(self.waiting)} "
             f"swapped={len(self.swapped)} running={len(self.slot_req)} "
             f"pending_arrivals={len(self.pending)} "
+            f"fused_prefill_in_flight={self._pf is not None} "
             f"free_slots={len(self.slot_free)}/{self.max_batch} "
             f"free_blocks={self.alloc.free_blocks}/{self.alloc.n_blocks} "
             f"completed_agents={len(self.completions)}/{len(self.agents)} "
@@ -671,6 +798,10 @@ class ServeEngine:
             self._sync_queue_metrics()
             return
         self.waiting.refresh(version)
+        if self.fused_prefill:
+            self._admit_fused()
+            self._sync_queue_metrics()
+            return
         batch: list[EngineRequest] = []
         while self.waiting and len(self.slot_free) > len(batch):
             req = self.waiting.peek()
@@ -689,6 +820,102 @@ class ServeEngine:
         if batch:
             self._prefill_batch(batch)
         self._sync_queue_metrics()
+
+    def _admit_fused(self) -> None:
+        """Fused-mode admission: claim ONE waiting request at zero clock.
+
+        The slot and every prompt block are allocated now, the scheduler
+        service deal and ``on_admit`` are stamped now (at an unmoved
+        ``now``), but the uncached suffix's K/V is produced one slice per
+        iteration inside the following fused decode windows — running
+        decoders never stall.  A prefix-cache hit's head is written
+        immediately by the batched prefill program (its KV is presumed
+        resident — the same zero-iteration assumption the unfused path
+        makes); a fully-cached prompt therefore becomes a decoder with no
+        fused slices at all, preserving the shortened-TTFT semantics.
+        """
+        if self._pf is not None or not self.slot_free or not self.waiting:
+            return
+        req = self.waiting.peek()
+        if self.prefix_cache:
+            if not self.alloc.can_admit_prefix(req.prompt):
+                return
+            self.waiting.popleft()
+            _, hit = self.alloc.admit_prefix(req.rid, req.prompt)
+            req.cached_tokens = int(hit)
+        else:
+            if not self.alloc.can_admit(len(req.prompt) + 1):
+                return
+            self.waiting.popleft()
+            self.alloc.admit(req.rid, len(req.prompt))
+        p = len(req.prompt)
+        hit = req.cached_tokens
+        slot = self.slot_free.pop()
+        req.slot = slot
+        self.metrics["prefills"] += 1
+        self.sched.on_service(
+            req.agent_id, prefill_tokens=float(p - hit)
+        )
+        if self._grouped:
+            self._dirty_agents.add(req.agent_id)
+        self._emit("on_admit", req.agent_id, req.rid, float(self.now))
+        self.agent_prefill_tokens[req.agent_id] = (
+            self.agent_prefill_tokens.get(req.agent_id, 0) + p
+        )
+        if hit:
+            self.agent_hit_tokens[req.agent_id] = (
+                self.agent_hit_tokens.get(req.agent_id, 0) + hit
+            )
+            self.metrics["prefill_tokens_saved"] += hit
+            self.metrics["prefix_hits"] += 1
+            self._emit(
+                "on_prefix_hit", req.agent_id, req.rid,
+                int(hit), int(p), float(self.now),
+            )
+        if hit >= p:
+            # whole prompt cached: one batched write of the resident head
+            # also samples the first token — zero fused slices, zero extra
+            # iterations, exactly the unfused full-hit cost
+            nxt = self._write_prefix_head(req, p, fetch_tok=True)
+            self._fused_to_decoder(req, nxt)
+            return
+        if hit > 0:
+            self._write_prefix_head(req, hit, fetch_tok=False)
+        else:
+            # slices only write the prompt's own rows: mask out the slot's
+            # stale rows from its previous occupant first
+            self.cache = _clear_slot_kvpos_jit(self.cache, slot)
+        self._pf = _FusedPrefill(req=req, slot=slot, total=p, written=hit)
+        self._slots_stale = True
+
+    def _write_prefix_head(self, req: EngineRequest, n: int,
+                           fetch_tok: bool):
+        """Write the first ``n`` prompt tokens' K/V into the request's slot
+        via the batched prefill program (single row, 64-token bucket)."""
+        bucket = -(-max(n, 1) // 64) * 64
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :n] = req.prompt[:n]
+        self.cache, nxt = _prefill_write_jit(
+            self.model, self.cache_len, self.prefill_chunk,
+            self.params, self.cache,
+            jnp.asarray(toks), jnp.asarray([n], dtype=jnp.int32),
+            jnp.asarray([req.slot], dtype=jnp.int32),
+        )
+        if fetch_tok:
+            self.metrics["host_syncs"] += 1
+            return int(np.asarray(nxt)[0])
+        return None
+
+    def _fused_to_decoder(self, req: EngineRequest, first_tok: int) -> None:
+        """Promote a finished fused prefill to a running decoder: its first
+        decode step — the request's first emitted token — runs in the next
+        window."""
+        slot = req.slot
+        self.slot_req[slot] = req
+        self.slot_last_tok[slot] = first_tok
+        self.slot_pos[slot] = len(req.prompt)
+        self.running.push(req)
+        self._slots_stale = True
 
     def _sync_queue_metrics(self) -> None:
         self.metrics["sorts"] = (
@@ -860,6 +1087,12 @@ class ServeEngine:
         state[1] = self.slot_pos
         for slot, req in self.slot_req.items():
             state[2, slot] = req.max_new_tokens - req.generated
+        if self._pf is not None:
+            # the prefilling slot rides the window frozen (rem 0) with its
+            # pos at the next slice start — the fused program's choreography
+            # relies on it (see _fused_window_jit)
+            state[1, self._pf.slot] = self._pf.written
+            state[2, self._pf.slot] = 0
         self._d_state = jnp.asarray(state)
         self._slots_stale = False
         self.metrics["host_syncs"] += 1
@@ -897,6 +1130,12 @@ class ServeEngine:
                 self._swap_in_fits(req, free) for req in self.swapped
             )
         if self.waiting:
+            if self._pf is not None:
+                # fused mode runs ONE prefill at a time: while it is in
+                # flight the waiting queue is blocked, and the window is
+                # separately capped at slice exhaustion — the first
+                # instant admission can become possible again
+                return False
             if static:
                 return self._admit_fits(self.waiting.peek(), free)
             if len(self.waiting) > 64:
@@ -944,13 +1183,21 @@ class ServeEngine:
           finishes a STAGE with a successor submits new work and bounds
           the window instead.  With a backlog queued, every completion
           frees a slot an admission could take, so the window ends at the
-          first one.
+          first one;
+        * (fused prefill only) the in-flight prefill's slices do not run
+          out before the window's last step (K <= remaining slices): its
+          last slice completing turns the slot into a decoder AND unblocks
+          waiting-queue admission, both scheduling actions — the window
+          ends exactly there.
         """
         cap = self.max_window if limit is None else min(
             self.max_window, max(1, int(limit))
         )
         if self.pending:
             cap = min(cap, int(self.pending[0][0]) - self.now)
+        if self._pf is not None:
+            chunk = self.prefill_chunk
+            cap = min(cap, -(-(self._pf.total - self._pf.written) // chunk))
         if cap <= 1:
             return 1
         if self.waiting or self.swapped:
@@ -960,18 +1207,25 @@ class ServeEngine:
             # first one
             for req in self.slot_req.values():
                 cap = min(cap, req.max_new_tokens - req.generated)
-        else:
+        elif self.slot_req:
             # empty queues: only stage-submitting completions schedule.
             # An agent's stage completes when its LAST live request does
-            # (queues empty => all its live requests are running here).
+            # (queues empty => all its live requests are running here;
+            # a fused prefill's request is NOT — its stage cannot complete
+            # within the window, so it binds nothing).
             last_done: dict[int, int] = {}
             for req in self.slot_req.values():
                 rem = req.max_new_tokens - req.generated
                 aid = req.agent_id
                 last_done[aid] = max(last_done.get(aid, 0), rem)
             # never run past the final live completion — the reference
-            # idles there, so extra frozen steps would inflate the clock
-            cap = min(cap, max(last_done.values()))
+            # idles there, so extra frozen steps would inflate the clock.
+            # With a fused prefill in flight the engine is NOT idle after
+            # the last decoder completes: the slice-exhaustion cap above
+            # already bounds the window, so the decoder bound is only
+            # applied when it is the binding one
+            if self._pf is None:
+                cap = min(cap, max(last_done.values()))
             for aid, t_stage in last_done.items():
                 agent = self.agents[aid]
                 # closed-loop agents: a callback may append a stage at ANY
@@ -997,7 +1251,7 @@ class ServeEngine:
         return 1 << (cap.bit_length() - 1)   # bucket: bounds compilations
 
     def _decode_once(self, limit: Optional[int] = None) -> int:
-        if not self.slot_req:
+        if not self.slot_req and self._pf is None:
             return 1
         # grow each running sequence by one token (may trigger swaps)
         for slot in sorted(self.slot_req):
@@ -1012,7 +1266,7 @@ class ServeEngine:
                 break
             # note: if req itself was swapped out it no longer decodes
         active = sorted(self.slot_req)
-        if not active:
+        if not active and self._pf is None:
             return 1
         k = self._window_size(limit)
         snapshot = [(slot, self.slot_req[slot]) for slot in active]
@@ -1028,10 +1282,29 @@ class ServeEngine:
                     raise AssertionError("window over-committed the pool")
         if self._slots_stale:
             self._refresh_device_slots()
-        self.cache, self._d_state, toks_dev = _decode_window_jit(
-            self.model, k, self.params, self.cache, self._d_state
-        )
-        toks = np.asarray(toks_dev)          # (k, B): THE per-window sync
+        pf = self._pf
+        if pf is not None:
+            # slice the next k prompt chunks host-side; the fused program
+            # advances one per scanned step alongside the decoders
+            chunk = self.prefill_chunk
+            sl = np.zeros((k, chunk), np.int32)
+            for j in range(k):
+                seg = pf.req.prompt[pf.written + j * chunk:
+                                    pf.written + (j + 1) * chunk]
+                sl[j, :len(seg)] = seg
+            meta = np.array([pf.slot, pf.written, pf.total], np.int32)
+            self.cache, self._d_state, toks_dev = _fused_window_jit(
+                self.model, k, chunk, self.params, self.cache,
+                self._d_state, jnp.asarray(sl), jnp.asarray(meta),
+            )
+            out = np.asarray(toks_dev)       # (k, B+1): THE per-window sync
+            toks, pf_toks = out[:, :-1], out[:, -1]
+            self.metrics["fused_slices"] += k
+        else:
+            self.cache, self._d_state, toks_dev = _decode_window_jit(
+                self.model, k, self.params, self.cache, self._d_state
+            )
+            toks = np.asarray(toks_dev)      # (k, B): THE per-window sync
         self.metrics["host_syncs"] += 1
         self.metrics["decode_steps"] += k
         self.metrics["windows"] += 1
@@ -1063,6 +1336,15 @@ class ServeEngine:
                     self._dirty_agents.add(req.agent_id)
                 if req.generated >= req.max_new_tokens:
                     self._complete(slot, req)
+        if pf is not None:
+            pf.written += k * self.prefill_chunk
+            if pf.written >= pf.total:
+                # slice exhaustion — the window's last step (the sizer
+                # capped K at exactly this): the final slice's argmax is
+                # the request's first token; it decodes from the next
+                # iteration on
+                self._pf = None
+                self._fused_to_decoder(pf.req, int(pf_toks[k - 1]))
         return k
 
     def _complete(self, slot: int, req: EngineRequest) -> None:

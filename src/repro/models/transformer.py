@@ -723,6 +723,76 @@ class Model:
         logits = self._logits(params, _gather_last(x, lens))
         return logits, cache
 
+    def prefill_slice(self, params, cache: dict, tokens, slot, start, total):
+        """One bounded prefill slice of a SINGLE batch slot against a live
+        decode cache — the serving engine's fused prefill-in-window unit.
+
+        ``tokens``: (S,) int32 chunk of the prompt (zero-padded past the
+        prompt's end); ``slot``/``start``/``total``: traced int32 scalars —
+        the cache row being prefilled, the slice's absolute write offset,
+        and the full prompt length.  Follows ``dense_block_chunk``'s rule
+        per layer: write the slice's K/V first (positions at or beyond
+        ``total`` masked to -1; writes use explicit scatter-with-drop, so
+        an out-of-range ``slot``/index never clamp-corrupts a neighbour
+        the way ``dynamic_update_slice`` would), then attend the queries
+        over the slot's whole cache with ``kv_pos <= q_pos`` masking the
+        chunk-internal future and ``kv_pos >= 0`` the unwritten rows.
+
+        Returns ``(logits (V,), cache)`` where the logits are taken at the
+        prompt's final position clipped into this slice — i.e. the
+        first-token distribution when this slice completes the prompt, and
+        garbage otherwise.  Supports the full-cache attention families
+        (dense / moe / vlm token prompts); callers gate ring (sliding
+        window smaller than the cache) layouts out, as chunked writes
+        cannot reproduce a ring wrap.
+        """
+        cfg = self.cfg
+        if cfg.kind not in ("dense", "moe", "vlm"):
+            raise ValueError(
+                f"prefill_slice: unsupported model kind {cfg.kind!r}"
+            )
+        s = tokens.shape[0]
+        idx = start + jnp.arange(s, dtype=jnp.int32)
+        positions = idx[None, :]
+        x = self._embed(params, tokens[None, :], positions)
+
+        def body(h, xs):
+            lp, kc, vc, kp = xs
+            hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+            q, k_new, v_new = attention_qkv(
+                lp["attn"], hn, positions, cfg.rope_theta, cfg.use_rope
+            )
+            kc = kc.at[slot, idx].set(k_new[0].astype(kc.dtype), mode="drop")
+            vc = vc.at[slot, idx].set(v_new[0].astype(vc.dtype), mode="drop")
+            kp = kp.at[slot, idx].set(
+                jnp.where(idx < total, idx, -1).astype(kp.dtype), mode="drop"
+            )
+            kp_row = kp[slot][None]
+            att = attention_any(
+                q, kc[slot][None], vc[slot][None],
+                window=cfg.sliding_window,
+                q_positions=positions,
+                kv_positions=kp_row,
+                kv_valid=kp_row >= 0,
+            )
+            h = h + attention_out(lp["attn"], att)
+            h2 = rms_norm(h, lp["ln2"], cfg.norm_eps)
+            if cfg.is_moe:
+                y, _ = moe_mlp(lp["moe"], h2, top_k=cfg.top_k,
+                               capacity_factor=cfg.capacity_factor)
+            else:
+                y = gated_mlp(lp["mlp"], h2)
+            return h + y, (kc, vc, kp)
+
+        x, (ks, vs, kps) = jax.lax.scan(
+            body, x, (params["blocks"], cache["k"], cache["v"],
+                      cache["kv_pos"])
+        )
+        cache = dict(cache, k=ks, v=vs, kv_pos=kps)
+        last = jnp.clip(total - 1 - start, 0, s - 1)
+        logits = self._logits(params, x[:, last][:, None, :])
+        return logits[0, 0], cache
+
     def _fill_kv(self, cache, ks, vs, lens, s):
         """Copy prefill K/V (L,B,S,n,h) into the cache's first S slots."""
         cfg = self.cfg

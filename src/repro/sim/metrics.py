@@ -43,6 +43,128 @@ def jct_stats(jct: Mapping[int, float]) -> JctStats:
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class LatencyStats:
+    """Per-request latency percentiles: TTFT (arrival -> first streamed
+    token, queueing-inclusive) and TBT (mean inter-token gap within a
+    request's decode, excluding cross-stage idle/queueing gaps)."""
+
+    ttft_mean: float
+    ttft_p50: float
+    ttft_p90: float
+    ttft_p99: float
+    tbt_mean: float
+    tbt_p50: float
+    tbt_p90: float
+    tbt_p99: float
+    n_ttft: int
+    n_tbt: int
+
+    def row(self) -> str:
+        return (
+            f"ttft mean={self.ttft_mean:.2f}s p50={self.ttft_p50:.2f}s "
+            f"p99={self.ttft_p99:.2f}s (n={self.n_ttft}) | "
+            f"tbt mean={self.tbt_mean:.3f}s p99={self.tbt_p99:.3f}s "
+            f"(n={self.n_tbt})"
+        )
+
+
+def _pcts(values) -> tuple[float, float, float, float, int]:
+    v = np.asarray(sorted(values), dtype=np.float64)
+    if v.size == 0:
+        return 0.0, 0.0, 0.0, 0.0, 0
+    return (
+        float(v.mean()),
+        float(np.percentile(v, 50)),
+        float(np.percentile(v, 90)),
+        float(np.percentile(v, 99)),
+        int(v.size),
+    )
+
+
+def latency_stats(ttfts, tbts) -> LatencyStats:
+    """Percentile summary over TTFT / TBT samples (mappings or sequences)."""
+    if isinstance(ttfts, Mapping):
+        ttfts = ttfts.values()
+    if isinstance(tbts, Mapping):
+        tbts = tbts.values()
+    tf = _pcts(ttfts)
+    tb = _pcts(tbts)
+    return LatencyStats(
+        ttft_mean=tf[0], ttft_p50=tf[1], ttft_p90=tf[2], ttft_p99=tf[3],
+        tbt_mean=tb[0], tbt_p50=tb[1], tbt_p90=tb[2], tbt_p99=tb[3],
+        n_ttft=tf[4], n_tbt=tb[4],
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class SloTier:
+    """One latency tier's targets, in workload seconds (Equinox-style
+    per-class SLOs: an agent attains its tier iff BOTH hold)."""
+
+    name: str
+    ttft: float       # max time-to-first-token
+    tbt: float        # max mean time-between-tokens
+
+
+@dataclasses.dataclass(frozen=True)
+class SloStats:
+    attainment: float                 # frac of agents meeting BOTH targets
+    ttft_attainment: float
+    tbt_attainment: float
+    per_tier: dict[str, float]        # tier name -> joint attainment
+    n: int
+
+    def row(self) -> str:
+        tiers = " ".join(
+            f"{name}={frac:.2f}" for name, frac in sorted(self.per_tier.items())
+        )
+        return (
+            f"slo={self.attainment:.2f} (ttft {self.ttft_attainment:.2f}, "
+            f"tbt {self.tbt_attainment:.2f}) [{tiers}] n={self.n}"
+        )
+
+
+def slo_attainment(
+    ttfts: Mapping[int, float],
+    tbts: Mapping[int, float],
+    tiers: Mapping[int, SloTier],
+) -> SloStats:
+    """SLO attainment over the agents that have a tier assignment.
+
+    An agent without a TTFT sample (never streamed a token) misses its
+    tier; an agent without a TBT sample (single-token decodes) vacuously
+    attains the TBT half.
+    """
+    n = ok = ok_ttft = ok_tbt = 0
+    per_tier_n: dict[str, int] = {}
+    per_tier_ok: dict[str, int] = {}
+    for aid, tier in tiers.items():
+        n += 1
+        per_tier_n[tier.name] = per_tier_n.get(tier.name, 0) + 1
+        ttft = ttfts.get(aid)
+        a_ttft = ttft is not None and ttft <= tier.ttft
+        tbt = tbts.get(aid)
+        a_tbt = tbt is None or tbt <= tier.tbt
+        ok_ttft += a_ttft
+        ok_tbt += a_tbt
+        if a_ttft and a_tbt:
+            ok += 1
+            per_tier_ok[tier.name] = per_tier_ok.get(tier.name, 0) + 1
+    if n == 0:
+        return SloStats(1.0, 1.0, 1.0, {}, 0)
+    return SloStats(
+        attainment=ok / n,
+        ttft_attainment=ok_ttft / n,
+        tbt_attainment=ok_tbt / n,
+        per_tier={
+            name: per_tier_ok.get(name, 0) / cnt
+            for name, cnt in per_tier_n.items()
+        },
+        n=n,
+    )
+
+
 def fair_ratios(
     realistic_jct: Mapping[int, float], reference_jct: Mapping[int, float]
 ) -> dict[int, float]:

@@ -6,6 +6,8 @@ from repro.workloads.agents import (
     CLOSED_LOOP_CLASSES,
     SIZE_BUCKETS,
     SIZE_PROBS,
+    SLO_CLASSES,
+    SLO_TIERS,
     AgentClass,
     ClosedLoopClass,
     ClosedLoopSession,
@@ -15,6 +17,7 @@ from repro.workloads.agents import (
     sample_closed_loop,
     sample_mixed_suite,
     skew_normal,
+    slo_tier_of,
 )
 from repro.workloads.arrivals import (
     DENSITY_WINDOWS_S,
@@ -28,6 +31,9 @@ __all__ = [
     "CLOSED_LOOP_CLASSES",
     "SIZE_BUCKETS",
     "SIZE_PROBS",
+    "SLO_CLASSES",
+    "SLO_TIERS",
+    "slo_tier_of",
     "AgentClass",
     "ClosedLoopClass",
     "ClosedLoopSession",

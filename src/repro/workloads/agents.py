@@ -27,6 +27,7 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.core.cost import InferenceSpec, MemoryFamily, agent_cost
+from repro.sim.metrics import SloTier
 
 
 def skew_normal(
@@ -272,7 +273,43 @@ CLOSED_LOOP_CLASSES: dict[str, ClosedLoopClass] = {
         "react", (2, 10), (240, 60, 2.0), (48, 16, 2.0), carry=0.35,
         fanout=(1, 3), stop_prob=0.2, sys_prefix=384,
     ),
+    # --- SLO-tiered family (PR 7): the two classes below are served
+    # TOGETHER — latency-sensitive chat-style sessions sharing the fleet
+    # with long-prompt batch summarizers whose big prefills are exactly
+    # the admission stalls fused prefill absorbs ---
+    # interactive tier: short turns, human in the loop, tight TTFT/TBT
+    "interactive": ClosedLoopClass(
+        "interactive", (3, 8), (120, 30, 1.5), (64, 20, 2.0), carry=1.0,
+        sys_prefix=256,
+    ),
+    # batch tier: few turns, very long fresh prompts (document chunks),
+    # long decodes, loose targets — throughput-oriented
+    "batch": ClosedLoopClass(
+        "batch", (1, 3), (900, 200, 1.5), (320, 80, 1.5), carry=0.25,
+        sys_prefix=256,
+    ),
 }
+
+
+#: the SLO family's class names, in submission-interleave order
+SLO_CLASSES: tuple[str, ...] = ("interactive", "batch")
+
+#: per-tier latency targets (workload seconds) for the SLO closed-loop
+#: family.  Calibrated for the canonical serving configurations
+#: (sim: decode_rate=30 tok/s; engine: time_scale mapping one iteration
+#: to ``token_scale/decode_rate`` seconds — see benchmarks/perf_slo.py):
+#: interactive agents expect a first token while a human is still
+#: watching and a readable streaming cadence; batch agents only need to
+#: start within the minute and keep moving.
+SLO_TIERS: dict[str, "SloTier"] = {
+    "interactive": SloTier("interactive", ttft=20.0, tbt=2.0),
+    "batch": SloTier("batch", ttft=120.0, tbt=8.0),
+}
+
+
+def slo_tier_of(cls_name: str) -> "Optional[SloTier]":
+    """The latency tier of a closed-loop class (None if untiered)."""
+    return SLO_TIERS.get(cls_name)
 
 
 #: canonical (workload-scale) token-id space for the deterministic prompt

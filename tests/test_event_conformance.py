@@ -243,6 +243,42 @@ def test_engine_stream_conformance(tiny_model, pool_tokens):
         assert swaps > 0, "swap-heavy cell produced no swaps"
 
 
+def test_fused_engine_stream_conformance(tiny_model):
+    """fused_prefill=True serves the same grammar: prompts riding the
+    decode windows as chunk slices must not reorder, drop, or duplicate
+    any lifecycle event, and per-request token counts still equal the
+    decode demands."""
+    model, params = tiny_model
+    rng = np.random.default_rng(13)
+    raw = [
+        (
+            float(i),
+            [
+                [
+                    (int(rng.integers(8, 25)), int(rng.integers(4, 12)))
+                    for _ in range(1 + int(rng.integers(0, 2)))
+                ]
+                for _ in range(1 + int(rng.integers(0, 2)))
+            ],
+        )
+        for i in range(6)
+    ]
+    svc = AgentService(
+        EngineBackend(
+            model, params, "justitia",
+            pool_tokens=512, block_size=16, max_batch=4,
+            cache_len=64, prefill_chunk=8, token_scale=1,
+            time_scale=1.0, fused_prefill=True,
+        )
+    )
+    handles = svc.submit_many(_specs(raw))
+    res = svc.drain()
+    assert len(res.finish) == len(raw)
+    assert svc.backend.engine.metrics["fused_slices"] > 0
+    for h, raw_agent in zip(handles, raw):
+        assert_conformant_stream(h, token_demands=_demands(raw_agent))
+
+
 def test_replicated_engine_stream_conformance(tiny_model):
     model, params = tiny_model
     svc = AgentService.engine(

@@ -161,6 +161,7 @@ def test_main_writes_out_and_discovers_defaults(bench_pair, tmp_path,
         "BENCH_sim.json", "BENCH_sim_quick.json",
         "BENCH_engine.json", "BENCH_engine_quick.json",
         "BENCH_cache.json", "BENCH_cache_quick.json",
+        "BENCH_slo.json", "BENCH_slo_quick.json",
     )
 
 
