@@ -1,0 +1,432 @@
+"""Fault-tolerance benchmark: crash failover cost + watermark thrash cut.
+
+    PYTHONPATH=src python -m benchmarks.perf_faults [--quick] [--out PATH]
+
+The PR 8 tracked benchmark for fault-tolerant fleet serving.  Three
+measured claims, each with its in-band gate:
+
+  * **crash failover** — a seeded :class:`repro.api.FaultPlan` kills one
+    of four sim replicas mid-run with the progress watchdog armed; every
+    agent must complete on the survivors, at least one agent must
+    actually fail over (``agents_requeued > 0``), and the cells record
+    the degradation price: max-JCT and makespan ratios vs the fault-free
+    fleet on the identical workload.  The ratio is gated
+    (``MAX_DELAY_RATIO``) — failover must degrade, not collapse.
+  * **watermark admission** — on a contended pool,
+    ``admission_watermark=(low, high)`` must cut swaps STRICTLY below
+    the ungated baseline at equal completions (the gate trades queueing
+    delay for the swap-thrash regime), with deferrals actually observed.
+  * **engine fleet failover** — the same crash plan on a 2-replica REAL
+    engine fleet: all agents complete on the survivor.
+
+Gates run IN-BAND before anything is recorded (the run aborts on any
+failure, same contract as benchmarks/perf_engine.py):
+
+  * **fault-off oracle** — with no plan and no watermark, the optimized
+    cores must stay bit-identical to the frozen oracles in the same run:
+    ``ClusterSim`` vs ``ReferenceClusterSim`` (finish/jct/swap/event
+    counts) and ``ServeEngine`` vs ``ReferenceServeEngine``
+    (completions, clock, token/prefill/swap/decode-step counts) — the
+    PR 8 machinery is strictly flag-gated;
+  * **determinism** — the seeded crash cell is run twice and must
+    reproduce bit-for-bit (finish maps + event counts).
+
+Results land in ``BENCH_faults.json`` at the repo root (CI uploads the
+``--quick`` variant per commit; the committed file is the full-tier
+record); ``benchmarks/trend.py`` renders the trajectory alongside the
+other BENCH files.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.perf_engine import (
+    ORACLE_KEYS,
+    _snapshot,
+    bench_model,
+    synth_agents,
+)
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_OUT = REPO_ROOT / "BENCH_faults.json"
+
+REPLICAS = 4
+N_AGENTS = 16
+TOTAL_KV = 800.0          # per replica
+WATCHDOG = 0.5
+CRASH_WINDOW = (2.0, 5.0)
+#: failover may stretch the fleet max JCT by at most this factor vs the
+#: fault-free run (losing 1-of-4 replicas mid-run; measured ~2.7x)
+MAX_DELAY_RATIO = 8.0
+WM = (0.5, 0.75)
+
+
+# --------------------------------------------------------------- oracle
+
+
+def check_fault_off_sim_oracle() -> dict:
+    """No plan, no watermark: ClusterSim bit-identical to the frozen
+    reference core (the PR 8 sim machinery is strictly flag-gated)."""
+    from repro.core import InferenceSpec, agent_cost, make_scheduler
+    from repro.sim import ClusterSim, SimAgent
+    from repro.sim.reference import ReferenceClusterSim
+
+    def agents():
+        # SimAgent stage state is mutated by a run: rebuild per core
+        rng = np.random.default_rng(11)
+        out = []
+        for i in range(40):
+            stages = [
+                [InferenceSpec(int(rng.integers(50, 400)),
+                               int(rng.integers(10, 120)))]
+                for _ in range(int(rng.integers(1, 3)))
+            ]
+            cost = agent_cost([s for st in stages for s in st])
+            out.append(SimAgent(agent_id=i,
+                                arrival=float(rng.uniform(0, 20)),
+                                stages=stages, predicted_cost=cost,
+                                true_cost=cost))
+        return out
+
+    checked = []
+    for sched in ("justitia", "vtc", "vllm-fcfs"):
+        m = 1500.0
+        new = ClusterSim(
+            make_scheduler(sched, m, service_rate=30.0), m,
+            admission_watermark=None,
+        ).run(agents())
+        ref = ReferenceClusterSim(
+            make_scheduler(sched, m, service_rate=30.0), m,
+        ).run(agents())
+        if (new.finish != ref.finish or new.jct != ref.jct
+                or new.swaps != ref.swaps or new.events != ref.events):
+            raise AssertionError(
+                f"fault-off sim oracle mismatch ({sched}): optimized "
+                f"vs frozen reference diverged"
+            )
+        checked.append(sched)
+    return {"schedulers": checked,
+            "compared": ["finish", "jct", "swaps", "events"],
+            "match": True}
+
+
+def check_fault_off_engine_oracle(model, params) -> dict:
+    """No watermark: ServeEngine bit-identical to the frozen reference
+    engine (same contract as the fused-off / cache-off gates)."""
+    from repro.core import make_scheduler
+    from repro.engine import ReferenceServeEngine, ServeEngine
+
+    checked = []
+    for sched in ("justitia", "vtc"):
+        snaps = {}
+        for name, cls in (("optimized", ServeEngine),
+                          ("baseline", ReferenceServeEngine)):
+            eng = cls(model, params, make_scheduler(sched, 256.0),
+                      pool_tokens=256, max_batch=4, cache_len=96)
+            for a in synth_agents(3, 10):
+                eng.submit_agent(a)
+            eng.run_until_idle(max_iters=5_000_000)
+            eng.alloc.check_invariants()
+            snaps[name] = _snapshot(eng)
+        if snaps["optimized"] != snaps["baseline"]:
+            diff = {k: (snaps["optimized"][k], snaps["baseline"][k])
+                    for k in snaps["optimized"]
+                    if snaps["optimized"][k] != snaps["baseline"][k]}
+            raise AssertionError(
+                f"fault-off engine oracle mismatch ({sched}): {diff}"
+            )
+        checked.append(sched)
+    return {"schedulers": checked,
+            "compared": ["completions", "now", *ORACLE_KEYS],
+            "match": True}
+
+
+# -------------------------------------------------------- sim workloads
+
+
+def fleet_specs(seed: int, n: int = N_AGENTS):
+    from repro.api import AgentSpec
+    from repro.core import InferenceSpec
+
+    rng = np.random.default_rng(seed)
+    specs = []
+    for i in range(n):
+        stages = [
+            [InferenceSpec(int(rng.integers(150, 450)),
+                           int(rng.integers(30, 90)))]
+            for _ in range(2)
+        ]
+        specs.append(AgentSpec(stages=stages,
+                               arrival=float(rng.uniform(0.0, 4.0)),
+                               name=f"a{i}"))
+    return specs
+
+
+def run_sim_fleet(seed: int, plan=None, watchdog=None):
+    from repro.api import AgentService
+
+    svc = AgentService.sim(
+        replicas=REPLICAS, total_kv=TOTAL_KV, record_events=False,
+        fault_plan=plan, watchdog_timeout=watchdog,
+    )
+    for s in fleet_specs(seed):
+        svc.submit(s)
+    t0 = time.perf_counter()
+    res = svc.drain()
+    return res, time.perf_counter() - t0
+
+
+def crash_cell(seed: int) -> dict:
+    """Fault-free vs seeded 1-of-4 crash on the identical workload."""
+    from repro.api import FaultPlan
+
+    base, _ = run_sim_fleet(seed)
+    plan = FaultPlan.seeded(seed, REPLICAS, crash_window=CRASH_WINDOW)
+    res, wall = run_sim_fleet(seed, plan, WATCHDOG)
+    # gates: nothing lost, failover actually exercised
+    if set(res.finish) != set(base.finish):
+        raise AssertionError(
+            f"crash cell (seed {seed}): agents lost — "
+            f"{sorted(set(base.finish) - set(res.finish))}"
+        )
+    if res.metrics["agents_requeued"] < 1:
+        raise AssertionError(
+            f"crash cell (seed {seed}): no agent failed over — the cell "
+            f"would measure a no-op crash"
+        )
+    ratio = max(res.jct.values()) / max(base.jct.values())
+    if ratio > MAX_DELAY_RATIO:
+        raise AssertionError(
+            f"crash cell (seed {seed}): max-JCT ratio {ratio:.2f} "
+            f"exceeds bound {MAX_DELAY_RATIO}"
+        )
+    crash = plan.faults[0]
+    return {
+        "seed": seed,
+        "crashed_replica": crash.replica,
+        "crash_time": round(crash.start, 3),
+        "agents_requeued": res.metrics["agents_requeued"],
+        "replica_failures": res.metrics["replica_failures"],
+        "live_replicas": res.metrics["live_replicas"],
+        "max_jct_ratio": round(ratio, 3),
+        "makespan_ratio": round(res.makespan / base.makespan, 3),
+        "jct_mean_base": round(float(np.mean(list(base.jct.values()))), 3),
+        "jct_mean_crash": round(float(np.mean(list(res.jct.values()))), 3),
+        "wall_s": round(wall, 3),
+    }
+
+
+def check_crash_determinism(seed: int) -> dict:
+    """Same plan + same workload twice => bit-identical failover run."""
+    from repro.api import FaultPlan
+
+    runs = []
+    for _ in range(2):
+        plan = FaultPlan.seeded(seed, REPLICAS, crash_window=CRASH_WINDOW)
+        res, _ = run_sim_fleet(seed, plan, WATCHDOG)
+        runs.append(res)
+    a, b = runs
+    if a.finish != b.finish or a.jct != b.jct \
+            or a.event_counts != b.event_counts:
+        raise AssertionError(
+            f"crash determinism (seed {seed}): two identical chaos runs "
+            f"diverged"
+        )
+    return {"seed": seed, "match": True,
+            "compared": ["finish", "jct", "event_counts"]}
+
+
+# ------------------------------------------------------- watermark cell
+
+
+def watermark_cell(seed: int) -> dict:
+    """Contended pool: the gate must strictly cut swaps at equal
+    completions, with deferrals observed."""
+    from repro.api import AgentService, AgentSpec
+    from repro.core import InferenceSpec
+
+    rng = np.random.default_rng(seed)
+    specs = [
+        AgentSpec(
+            stages=[[InferenceSpec(int(rng.integers(250, 500)),
+                                   int(rng.integers(40, 90)))]],
+            arrival=float(rng.uniform(0.0, 2.0)),
+            name=f"c{i}",
+        )
+        for i in range(24)
+    ]
+    rows = {}
+    for wm in (None, WM):
+        svc = AgentService.sim(total_kv=1000.0, record_events=False,
+                               admission_watermark=wm)
+        for s in specs:
+            svc.submit(s)
+        rows[wm] = svc.drain()
+    off, on = rows[None], rows[WM]
+    if set(on.finish) != set(off.finish):
+        raise AssertionError(
+            f"watermark cell (seed {seed}): completions diverged"
+        )
+    if on.metrics["admission_deferrals"] < 1:
+        raise AssertionError(
+            f"watermark cell (seed {seed}): no deferral observed — the "
+            f"pool is not contended enough to measure the gate"
+        )
+    if not on.swaps < off.swaps:
+        raise AssertionError(
+            f"watermark cell (seed {seed}): swaps not cut "
+            f"({on.swaps} vs {off.swaps})"
+        )
+    jm_off = float(np.mean(list(off.jct.values())))
+    jm_on = float(np.mean(list(on.jct.values())))
+    return {
+        "seed": seed,
+        "watermark": list(WM),
+        "swaps_off": off.swaps,
+        "swaps_wm": on.swaps,
+        "deferrals": on.metrics["admission_deferrals"],
+        "jct_mean_off": round(jm_off, 3),
+        "jct_mean_wm": round(jm_on, 3),
+        "jct_mean_ratio": round(jm_on / max(jm_off, 1e-9), 3),
+    }
+
+
+# ----------------------------------------------------- engine crash cell
+
+
+def engine_crash_cell(model, params) -> dict:
+    """Seeded crash on a 2-replica REAL engine fleet: every agent must
+    complete on the survivor."""
+    from repro.api import AgentService, AgentSpec, FaultPlan
+    from repro.core import InferenceSpec
+
+    svc = AgentService.engine(
+        model, params, "justitia", replicas=2, router="round_robin",
+        pool_tokens=256, block_size=16, max_batch=2, cache_len=64,
+        token_scale=1, time_scale=1.0, record_events=False,
+        fault_plan=FaultPlan().crash(0, 6.0),
+        watchdog_timeout=2.0, watchdog_retries=1,
+    )
+    handles = [
+        svc.submit(AgentSpec(
+            stages=[[InferenceSpec(16, 30)], [InferenceSpec(12, 20)]],
+            arrival=float(i),
+        ))
+        for i in range(4)
+    ]
+    t0 = time.perf_counter()
+    res = svc.drain()
+    wall = time.perf_counter() - t0
+    if set(res.finish) != {h.agent_id for h in handles}:
+        raise AssertionError("engine crash cell: agents lost in failover")
+    if res.metrics["replica_failures"] != 1 \
+            or res.metrics["agents_requeued"] < 1:
+        raise AssertionError(
+            f"engine crash cell: failover not exercised "
+            f"({res.metrics['replica_failures']} failures, "
+            f"{res.metrics['agents_requeued']} requeued)"
+        )
+    return {
+        "agents": len(handles),
+        "crashed_replica": 0,
+        "agents_requeued": res.metrics["agents_requeued"],
+        "makespan": round(res.makespan, 2),
+        "wall_s": round(wall, 2),
+    }
+
+
+# ----------------------------------------------------------------- main
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="one seed (the CI perf stage)")
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    args = ap.parse_args(argv)
+
+    seeds = (7,) if args.quick else (7, 11, 13)
+    model, params = bench_model()
+
+    print("== fault-off oracle: optimized cores vs frozen references ==")
+    sim_oracle = check_fault_off_sim_oracle()
+    print(f"   sim bit-identical for {sim_oracle['schedulers']}")
+    engine_oracle = check_fault_off_engine_oracle(model, params)
+    print(f"   engine bit-identical for {engine_oracle['schedulers']}")
+
+    determinism = check_crash_determinism(seeds[0])
+    print(f"   seeded chaos run reproduces bit-for-bit "
+          f"(seed {determinism['seed']})")
+
+    crash_cells = []
+    for seed in seeds:
+        cell = crash_cell(seed)
+        crash_cells.append(cell)
+        print(
+            f"crash seed {seed:>3}: replica {cell['crashed_replica']} "
+            f"at t={cell['crash_time']:.1f}s, "
+            f"{cell['agents_requeued']} requeued, "
+            f"max-jct ratio {cell['max_jct_ratio']:.2f}, "
+            f"makespan ratio {cell['makespan_ratio']:.2f}"
+        )
+
+    wm_cells = []
+    for seed in seeds:
+        cell = watermark_cell(seed)
+        wm_cells.append(cell)
+        print(
+            f"watermark seed {seed:>3}: swaps {cell['swaps_off']} -> "
+            f"{cell['swaps_wm']} at {cell['deferrals']} deferrals, "
+            f"jct ratio {cell['jct_mean_ratio']:.3f}"
+        )
+
+    eng_cell = engine_crash_cell(model, params)
+    print(
+        f"engine crash: {eng_cell['agents_requeued']} requeued, "
+        f"{eng_cell['agents']} completed on the survivor "
+        f"({eng_cell['wall_s']:.1f}s wall)"
+    )
+
+    out = {
+        "benchmark": "faults_perf",
+        "quick": bool(args.quick),
+        "config": {
+            "replicas": REPLICAS,
+            "agents": N_AGENTS,
+            "total_kv_per_replica": TOTAL_KV,
+            "watchdog_timeout": WATCHDOG,
+            "crash_window": list(CRASH_WINDOW),
+            "max_delay_ratio": MAX_DELAY_RATIO,
+            "watermark": list(WM),
+            "seeds": list(seeds),
+            "engine_model":
+                "granite-3-2b reduced(d_model=64, L=2, vocab=256)",
+        },
+        "oracle_fault_off": {"sim": sim_oracle, "engine": engine_oracle},
+        "determinism": determinism,
+        "crash_cells": crash_cells,
+        "watermark_cells": wm_cells,
+        "engine_crash": eng_cell,
+        "gates": {
+            "fault_off_bit_identical": True,
+            "chaos_deterministic": True,
+            "all_agents_complete": True,
+            "failover_exercised": True,
+            "max_jct_ratio_bound": MAX_DELAY_RATIO,
+            "watermark_cuts_swaps": True,
+        },
+    }
+    path = Path(args.out)
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {path}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

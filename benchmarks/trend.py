@@ -33,6 +33,8 @@ DEFAULT_CANDIDATES = (
     "BENCH_cache_quick.json",
     "BENCH_slo.json",
     "BENCH_slo_quick.json",
+    "BENCH_faults.json",
+    "BENCH_faults_quick.json",
 )
 
 
@@ -235,11 +237,60 @@ def render_slo(name: str, data: dict) -> list[str]:
     return lines
 
 
+def render_faults(name: str, data: dict) -> list[str]:
+    lines = [f"## {name} — fault-tolerant fleet serving "
+             "(`benchmarks/perf_faults.py`)", ""]
+    tier = "quick (CI)" if data.get("quick") else "full"
+    gates = data.get("gates", {})
+    cfg = data.get("config", {})
+    lines.append(
+        f"Tier: **{tier}** · {cfg.get('replicas', '?')} replicas, "
+        f"{cfg.get('agents', '?')} agents, watchdog "
+        f"{cfg.get('watchdog_timeout', '?')}s · fault-off bit-identical: "
+        f"**{gates.get('fault_off_bit_identical', '?')}** · chaos "
+        f"deterministic: **{gates.get('chaos_deterministic', '?')}** · "
+        f"watermark cuts swaps: "
+        f"**{gates.get('watermark_cuts_swaps', '?')}**"
+    )
+    lines.append("")
+    lines.append("| seed | crashed | crash t | requeued | max-JCT ratio "
+                 "| makespan ratio |")
+    lines.append("|---:|---:|---:|---:|---:|---:|")
+    for cell in data.get("crash_cells", []):
+        lines.append(
+            f"| {cell['seed']} | r{cell['crashed_replica']} "
+            f"| {_fmt(cell['crash_time'])} | {cell['agents_requeued']} "
+            f"| {cell['max_jct_ratio']:.2f} "
+            f"| {cell['makespan_ratio']:.2f} |"
+        )
+    wm = data.get("watermark_cells", [])
+    if wm:
+        parts = [
+            f"seed {row['seed']}: swaps {row['swaps_off']} -> "
+            f"{row['swaps_wm']} ({row['deferrals']} deferrals, jct ratio "
+            f"{row['jct_mean_ratio']:.2f})"
+            for row in wm
+        ]
+        lines += ["", "Watermark admission "
+                  f"{cfg.get('watermark', '?')} — " + "; ".join(parts)]
+    eng = data.get("engine_crash")
+    if eng:
+        lines += [
+            "",
+            f"Engine fleet crash: {eng['agents_requeued']} requeued, "
+            f"{eng['agents']} completed on the survivor "
+            f"(makespan {_fmt(eng['makespan'])}).",
+        ]
+    lines.append("")
+    return lines
+
+
 RENDERERS = {
     "sim_core_perf": render_sim,
     "engine_hot_path_perf": render_engine,
     "prefix_cache_perf": render_cache,
     "slo_perf": render_slo,
+    "faults_perf": render_faults,
 }
 
 

@@ -18,9 +18,12 @@
 #                 oracle on seeded workloads (the cache bench proves the
 #                 cache-OFF engine bit-identical, then gates saved>0,
 #                 allocator invariants, and the locality_fair-vs-justitia
-#                 hit/delay claim in-band), then records throughput
-#                 (BENCH_sim_quick.json / BENCH_engine_quick.json /
-#                 BENCH_cache_quick.json); `benchmarks/trend.py` renders
+#                 hit/delay claim in-band), plus
+#                 `benchmarks/perf_slo.py --quick` (fused-off oracle +
+#                 SLO latency) and `benchmarks/perf_faults.py --quick`
+#                 (fault-off oracle, deterministic crash failover,
+#                 watermark swap-cut): each records its
+#                 BENCH_*_quick.json; `benchmarks/trend.py` renders
 #                 every BENCH artifact into TREND.md (all uploaded in CI);
 #   4. slow     — `pytest -m slow`: the full kernel/model/training sweeps.
 #                 Run as its own stage so a Pallas-on-CPU container gap
@@ -80,6 +83,9 @@ python -m benchmarks.perf_cache --quick --out BENCH_cache_quick.json
 
 echo "== perf: benchmarks/perf_slo.py --quick (fused-off oracle + SLO latency bench) =="
 python -m benchmarks.perf_slo --quick --out BENCH_slo_quick.json
+
+echo "== perf: benchmarks/perf_faults.py --quick (fault-off oracle + failover/watermark bench) =="
+python -m benchmarks.perf_faults --quick --out BENCH_faults_quick.json
 
 echo "== perf: benchmarks/trend.py -> TREND.md =="
 python -m benchmarks.trend --out TREND.md > /dev/null

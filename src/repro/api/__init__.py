@@ -20,11 +20,15 @@ from repro.api.backend import (
     SimBackend,
 )
 from repro.api.events import (
+    AdmissionDeferred,
     AgentArrived,
     AgentCompleted,
     AgentEvent,
     AgentHooks,
+    AgentRequeued,
     PrefixHit,
+    ReplicaFailed,
+    ReplicaRecovered,
     RequestAdmitted,
     RequestSwappedIn,
     RequestSwappedOut,
@@ -32,7 +36,9 @@ from repro.api.events import (
     StageOutcome,
     TokenGenerated,
 )
+from repro.api.faults import Fault, FaultPlan
 from repro.api.replicated import (
+    FleetStalledError,
     ReplicatedBackend,
     Router,
     register_router,
@@ -57,11 +63,15 @@ __all__ = [
     "BackendResult",
     "EngineBackend",
     "SimBackend",
+    "AdmissionDeferred",
     "AgentArrived",
     "AgentCompleted",
     "AgentEvent",
     "AgentHooks",
+    "AgentRequeued",
     "PrefixHit",
+    "ReplicaFailed",
+    "ReplicaRecovered",
     "RequestAdmitted",
     "RequestSwappedIn",
     "RequestSwappedOut",
@@ -72,6 +82,9 @@ __all__ = [
     "AgentService",
     "MetricsRecorder",
     "ServiceResult",
+    "Fault",
+    "FaultPlan",
+    "FleetStalledError",
     "ReplicatedBackend",
     "Router",
     "register_router",

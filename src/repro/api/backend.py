@@ -213,6 +213,7 @@ class SimBackend:
         swap_penalty: float = 0.2,
         token_events: bool = False,
         prefix_cache: bool = False,
+        admission_watermark: Optional[tuple] = None,
     ):
         sched = _resolve_scheduler(scheduler, total_kv, decode_rate)
         self.sim = ClusterSim(
@@ -223,6 +224,7 @@ class SimBackend:
             swap_penalty=swap_penalty,
             token_events=token_events,
             prefix_cache=prefix_cache,
+            admission_watermark=admission_watermark,
         )
         self.scheduler = sched
 
@@ -303,6 +305,9 @@ class SimBackend:
                 "key_evals": res.key_evals,
                 "sorts": res.sorts,
                 "peak_occupancy": res.peak_occupancy,
+                "admission_deferrals": res.admission_deferrals,
+                "wm_admit_peak": res.wm_admit_peak,
+                "wm_bypass_admits": res.wm_bypass_admits,
                 "prefill_tokens_saved": res.prefill_tokens_saved,
                 "hit_fractions": self.sim.hit_fractions(),
             },
@@ -339,6 +344,7 @@ class EngineBackend:
         max_iters: int = 200_000,
         prefix_cache: bool = False,
         fused_prefill: bool = False,
+        admission_watermark: Optional[tuple] = None,
     ):
         sched = _resolve_scheduler(scheduler, float(pool_tokens), 1.0)
         self.engine = ServeEngine(
@@ -353,6 +359,7 @@ class EngineBackend:
             max_window=max_window,
             prefix_cache=prefix_cache,
             fused_prefill=fused_prefill,
+            admission_watermark=admission_watermark,
         )
         self.scheduler = sched
         self.token_scale = int(token_scale)
@@ -371,6 +378,13 @@ class EngineBackend:
         # engine pool tokens serve workload costs divided by token_scale**2
         # at time_scale iterations per workload second
         return self.pool_tokens * self.token_scale**2 * self.time_scale
+
+    @property
+    def in_flight(self) -> int:
+        """Agents submitted but not completed (mirrors SimBackend's) —
+        load-aware routers and the fleet watchdog's diagnostics read it."""
+        eng = self.engine
+        return (len(eng.agents) + len(eng.pending)) - len(eng.completions)
 
     def set_listener(self, listener: Any) -> None:
         self.engine.listener = listener

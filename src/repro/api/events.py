@@ -89,6 +89,42 @@ class AgentCompleted(AgentEvent):
     jct: float
 
 
+@dataclasses.dataclass(frozen=True)
+class ReplicaFailed(AgentEvent):
+    """A fleet child was declared DEAD (``replica`` names it).  Fleet-
+    scoped: emitted with ``agent_id=-1`` — no per-agent handle records it,
+    but the service recorder counts it and listeners see it in-stream.
+    ``reason`` distinguishes a planned crash from a watchdog timeout."""
+
+    reason: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaRecovered(AgentEvent):
+    """A child previously suspected stalled resumed progress before its
+    watchdog budget ran out (fleet-scoped, ``agent_id=-1``)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class AgentRequeued(AgentEvent):
+    """The agent's remaining stages were failed over from a dead replica
+    (``from_replica``) to a surviving one (``replica``).  Resets the
+    agent's per-replica admit/swap chain in the conformance grammar; its
+    accrued global virtual time carries over unchanged."""
+
+    from_replica: int = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionDeferred(AgentEvent):
+    """Watermark admission control held request ``rid`` back because
+    occupancy sat above the high watermark (emitted at most once per
+    request; the eventual ``RequestAdmitted`` follows once occupancy
+    drains below the low watermark)."""
+
+    rid: int = -1
+
+
 @dataclasses.dataclass
 class StageOutcome:
     """What a closed-loop ``AgentSpec.next_stage`` callback is fed.
@@ -141,3 +177,8 @@ class AgentHooks:
     on_token: Hook = None
     #: fires on prefix-cache hits (backends built with ``prefix_cache=True``)
     on_prefix_hit: Hook = None
+    #: fires when the agent is failed over to a surviving replica
+    on_requeued: Hook = None
+    #: fires when watermark admission control defers one of the agent's
+    #: requests (backends built with ``admission_watermark=...``)
+    on_defer: Hook = None

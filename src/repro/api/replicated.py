@@ -23,6 +23,28 @@ register with ``@register_scheduler``:
 Routers are deterministic given the submission sequence (ties break toward
 the lowest replica index), which is what makes the engine-vs-sim replicated
 equivalence testable: same routing seed => same per-replica assignment.
+All routers place over the fleet's LIVE replicas only — after a failover
+the registry policies see post-failure occupancy, and ``rebalance`` routes
+a dead replica's backlog through the same placement path as fresh
+submissions.
+
+Fault tolerance (PR 8).  A :class:`repro.api.faults.FaultPlan` injects
+deterministic crash / stall / slowdown windows at ``advance()`` boundaries:
+``run(until)`` slices the fleet's advancement at the plan's window edges
+(plus the watchdog's probe deadlines) and clamps each child's horizon per
+:meth:`FaultPlan.horizon` — child state is never mutated, so the same plan
+reproduces the same run bit for bit.  A progress watchdog
+(``watchdog_timeout`` seconds, ``watchdog_retries`` backoff-growing
+retries) marks a child SUSPECT when it lags a probe by one timeout,
+RECOVERED (``ReplicaRecovered``) when it catches back up, and DEAD once it
+makes no progress for the whole budget ``timeout * sum(backoff**i)`` —
+at which point its uncompleted agents fail over: each is re-submitted to a
+surviving replica (remaining stages only — completed stages are never
+redone, in-progress stages restart), the global virtual clock carries the
+agent's accrued virtual finish time across the migration, and the fleet
+emits ``ReplicaFailed`` + per-agent ``AgentRequeued`` events.  With the
+watchdog disabled, a crashed child with in-flight work raises
+:class:`FleetStalledError` instead of leaving the fleet spinning.
 
 Listener callbacks from child k are forwarded in *workload seconds* with a
 ``replica=k`` keyword, so the service's dispatcher (and the typed events in
@@ -31,12 +53,16 @@ Listener callbacks from child k are forwarded in *workload seconds* with a
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Optional, Sequence
 
 import numpy as np
 
 from repro.api.backend import AgentSpec, Backend, BackendResult
+from repro.api.faults import FaultPlan
 from repro.core.virtual_time import GlobalClockSnapshot, GlobalVirtualClock
+
+_EPS = 1e-9
 
 # ---------------------------------------------------------------- routers
 
@@ -84,7 +110,10 @@ class Router:
 
     Subclasses read fleet state off the bound backend (live agent counts,
     outstanding predicted cost, per-replica capacities) and must be
-    deterministic given the submission sequence and ``seed``.
+    deterministic given the submission sequence and ``seed``.  Placement
+    is restricted to the fleet's live replicas (``candidates``); before a
+    failure that is every index, so the restriction is invisible to
+    healthy fleets.
     """
 
     name = "base"
@@ -97,8 +126,30 @@ class Router:
     def bind(self, backend: "ReplicatedBackend") -> None:
         self._backend = backend
 
+    def candidates(self) -> tuple[int, ...]:
+        """Live replica indices (all of them when unbound)."""
+        if self._backend is None:
+            return tuple(range(self.n))
+        return self._backend.live_replica_indices
+
     def pick(self, spec: AgentSpec, agent_id: int, pred_cost: float) -> int:
         raise NotImplementedError
+
+    def rebalance(
+        self, queued: Sequence[tuple[AgentSpec, int, float]]
+    ) -> list[int]:
+        """Place a dead replica's backlog onto survivors.
+
+        Default: route each displaced agent through :meth:`pick`, in the
+        order given (the fleet passes original-arrival order), so failover
+        and fresh submission share one placement path and load-aware
+        policies see the occupancy shift as each victim lands.  Override
+        for policies that want to plan the whole batch at once.
+        """
+        return [
+            self.pick(spec, agent_id, cost)
+            for spec, agent_id, cost in queued
+        ]
 
 
 @register_router("round_robin", "rr")
@@ -108,7 +159,8 @@ class RoundRobinRouter(Router):
         self._next = 0
 
     def pick(self, spec: AgentSpec, agent_id: int, pred_cost: float) -> int:
-        r = self._next % self.n
+        live = self.candidates()
+        r = live[self._next % len(live)]
         self._next += 1
         return r
 
@@ -117,7 +169,7 @@ class RoundRobinRouter(Router):
 class LeastLoadedRouter(Router):
     def pick(self, spec: AgentSpec, agent_id: int, pred_cost: float) -> int:
         loads = self._backend.live_agents
-        return min(range(self.n), key=lambda k: (loads[k], k))
+        return min(self.candidates(), key=lambda k: (loads[k], k))
 
 
 @register_router("memory_cost_aware", "cost_aware", "mca")
@@ -134,8 +186,42 @@ class MemoryCostAwareRouter(Router):
         costs = self._backend.live_cost
         caps = self._backend.virtual_capacities
         return min(
-            range(self.n),
+            self.candidates(),
             key=lambda k: ((costs[k] + pred_cost) / caps[k], k),
+        )
+
+
+# -------------------------------------------------------------- failures
+
+
+class FleetStalledError(RuntimeError):
+    """A replica stopped progressing and no watchdog is armed to fail it.
+
+    Raised by :meth:`ReplicatedBackend.run` instead of leaving the fleet
+    spinning toward a horizon a crashed child can never reach.  Carries the
+    diagnostic state the watchdog would have acted on: the stalled child's
+    index, its last event time, its in-flight count, the drive target, and
+    every live child's queue depth.
+    """
+
+    def __init__(
+        self,
+        replica: int,
+        last_time: float,
+        in_flight: int,
+        target: float,
+        queue_depths: dict,
+    ):
+        self.replica = int(replica)
+        self.last_time = float(last_time)
+        self.in_flight = int(in_flight)
+        self.target = float(target)
+        self.queue_depths = dict(queue_depths)
+        super().__init__(
+            f"replica {replica} stalled at t={last_time:.6f} with "
+            f"{in_flight} in-flight agent(s) while the fleet drives to "
+            f"t={target:.6f} (live queue depths: {queue_depths}); arm "
+            f"watchdog_timeout for automatic failover"
         )
 
 
@@ -145,7 +231,8 @@ class MemoryCostAwareRouter(Router):
 class _ReplicaChannel:
     """Child k's listener: tags callbacks with ``replica=k``, converts the
     child's native timestamps to workload seconds, and keeps the fleet's
-    load accounting current (completions decrement the router's view)."""
+    load accounting current (completions decrement the router's view,
+    stage completions feed the failover respec bookkeeping)."""
 
     def __init__(self, fleet: "ReplicatedBackend", replica: int):
         self.fleet = fleet
@@ -162,6 +249,13 @@ class _ReplicaChannel:
         fn(agent_id, *args, tw, replica=self.replica)
 
     def on_arrival(self, agent_id: int, t: float) -> None:
+        fleet = self.fleet
+        fleet._arrived.add(agent_id)
+        if agent_id in fleet._suppress_arrival:
+            # failover re-submission: the agent already announced itself on
+            # the dead replica — exactly one AgentArrived per agent
+            fleet._suppress_arrival.discard(agent_id)
+            return
         self._forward("on_arrival", agent_id, t)
 
     def on_admit(self, agent_id: int, rid: int, t: float) -> None:
@@ -181,11 +275,19 @@ class _ReplicaChannel:
     ) -> None:
         self._forward("on_prefix_hit", agent_id, t, rid, cached, prefill)
 
+    def on_admission_deferred(
+        self, agent_id: int, rid: int, t: float
+    ) -> None:
+        self._forward("on_admission_deferred", agent_id, t, rid)
+
     def on_stage_complete(self, agent_id: int, stage: int, t: float) -> None:
+        done = self.fleet._stages_done
+        done[agent_id] = max(done.get(agent_id, 0), stage + 1)
         self._forward("on_stage_complete", agent_id, t, stage)
 
     def on_agent_complete(self, agent_id: int, t: float) -> None:
-        self.fleet._on_child_complete(self.replica, agent_id)
+        tw = self.fleet.children[self.replica].to_workload_time(t)
+        self.fleet._on_child_complete(self.replica, agent_id, tw)
         self._forward("on_agent_complete", agent_id, t)
 
 
@@ -196,9 +298,10 @@ class ReplicatedBackend:
     """N child backends behind the single-backend protocol (see module doc).
 
     ``submit`` places each agent on one child via the router; ``run``
-    advances every child to the same workload time; ``drain`` drains them
-    all, merges their results, and reconciles the per-replica virtual
-    clocks (the snapshot lands in ``BackendResult.metrics`` as
+    advances every child to the same workload time (slicing at fault
+    boundaries when a plan is armed); ``drain`` drains the live children,
+    merges their results, and reconciles the per-replica virtual clocks
+    (the snapshot lands in ``BackendResult.metrics`` as
     ``global_virtual_time`` / ``virtual_lag`` / ``virtual_times``).
     """
 
@@ -210,6 +313,10 @@ class ReplicatedBackend:
         *,
         router: "str | Router" = "round_robin",
         seed: int = 0,
+        fault_plan: Optional[FaultPlan] = None,
+        watchdog_timeout: Optional[float] = None,
+        watchdog_retries: int = 3,
+        watchdog_backoff: float = 2.0,
     ):
         self.children: list[Backend] = list(children)
         if not self.children:
@@ -231,6 +338,52 @@ class ReplicatedBackend:
         self._pred_cost: dict[int, float] = {}
         self._listener: Any = None
         self._last_snapshot: Optional[GlobalClockSnapshot] = None
+        # --- fault injection + watchdog (see module doc) ----------------
+        if fault_plan is not None:
+            for f in fault_plan.faults:
+                if f.replica >= len(self.children):
+                    raise ValueError(
+                        f"fault plan targets replica {f.replica} of "
+                        f"{len(self.children)}"
+                    )
+        self._plan = fault_plan
+        if watchdog_timeout is not None:
+            if watchdog_timeout <= 0:
+                raise ValueError("watchdog_timeout must be positive")
+            if watchdog_retries < 0:
+                raise ValueError("watchdog_retries must be >= 0")
+            if watchdog_backoff < 1.0:
+                raise ValueError("watchdog_backoff must be >= 1")
+        self._wd_timeout = watchdog_timeout
+        self._wd_retries = int(watchdog_retries)
+        self._wd_backoff = float(watchdog_backoff)
+        # probe offsets after a window edge: timeout, then retries
+        # backoff-growing intervals; the last offset is the death budget
+        if watchdog_timeout is not None:
+            offs, acc = [], 0.0
+            for i in range(self._wd_retries + 1):
+                acc += watchdog_timeout * self._wd_backoff**i
+                offs.append(acc)
+            self._wd_offsets = tuple(offs)
+            self._wd_budget = offs[-1]
+        else:
+            self._wd_offsets = ()
+            self._wd_budget = 0.0
+        self._dead: set[int] = set()
+        self._suspect: set[int] = set()
+        self._wd_last: dict[int, float] = {}
+        self._failures: list[tuple[int, float]] = []   # (replica, t)
+        # --- failover bookkeeping ---------------------------------------
+        self._specs: dict[int, AgentSpec] = {}
+        self._arrival0: dict[int, float] = {}          # first-submit arrival
+        self._extras: dict[int, list] = {}             # appended stages
+        self._stages_done: dict[int, int] = {}         # since last (re)submit
+        self._stage_base: dict[int, int] = {}          # done before requeue
+        self._completed: set[int] = set()
+        self._fleet_finish: dict[int, tuple[float, int]] = {}
+        self._arrived: set[int] = set()
+        self._suppress_arrival: set[int] = set()
+        self._requeued: set[int] = set()
         for idx, child in enumerate(self.children):
             child.set_listener(_ReplicaChannel(self, idx))
 
@@ -238,7 +391,11 @@ class ReplicatedBackend:
 
     @property
     def now(self) -> float:
-        return max(c.now for c in self.children)
+        return max(
+            c.now
+            for k, c in enumerate(self.children)
+            if k not in self._dead
+        )
 
     @property
     def virtual_capacity(self) -> float:
@@ -248,18 +405,39 @@ class ReplicatedBackend:
     def n_replicas(self) -> int:
         return len(self.children)
 
+    @property
+    def live_replica_indices(self) -> tuple[int, ...]:
+        return tuple(
+            k for k in range(len(self.children)) if k not in self._dead
+        )
+
+    @property
+    def dead_replica_indices(self) -> tuple[int, ...]:
+        return tuple(sorted(self._dead))
+
     def set_listener(self, listener: Any) -> None:
         """Install the fleet listener.
 
         Callbacks arrive in workload seconds with a ``replica=k`` keyword
         identifying the serving child (the channels convert each child's
         native clock before forwarding), so ``to_workload_time`` is the
-        identity here.
+        identity here.  Fleet-scoped events (``on_replica_failed`` /
+        ``on_replica_recovered``) use ``agent_id=-1``.
         """
         self._listener = listener
 
     def to_workload_time(self, t: float) -> float:
         return float(t)
+
+    def _notify(self, event: str, agent_id: int, *args,
+                t: float, replica: int) -> None:
+        """Fleet-originated listener callback (already workload seconds)."""
+        listener = self._listener
+        if listener is None:
+            return
+        fn = getattr(listener, event, None)
+        if fn is not None:
+            fn(agent_id, *args, float(t), replica=replica)
 
     def submit(self, spec: AgentSpec, agent_id: int) -> float:
         pred, _ = spec.resolved_costs()
@@ -269,11 +447,17 @@ class ReplicatedBackend:
                 f"router {self.router.name!r} picked replica {replica} "
                 f"of {len(self.children)}"
             )
+        if replica in self._dead:
+            raise ValueError(
+                f"router {self.router.name!r} picked dead replica {replica}"
+            )
         arrival = self.children[replica].submit(spec, agent_id)
         self.assignment[agent_id] = replica
         self.live_agents[replica] += 1
         self.live_cost[replica] += pred
         self._pred_cost[agent_id] = pred
+        self._specs[agent_id] = spec
+        self._arrival0[agent_id] = arrival
         self.global_clock.register(replica, agent_id, arrival, pred)
         return arrival
 
@@ -282,7 +466,8 @@ class ReplicatedBackend:
 
         ``**kw`` forwards the optional prefix-cache metadata
         (``prompt_ids``/``hints``) untouched — each child scales it to
-        its own granularity.
+        its own granularity.  The stage is also recorded fleet-side so a
+        later failover can re-submit the agent's full remaining work.
         """
         try:
             replica = self.assignment[agent_id]
@@ -290,14 +475,224 @@ class ReplicatedBackend:
             raise ValueError(
                 f"agent {agent_id} was never placed on this fleet"
             ) from None
+        self._extras.setdefault(agent_id, []).append(
+            (list(specs), kw.get("prompt_ids"), kw.get("hints"))
+        )
         self.children[replica].submit_stage(agent_id, specs, **kw)
 
     def run(self, until: float) -> None:
-        """Advance the whole fleet in lockstep to ``until`` (seconds)."""
-        for child in self.children:
-            child.run(until)
+        """Advance the whole fleet in lockstep to ``until`` (seconds).
+
+        Without a fault plan this is the plain lockstep loop (bit-identical
+        to the pre-fault-tolerance fleet).  With one, advancement is sliced
+        at the plan's window edges and the watchdog's probe deadlines so
+        fault onsets, suspect flags, recoveries, and failovers land at
+        deterministic workload times.
+        """
+        if self._plan is not None:
+            self._drive(float(until))
+            return
+        for k, child in enumerate(self.children):
+            if k not in self._dead:
+                child.run(until)
+
+    # ------------------------------------------------------- fault drive
+
+    def _drive(self, until: float) -> None:
+        start = self.now
+        if until <= start + _EPS:
+            return
+        cand: set[float] = set()
+        for b in self._plan.boundaries():
+            cand.add(b)
+            for off in self._wd_offsets:
+                cand.add(b + off)
+        targets = sorted(t for t in cand if start + _EPS < t < until - _EPS)
+        targets.append(until)
+        for s in targets:
+            for k in self.live_replica_indices:
+                child = self.children[k]
+                h = min(s, self._plan.horizon(k, s))
+                if h > child.now + _EPS:
+                    child.run(h)
+            self._watch(s)
+
+    def _watch(self, s: float) -> None:
+        """One watchdog pass at fleet time ``s`` (after driving children).
+
+        A live, busy child lagging the slice target by one timeout turns
+        SUSPECT; a suspect that catches back up emits ``ReplicaRecovered``;
+        a suspect that made no progress since the previous probe and lags
+        by the full budget is declared DEAD and failed over.  With the
+        watchdog disabled, a crashed-and-busy child raises
+        :class:`FleetStalledError` instead (stall guard).
+        """
+        deaths: list[int] = []
+        for k in self.live_replica_indices:
+            child = self.children[k]
+            now_k = child.now
+            lag = s - now_k
+            busy = getattr(child, "in_flight", 0) > 0
+            if self._wd_timeout is None:
+                if busy and lag > _EPS and self._plan.crash_time(k) <= s:
+                    raise FleetStalledError(
+                        k, now_k, child.in_flight, s,
+                        {
+                            j: getattr(self.children[j], "in_flight", 0)
+                            for j in self.live_replica_indices
+                        },
+                    )
+                continue
+            last = self._wd_last.get(k)
+            progressed = last is None or now_k > last + _EPS
+            self._wd_last[k] = now_k
+            if busy and lag > _EPS:
+                if (
+                    k in self._suspect
+                    and not progressed
+                    and lag >= self._wd_budget - _EPS
+                ):
+                    deaths.append(k)
+                elif lag >= self._wd_timeout - _EPS:
+                    self._suspect.add(k)
+            elif k in self._suspect and lag <= _EPS:
+                self._suspect.discard(k)
+                self._notify("on_replica_recovered", -1, t=s, replica=k)
+        for k in deaths:
+            self._fail_replica(k, s)
+
+    # --------------------------------------------------------- failover
+
+    def _respec(self, agent_id: int, t: float) -> Optional[AgentSpec]:
+        """The agent's remaining work as a fresh :class:`AgentSpec`.
+
+        Completed stages (original + closed-loop appendments) are dropped;
+        the in-progress stage restarts from its beginning (stage-granularity
+        retry — per-stage completion callbacks therefore still fire exactly
+        once per logical stage).  Per-stage metadata rides along when it can
+        be aligned with the surviving stages and is dropped otherwise
+        (prompts are then re-synthesized by the target child).  Returns
+        ``None`` when nothing remains.
+        """
+        spec = self._specs[agent_id]
+        extras = self._extras.get(agent_id, [])
+        stages = [list(st) for st in spec.stages]
+        stages += [list(sp) for sp, _, _ in extras]
+        done = self._stage_base.get(agent_id, 0) + self._stages_done.get(
+            agent_id, 0
+        )
+        if done >= len(stages):
+            return None
+        remaining = stages[done:]
+
+        def aligned(base, idx):
+            if spec.stages and base is None:
+                return None
+            if any(e[idx] is None for e in extras):
+                return None
+            merged = list(base or []) + [list(e[idx]) for e in extras]
+            return merged[done:]
+
+        prompt_ids = aligned(spec.prompt_ids, 1)
+        hints = aligned(spec.cached_hints, 2)
+        prompts = None
+        if spec.prompts is not None and not extras:
+            prompts = [list(p) for p in spec.prompts][done:]
+        return dataclasses.replace(
+            spec,
+            stages=remaining,
+            arrival=max(float(t), self._arrival0.get(agent_id, 0.0)),
+            prompts=prompts,
+            prompt_ids=prompt_ids,
+            cached_hints=hints,
+        )
+
+    def _fail_replica(self, k: int, t: float) -> None:
+        """Declare child ``k`` DEAD at fleet time ``t`` and fail over.
+
+        The dead child is excluded from every future advance/drain (its
+        internal queue still holds the victims, but it is never driven
+        again); each uncompleted agent assigned to it is re-specced to its
+        remaining stages and re-submitted to a survivor chosen by
+        ``router.rebalance``, carrying its accrued virtual time across the
+        migration.  Emits one fleet-scoped ``ReplicaFailed`` plus one
+        ``AgentRequeued`` per already-arrived victim (never-arrived agents
+        are re-placed silently — their single ``AgentArrived`` fires on the
+        survivor).
+        """
+        child = self.children[k]
+        self._dead.add(k)
+        self._suspect.discard(k)
+        if len(self._dead) >= len(self.children):
+            raise RuntimeError(
+                f"replica {k} failed at t={t:.6f} and no live replica "
+                f"remains to fail over to"
+            )
+        self._failures.append((k, float(t)))
+        reason = (
+            f"no progress past t={child.now:.6f} for the watchdog budget "
+            f"({self._wd_budget:.4f}s)"
+        )
+        self._notify("on_replica_failed", -1, reason, t=t, replica=k)
+        self.global_clock.fail_replica(k)
+        victims = sorted(
+            (
+                aid
+                for aid, r in self.assignment.items()
+                if r == k and aid not in self._completed
+            ),
+            key=lambda aid: (self._arrival0.get(aid, 0.0), aid),
+        )
+        queued = []
+        for aid in victims:
+            spec = self._respec(aid, t)
+            self.live_agents[k] -= 1
+            self.live_cost[k] -= self._pred_cost.get(aid, 0.0)
+            if spec is None:
+                continue
+            queued.append((spec, aid, spec.resolved_costs()[0]))
+        placements = self.router.rebalance(queued)
+        for (spec, aid, cost), r in zip(queued, placements):
+            if r in self._dead or not 0 <= r < len(self.children):
+                raise ValueError(
+                    f"router {self.router.name!r} rebalanced agent {aid} "
+                    f"onto unusable replica {r}"
+                )
+            # reset the stage cursor: the survivor re-indexes the trimmed
+            # spec's stages from 0
+            self._stage_base[aid] = self._stage_base.get(
+                aid, 0
+            ) + self._stages_done.pop(aid, 0)
+            self._extras.pop(aid, None)
+            self._specs[aid] = spec
+            if aid in self._arrived:
+                self._suppress_arrival.add(aid)
+            arrival = self.children[r].submit(spec, aid)
+            self.assignment[aid] = r
+            self.live_agents[r] += 1
+            self.live_cost[r] += cost
+            self._pred_cost[aid] = cost
+            self.global_clock.migrate(aid, r, arrival, cost)
+            if aid in self._arrived:
+                self._requeued.add(aid)
+                self._notify(
+                    "on_requeued", aid, k, t=max(arrival, t), replica=r
+                )
+
+    # ------------------------------------------------------------ drain
 
     def drain(self) -> BackendResult:
+        # flush past every planned fault (plus the watchdog budget) first,
+        # so failures scheduled after the last submission still trigger
+        # detection and failover before results are collected; without a
+        # watchdog the flush still overshoots the last edge so the stall
+        # guard can observe a crashed-and-busy child (draining it blind
+        # would serve agents the crash should have stranded)
+        if self._plan is not None:
+            margin = self._wd_budget if self._wd_timeout is not None else 1e-3
+            flush = self._plan.max_boundary() + margin
+            if flush > self.now + _EPS:
+                self.run(flush)
         finish: dict[int, float] = {}
         jct: dict[int, float] = {}
         per_replica: list[dict] = []
@@ -310,7 +705,26 @@ class ReplicatedBackend:
         # summed (children report backend-native token scales)
         hit_fractions: dict[int, float] = {}
         prefill_tokens_saved = 0
+        admission_deferrals = 0
         for idx, child in enumerate(self.children):
+            if idx in self._dead:
+                # never driven again: harvest its pre-failure completions
+                # from the fleet-side records instead of draining it (a
+                # drain would re-serve the migrated victims it still holds)
+                per_replica.append(
+                    {
+                        "backend": child.name,
+                        "dead": True,
+                        "agents": sum(
+                            1
+                            for _, r in self._fleet_finish.values()
+                            if r == idx
+                        ),
+                        "makespan": child.now,
+                        "swaps": 0,
+                    }
+                )
+                continue
             res = child.drain()
             finish.update(res.finish)
             jct.update(res.jct)
@@ -322,6 +736,9 @@ class ReplicatedBackend:
             prefill_tokens_saved += res.metrics.get(
                 "prefill_tokens_saved", 0
             ) or 0
+            admission_deferrals += res.metrics.get(
+                "admission_deferrals", 0
+            ) or 0
             per_replica.append(
                 {
                     "backend": child.name,
@@ -331,13 +748,23 @@ class ReplicatedBackend:
                     **{f"child_{k}": v for k, v in res.metrics.items()},
                 }
             )
+        # completions that happened on a replica before it died
+        for aid, (tw, _r) in self._fleet_finish.items():
+            if aid not in finish:
+                finish[aid] = tw
+                jct[aid] = tw - self._arrival0.get(aid, tw)
+        # a migrated agent's JCT spans from its ORIGINAL arrival — the
+        # survivor only saw the re-submission
+        for aid in self._requeued:
+            if aid in finish:
+                jct[aid] = finish[aid] - self._arrival0.get(aid, finish[aid])
         # resume lockstep: drained children sit at their own makespans, so
-        # re-anchor every child at the fleet makespan — later submissions
-        # then clamp to a common clock and can never predate the reconciled
-        # horizon (submit/drain rounds may interleave freely, per Backend)
+        # re-anchor every live child at the fleet makespan — later
+        # submissions then clamp to a common clock and can never predate
+        # the reconciled horizon (submit/drain may interleave freely)
         makespan = max(makespan, self.now)
-        for child in self.children:
-            child.run(makespan)
+        for k in self.live_replica_indices:
+            self.children[k].run(makespan)
         snap = self.global_clock.reconcile(makespan)
         self._last_snapshot = snap
         return BackendResult(
@@ -349,6 +776,7 @@ class ReplicatedBackend:
             sched_time=sched_time,
             metrics={
                 "replicas": len(self.children),
+                "live_replicas": len(self.live_replica_indices),
                 "router": self.router.name,
                 "per_replica": per_replica,
                 "global_virtual_time": snap.global_virtual_time,
@@ -356,14 +784,23 @@ class ReplicatedBackend:
                 "virtual_times": list(snap.virtual_times),
                 "hit_fractions": hit_fractions,
                 "prefill_tokens_saved": prefill_tokens_saved,
+                "admission_deferrals": admission_deferrals,
+                "replica_failures": len(self._failures),
+                "failed_replicas": sorted(self._dead),
+                "agents_requeued": len(self._requeued),
             },
         )
 
     # ------------------------------------------------------- fleet state
 
-    def _on_child_complete(self, replica: int, agent_id: int) -> None:
+    def _on_child_complete(
+        self, replica: int, agent_id: int, t: Optional[float] = None
+    ) -> None:
         self.live_agents[replica] -= 1
         self.live_cost[replica] -= self._pred_cost.pop(agent_id, 0.0)
+        self._completed.add(agent_id)
+        if t is not None:
+            self._fleet_finish[agent_id] = (float(t), replica)
 
     def pampering_order(self) -> list[int]:
         """Fleet-wide selective-pampering order (reconciled F_j ascending).
@@ -372,3 +809,17 @@ class ReplicatedBackend:
         ``drain`` or an explicit ``global_clock.reconcile``) appear.
         """
         return self.global_clock.pampering_order()
+
+    def delay_bound(
+        self, c_max: float, c_agent_max: float, service_rate: float = 1.0
+    ) -> float:
+        """Fleet-wide Theorem B.1 bound over the LIVE replicas.
+
+        Delegates to :meth:`GlobalVirtualClock.delay_bound` — after a
+        failover the bound is re-derived for the degraded fleet (dead
+        capacities excluded), so it stays a valid worst-case statement for
+        the replicas that are actually serving.
+        """
+        return self.global_clock.delay_bound(
+            c_max, c_agent_max, service_rate
+        )

@@ -23,11 +23,15 @@ from typing import Iterable, Optional
 
 from repro.api.backend import AgentSpec, Backend, BackendResult
 from repro.api.events import (
+    AdmissionDeferred,
     AgentArrived,
     AgentCompleted,
     AgentEvent,
     AgentHooks,
+    AgentRequeued,
     PrefixHit,
+    ReplicaFailed,
+    ReplicaRecovered,
     RequestAdmitted,
     RequestSwappedIn,
     RequestSwappedOut,
@@ -91,6 +95,12 @@ class AgentHandle:
         elif isinstance(ev, PrefixHit):
             if self.hooks.on_prefix_hit:
                 self.hooks.on_prefix_hit(ev)
+        elif isinstance(ev, AgentRequeued):
+            if self.hooks.on_requeued:
+                self.hooks.on_requeued(ev)
+        elif isinstance(ev, AdmissionDeferred):
+            if self.hooks.on_defer:
+                self.hooks.on_defer(ev)
         elif isinstance(ev, TokenGenerated):
             self.token_count += 1
             if self.record_events:
@@ -316,6 +326,37 @@ class _Dispatcher:
         self._push(agent_id, AgentCompleted(agent_id, tw, tw - arrival,
                                             replica=replica))
 
+    # fault-tolerance events (PR 8).  Replica-scoped events arrive with
+    # agent_id=-1: no handle records them, but the recorder's per-type
+    # counts and any raw-listener consumer still see them in-stream.
+
+    def on_replica_failed(
+        self, agent_id: int, reason: str, t: float, *,
+        replica: Optional[int] = None,
+    ) -> None:
+        self._push(agent_id, ReplicaFailed(agent_id, self._t(t),
+                                           reason, replica=replica))
+
+    def on_replica_recovered(
+        self, agent_id: int, t: float, *, replica: Optional[int] = None
+    ) -> None:
+        self._push(agent_id, ReplicaRecovered(agent_id, self._t(t),
+                                              replica=replica))
+
+    def on_requeued(
+        self, agent_id: int, from_replica: int, t: float, *,
+        replica: Optional[int] = None,
+    ) -> None:
+        self._push(agent_id, AgentRequeued(agent_id, self._t(t),
+                                           from_replica, replica=replica))
+
+    def on_admission_deferred(
+        self, agent_id: int, rid: int, t: float, *,
+        replica: Optional[int] = None,
+    ) -> None:
+        self._push(agent_id, AdmissionDeferred(agent_id, self._t(t), rid,
+                                               replica=replica))
+
 
 class AgentService:
     """Backend-agnostic serving facade (see module docstring)."""
@@ -335,6 +376,13 @@ class AgentService:
 
     # ------------------------------------------------------- constructors
 
+    #: ReplicatedBackend-level kwargs peeled off ``**kw`` by the ``sim`` /
+    #: ``engine`` constructors (everything else goes to the child backends)
+    _FLEET_KW = (
+        "fault_plan", "watchdog_timeout", "watchdog_retries",
+        "watchdog_backoff",
+    )
+
     @classmethod
     def sim(
         cls, scheduler: str = "justitia", *, record_events: bool = True,
@@ -345,15 +393,19 @@ class AgentService:
         ``replicas > 1`` builds a fleet of identical ``SimBackend`` children
         behind a :class:`ReplicatedBackend`, sharding agents via ``router``
         (each replica gets its own scheduler instance and the full ``**kw``
-        pool — pass per-replica capacity, not fleet capacity).
+        pool — pass per-replica capacity, not fleet capacity).  Fleet-level
+        fault-tolerance kwargs (``fault_plan`` / ``watchdog_*``) go to the
+        :class:`ReplicatedBackend`, the rest to the children.
         """
         from repro.api.backend import SimBackend
+
+        fleet_kw = {k: kw.pop(k) for k in cls._FLEET_KW if k in kw}
 
         def make():
             return SimBackend(scheduler, **kw)
 
         return cls._maybe_replicated(
-            make, replicas, router, seed, record_events
+            make, replicas, router, seed, record_events, fleet_kw
         )
 
     @classmethod
@@ -368,9 +420,12 @@ class AgentService:
         each with its own KV pool, batch slots, and scheduler) behind a
         :class:`ReplicatedBackend`; replica k synthesizes prompts from
         ``seed + k`` so fleets are deterministic but decorrelated.
+        Fleet-level fault-tolerance kwargs (``fault_plan`` / ``watchdog_*``)
+        go to the :class:`ReplicatedBackend`, the rest to the children.
         """
         from repro.api.backend import EngineBackend
 
+        fleet_kw = {k: kw.pop(k) for k in cls._FLEET_KW if k in kw}
         counter = iter(range(replicas if replicas > 1 else 1))
 
         def make():
@@ -379,34 +434,46 @@ class AgentService:
             )
 
         return cls._maybe_replicated(
-            make, replicas, router, seed, record_events
+            make, replicas, router, seed, record_events, fleet_kw
         )
 
     @classmethod
     def replicated(
         cls, children, *, router: str = "round_robin", seed: int = 0,
-        record_events: bool = True,
+        record_events: bool = True, **fleet_kw
     ) -> "AgentService":
-        """Service over an explicit fleet (any mix of backend types)."""
+        """Service over an explicit fleet (any mix of backend types).
+
+        ``**fleet_kw`` forwards fault-tolerance knobs (``fault_plan``,
+        ``watchdog_timeout``/``watchdog_retries``/``watchdog_backoff``) to
+        the :class:`ReplicatedBackend`.
+        """
         from repro.api.replicated import ReplicatedBackend
 
         return cls(
-            ReplicatedBackend(children, router=router, seed=seed),
+            ReplicatedBackend(children, router=router, seed=seed,
+                              **fleet_kw),
             record_events=record_events,
         )
 
     @classmethod
     def _maybe_replicated(
         cls, make_child, replicas: int, router: str, seed: int,
-        record_events: bool,
+        record_events: bool, fleet_kw: Optional[dict] = None,
     ) -> "AgentService":
         if replicas <= 1:
+            if fleet_kw:
+                raise ValueError(
+                    f"{sorted(fleet_kw)} require a replicated fleet — "
+                    f"pass replicas > 1"
+                )
             return cls(make_child(), record_events=record_events)
         from repro.api.replicated import ReplicatedBackend
 
         children = [make_child() for _ in range(replicas)]
         return cls(
-            ReplicatedBackend(children, router=router, seed=seed),
+            ReplicatedBackend(children, router=router, seed=seed,
+                              **(fleet_kw or {})),
             record_events=record_events,
         )
 

@@ -134,6 +134,9 @@ def service_for_backend(
     stream: bool = False,
     prefix_cache: bool = False,
     fused_prefill: bool = False,
+    fault_plan=None,
+    watchdog_timeout: Optional[float] = None,
+    admission_watermark: Optional[tuple] = None,
 ) -> AgentService:
     """Build an AgentService for ``backend`` in {"sim", "engine"}.
 
@@ -162,7 +165,18 @@ def service_for_backend(
     ``prefill_chunk`` slice per iteration instead of charging a blocking
     whole-prefill pass at admission — the interference-aware batch
     formation path.
+
+    ``fault_plan`` (a :class:`repro.api.FaultPlan`) plus
+    ``watchdog_timeout`` arm deterministic fault injection and failover
+    on the fleet — both require ``replicas > 1``.
+    ``admission_watermark=(low, high)`` (pool fractions) turns on
+    watermark admission control on every child backend.
     """
+    fleet_kw = {}
+    if fault_plan is not None:
+        fleet_kw["fault_plan"] = fault_plan
+    if watchdog_timeout is not None:
+        fleet_kw["watchdog_timeout"] = watchdog_timeout
     if backend == "sim":
         return AgentService.sim(
             scheduler,
@@ -171,6 +185,8 @@ def service_for_backend(
             replicas=replicas, router=router, seed=seed,
             token_events=stream,
             prefix_cache=prefix_cache,
+            admission_watermark=admission_watermark,
+            **fleet_kw,
         )
     if backend != "engine":
         raise ValueError(f"unknown backend {backend!r} (sim|engine)")
@@ -188,4 +204,6 @@ def service_for_backend(
         token_scale=token_scale, time_scale=1.0,
         replicas=replicas, router=router, seed=seed,
         prefix_cache=prefix_cache, fused_prefill=fused_prefill,
+        admission_watermark=admission_watermark,
+        **fleet_kw,
     )

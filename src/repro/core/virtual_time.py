@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Sequence
+from typing import Optional, Sequence
 
 
 class VirtualClock:
@@ -43,6 +43,11 @@ class VirtualClock:
     @property
     def n_active(self) -> int:
         return len(self._active)
+
+    @property
+    def value(self) -> float:
+        """V at the last update time (no simulation; pairs with ``now``)."""
+        return self._v
 
     def now(self, t: float) -> float:
         """V(t) without mutating state (t must be >= last update time).
@@ -137,6 +142,10 @@ class GlobalClockSnapshot:
     virtual_times: tuple[float, ...]
     global_virtual_time: float
     lag: float
+    #: replica indices that were live (not failed) at snapshot time; the
+    #: global virtual time and lag are computed over these only.  Empty on
+    #: snapshots taken before any replica failed (i.e. all replicas live).
+    live: tuple[int, ...] = ()
 
 
 class GlobalVirtualClock:
@@ -178,10 +187,17 @@ class GlobalVirtualClock:
         self._horizon = 0.0            # arrivals <= horizon are replayed
         self.virtual_finish: dict[int, float] = {}
         self.replica_of: dict[int, int] = {}
+        self._dead: set[int] = set()
 
     @property
     def n_replicas(self) -> int:
         return len(self.clocks)
+
+    @property
+    def live_indices(self) -> tuple[int, ...]:
+        return tuple(
+            k for k in range(len(self.clocks)) if k not in self._dead
+        )
 
     def register(
         self, replica: int, agent_id: int, t: float, cost: float
@@ -189,6 +205,8 @@ class GlobalVirtualClock:
         """Buffer one arrival for ``reconcile`` to replay (order-free)."""
         if not 0 <= replica < len(self.clocks):
             raise ValueError(f"replica {replica} out of range")
+        if replica in self._dead:
+            raise ValueError(f"replica {replica} is dead")
         if t < self._horizon - 1e-9:
             raise ValueError(
                 f"arrival at {t} predates reconciled horizon {self._horizon}"
@@ -198,23 +216,85 @@ class GlobalVirtualClock:
         )
         self._seq += 1
 
+    def fail_replica(self, replica: int) -> list[tuple[int, float]]:
+        """Mark a replica dead; its clock is frozen at its current V.
+
+        Buffered (un-replayed) arrivals bound for the dead replica are
+        dropped from the pending heap and returned as ``[(agent_id, cost)]``
+        so the caller can :meth:`migrate` them to survivors.  Agents whose
+        arrival was already replayed keep their recorded ``virtual_finish``
+        — migration never rewrites accrued virtual time.
+        """
+        if not 0 <= replica < len(self.clocks):
+            raise ValueError(f"replica {replica} out of range")
+        self._dead.add(replica)
+        orphaned = [
+            (aid, cost)
+            for (_, _, k, aid, cost) in self._pending
+            if k == replica
+        ]
+        if orphaned:
+            self._pending = [
+                entry for entry in self._pending if entry[2] != replica
+            ]
+            heapq.heapify(self._pending)
+        return orphaned
+
+    def migrate(
+        self, agent_id: int, new_replica: int, t: float, cost: float
+    ) -> Optional[float]:
+        """Move an agent to a live replica, carrying accrued virtual time.
+
+        The agent enters ``new_replica``'s GPS reference at real time ``t``
+        with remaining cost ``cost`` (it now shares that replica's service
+        rate — the re-arrival is buffered like any other and replayed in
+        time order by ``reconcile``), but if a global ``virtual_finish``
+        was already recorded it is KEPT — the agent's place in the
+        fleet-wide pampering order reflects the virtual time it accrued
+        before the failure, so a crash cannot demote (or promote) an agent
+        relative to its peers.  Returns the carried virtual finish time,
+        or ``None`` when the agent's first arrival had not been reconciled
+        yet (its F_j materializes at the next ``reconcile``).
+        """
+        if new_replica in self._dead:
+            raise ValueError(f"replica {new_replica} is dead")
+        self.register(new_replica, agent_id, t, cost)
+        self.replica_of[agent_id] = new_replica
+        return self.virtual_finish.get(agent_id)
+
     def reconcile(self, until: float) -> GlobalClockSnapshot:
-        """Replay arrivals up to ``until`` and advance all replica clocks."""
+        """Replay arrivals up to ``until`` and advance the live clocks.
+
+        Dead replicas' clocks stay frozen at their failure-time V; the
+        global virtual time and lag are taken over live replicas only, so a
+        crash does not drag the fleet reference backwards (``virtual_times``
+        still reports every replica, frozen values included).
+        """
         until = float(until)
         while self._pending and self._pending[0][0] <= until:
             t, _, replica, agent_id, cost = heapq.heappop(self._pending)
             f = self.clocks[replica].on_arrival(agent_id, t, cost)
-            self.virtual_finish[agent_id] = f
+            # never overwrite: a migrated agent's re-arrival joins the new
+            # clock's GPS reference but its recorded F_j is carried over
+            self.virtual_finish.setdefault(agent_id, f)
             self.replica_of[agent_id] = replica
-        for clock in self.clocks:
-            clock.advance(until)
+        live = self.live_indices
+        if not live:
+            raise RuntimeError("all replicas are dead")
+        for k in live:
+            self.clocks[k].advance(until)
         self._horizon = max(self._horizon, until)
-        v = tuple(clock.now(until) for clock in self.clocks)
+        v = tuple(
+            c.now(until) if k not in self._dead else c.value
+            for k, c in enumerate(self.clocks)
+        )
+        v_live = [v[k] for k in live]
         return GlobalClockSnapshot(
             time=until,
             virtual_times=v,
-            global_virtual_time=min(v),
-            lag=max(v) - min(v),
+            global_virtual_time=min(v_live),
+            lag=max(v_live) - min(v_live),
+            live=live,
         )
 
     # NB: reading the global time / lag goes through reconcile(t) — it is
@@ -245,9 +325,16 @@ class GlobalVirtualClock:
         most this, so the worst replica bounds the whole fleet.
         Heterogeneous fleets with differing per-child service rates need
         per-replica conversion — compute the bound per child instead.
+
+        Dead replicas are excluded: after a failure the bound is re-derived
+        over the surviving capacities (it can only grow, since the worst
+        live replica may have less capacity headroom than before).
         """
         r = float(service_rate)
+        caps = [self.capacities[k] for k in self.live_indices]
+        if not caps:
+            raise RuntimeError("all replicas are dead")
         return max(
             (2.0 * float(c_max) + float(c_agent_max) * r / cap) / r
-            for cap in self.capacities
+            for cap in caps
         )

@@ -359,6 +359,7 @@ class ServeEngine:
         listener: Any = None,
         prefix_cache: bool = False,
         fused_prefill: bool = False,
+        admission_watermark: Any = None,
     ):
         self.model = model
         self.params = params
@@ -396,6 +397,30 @@ class ServeEngine:
         self._pf: Optional[_FusedPrefill] = None
         alloc_cls = PrefixAwareAllocator if prefix_cache else BlockAllocator
         self.alloc = alloc_cls(pool_tokens, block_size)
+        #: watermark admission control (PR 8): ``(low_frac, high_frac)``
+        #: of the block pool.  While anything occupies a slot (or a fused
+        #: prefill is in flight), a NEW admission that would lift block
+        #: usage above the high watermark is deferred, and once gated the
+        #: gate stays shut until usage drains to the low watermark
+        #: (hysteresis) — the pool never enters the recurring swap-thrash
+        #: regime just to squeeze one more prompt in.  Swapped
+        #: re-admissions are never gated (their blocks hold paged state),
+        #: and an idle pool bypasses the gate (progress guarantee).
+        #: Strictly flag-gated: ``None`` leaves every admission path
+        #: bit-identical to the frozen reference engine.
+        if admission_watermark is not None:
+            low, high = admission_watermark
+            if not (0.0 < low <= high <= 1.0):
+                raise ValueError(
+                    f"admission_watermark must satisfy 0 < low <= high <= 1,"
+                    f" got {admission_watermark!r}"
+                )
+            nb = self.alloc.n_blocks
+            self._wm = (low * nb, high * nb)
+        else:
+            self._wm = None
+        self._wm_gated = False
+        self._wm_emitted: set[int] = set()
         self.max_batch = max_batch
         self.cache_len = cache_len
         self.prefill_chunk = prefill_chunk
@@ -451,7 +476,7 @@ class ServeEngine:
                         "tokens": 0, "sorts": 0, "key_evals": 0,
                         "host_syncs": 0, "windows": 0,
                         "prefill_tokens_saved": 0, "prefix_hits": 0,
-                        "fused_slices": 0}
+                        "fused_slices": 0, "admission_deferrals": 0}
         # per-agent prefix-cache accounting (engine-scale tokens)
         self.agent_prefill_tokens: dict[int, int] = {}
         self.agent_hit_tokens: dict[int, int] = {}
@@ -805,6 +830,8 @@ class ServeEngine:
         batch: list[EngineRequest] = []
         while self.waiting and len(self.slot_free) > len(batch):
             req = self.waiting.peek()
+            if self._wm is not None and self._wm_gate(req, in_pass=batch):
+                break
             if self.prefix_cache:
                 if not self.alloc.can_admit_prefix(req.prompt):
                     break
@@ -837,6 +864,8 @@ class ServeEngine:
         if self._pf is not None or not self.slot_free or not self.waiting:
             return
         req = self.waiting.peek()
+        if self._wm is not None and self._wm_gate(req):
+            return
         if self.prefix_cache:
             if not self.alloc.can_admit_prefix(req.prompt):
                 return
@@ -1159,9 +1188,52 @@ class ServeEngine:
         return self.alloc.blocks_for(max(1, s.n_tokens)) <= free
 
     def _admit_fits(self, req: EngineRequest, free: int) -> bool:
+        if self._wm is not None and self._wm_defers(req):
+            return False
         if self.prefix_cache:
             return self.alloc.can_admit_prefix(req.prompt)
         return self.alloc.blocks_for(len(req.prompt) + 1) <= free
+
+    # ------------------------------------------------- watermark admission
+
+    def _wm_gate(self, req: EngineRequest, in_pass=()) -> bool:
+        """Watermark verdict for the waiting head DURING an admission pass
+        (updates the hysteresis gate and emits the deferral; ``in_pass``
+        is the pass's already-admitted batch, so the idle-pool bypass only
+        applies to a genuinely empty pool)."""
+        if not (self.slot_req or self._pf is not None or in_pass):
+            return False                       # idle-pool bypass
+        low_b, high_b = self._wm
+        used = self.alloc.n_blocks - self.alloc.free_blocks
+        if self._wm_gated and used <= low_b:
+            self._wm_gated = False
+        need = self.alloc.blocks_for(len(req.prompt) + 1)
+        if self._wm_gated or used + need > high_b:
+            self._wm_gated = True
+            if req.rid not in self._wm_emitted:
+                self._wm_emitted.add(req.rid)
+                self.metrics["admission_deferrals"] += 1
+                self._emit(
+                    "on_admission_deferred", req.agent_id, req.rid,
+                    float(self.now),
+                )
+            return True
+        return False
+
+    def _wm_defers(self, req: EngineRequest) -> bool:
+        """Pure watermark verdict (no gate mutation, no emission) — used
+        by ``_queued_admittable`` via ``_admit_fits`` so window sizing and
+        the next admission pass agree.  Monotone within a fused window:
+        block usage only grows and the gate state only moves inside
+        ``_admit``, so a True verdict stays True for every covered step.
+        """
+        if not (self.slot_req or self._pf is not None):
+            return False
+        low_b, high_b = self._wm
+        used = self.alloc.n_blocks - self.alloc.free_blocks
+        if self._wm_gated and used > low_b:
+            return True
+        return used + self.alloc.blocks_for(len(req.prompt) + 1) > high_b
 
     def _window_size(self, limit: Optional[int]) -> int:
         """Largest provably scheduling-free decode window (pow2 capped).

@@ -182,6 +182,11 @@ class SimResult:
     key_evals: int = 0                     # scheduler request_key invocations
     sorts: int = 0                         # queue re-sorts (dynamic policies)
     peak_occupancy: float = 0.0            # max pool occupancy observed
+    # watermark admission control (populated only with
+    # ``admission_watermark=(low, high)``; see ClusterSim.__init__)
+    admission_deferrals: int = 0           # distinct requests ever deferred
+    wm_admit_peak: float = 0.0             # max occ-after-admit (new admits)
+    wm_bypass_admits: int = 0              # above-high admits on an idle pool
     # prefix-cache accounting (populated only with ``prefix_cache=True``)
     prefill_tokens_saved: float = 0.0
     agent_prefill_tokens: dict[int, float] = dataclasses.field(
@@ -203,6 +208,7 @@ class ClusterSim:
         listener: Any = None,
         token_events: bool = False,
         prefix_cache: bool = False,
+        admission_watermark: Any = None,
     ):
         self.sched = scheduler
         self.m = float(total_kv)
@@ -221,6 +227,28 @@ class ClusterSim:
         #: identical model (frozen-oracle invariant, like token_events).
         self.prefix_cache = bool(prefix_cache)
         self._seeded_groups: set[str] = set()
+        #: watermark admission control (PR 8): ``(low_frac, high_frac)``
+        #: of the pool.  While anything is running, a NEW admission that
+        #: would lift occupancy above the high watermark is deferred, and
+        #: once gated the gate stays shut until occupancy drains to the
+        #: low watermark (hysteresis) — trading queueing delay for the
+        #: swap-thrash regime.  Swapped re-admissions are never gated
+        #: (they hold pool-priority state), and an idle pool bypasses the
+        #: gate entirely (progress guarantee).  Strictly flag-gated: with
+        #: ``None`` the admission pass is untouched bit-for-bit.
+        #: LOCKSTEP: the frozen reference core carries the identical gate.
+        if admission_watermark is not None:
+            low, high = admission_watermark
+            if not (0.0 < low <= high <= 1.0):
+                raise ValueError(
+                    f"admission_watermark must satisfy 0 < low <= high <= 1,"
+                    f" got {admission_watermark!r}"
+                )
+            self._wm = (low * self.m, high * self.m)
+        else:
+            self._wm = None
+        self._wm_gated = False
+        self._wm_emitted: set[int] = set()
         self._in_run = False             # re-entrancy guard (listener rule)
 
         # clock + result (cumulative across submit/advance/drain rounds)
@@ -530,6 +558,30 @@ class ClusterSim:
                 )
                 if not (fits or solo_oversized):
                     break
+                if self._wm is not None:
+                    low, high = self._wm
+                    occ_now = self.m - free
+                    if self._running:
+                        if self._wm_gated and occ_now <= low:
+                            self._wm_gated = False
+                        if (self._wm_gated
+                                or occ_now + req.spec.prefill > high):
+                            self._wm_gated = True
+                            if req.rid not in self._wm_emitted:
+                                self._wm_emitted.add(req.rid)
+                                self.result.admission_deferrals += 1
+                                deferred.append((
+                                    "on_admission_deferred",
+                                    req.agent_id, req.rid, now,
+                                ))
+                            break
+                    elif occ_now + req.spec.prefill > high:
+                        # idle-pool bypass: admit for progress even above
+                        # the high watermark, but record the violation
+                        self.result.wm_bypass_admits += 1
+                    peak = occ_now + req.spec.prefill
+                    if peak > self.result.wm_admit_peak:
+                        self.result.wm_admit_peak = peak
                 static_key = (
                     None if self.sched.dynamic else self._waiting.head_key()
                 )

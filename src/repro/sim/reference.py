@@ -36,6 +36,11 @@ inert to the dynamics when off:
   float expressions as the optimized core.  Off, every expression
   reduces to the pre-cache arithmetic bit-for-bit (``hit == 0.0`` and
   ``x - 0.0 == x`` for positive prefills).
+* ``admission_watermark`` (PR 8) — the hysteresis admission gate: a NEW
+  admission that would lift occupancy above the high watermark is
+  deferred while anything is running, until occupancy drains to the low
+  watermark.  Off (``None``), the admission pass is untouched — the gate
+  branch is never entered.
 """
 
 from __future__ import annotations
@@ -107,6 +112,7 @@ class ReferenceClusterSim:
         listener: Any = None,
         token_events: bool = False,
         prefix_cache: bool = False,
+        admission_watermark: Any = None,
     ):
         self.sched = scheduler
         self.m = float(total_kv)
@@ -116,6 +122,16 @@ class ReferenceClusterSim:
         self.listener = listener
         self.token_events = bool(token_events)
         self.prefix_cache = bool(prefix_cache)
+        if admission_watermark is not None:
+            low, high = admission_watermark
+            if not (0.0 < low <= high <= 1.0):
+                raise ValueError(
+                    f"admission_watermark must satisfy 0 < low <= high <= 1,"
+                    f" got {admission_watermark!r}"
+                )
+            self._wm = (low * self.m, high * self.m)
+        else:
+            self._wm = None
 
     def _emit(self, event: str, *args) -> None:
         if self.listener is not None:
@@ -139,6 +155,8 @@ class ReferenceClusterSim:
         t = 0.0
         result = SimResult(jct={}, finish={})
         seeded_groups: set[str] = set()
+        wm_state = {"gated": False}
+        wm_emitted: set[int] = set()
         _sched_clock = 0.0
         _decisions = 0
         _key_evals = 0
@@ -274,6 +292,31 @@ class ReferenceClusterSim:
                     )
                     if not (fits or solo_oversized):
                         break
+                    # watermark admission gate — LOCKSTEP with the
+                    # optimized core's ``_admit`` (same expressions, same
+                    # hysteresis rule, same idle-pool bypass)
+                    if self._wm is not None:
+                        low, high = self._wm
+                        occ_now = self.m - free
+                        if running:
+                            if wm_state["gated"] and occ_now <= low:
+                                wm_state["gated"] = False
+                            if (wm_state["gated"]
+                                    or occ_now + req.spec.prefill > high):
+                                wm_state["gated"] = True
+                                if req.rid not in wm_emitted:
+                                    wm_emitted.add(req.rid)
+                                    result.admission_deferrals += 1
+                                    deferred.append((
+                                        "on_admission_deferred",
+                                        req.agent_id, req.rid, now,
+                                    ))
+                                break
+                        elif occ_now + req.spec.prefill > high:
+                            result.wm_bypass_admits += 1
+                        peak = occ_now + req.spec.prefill
+                        if peak > result.wm_admit_peak:
+                            result.wm_admit_peak = peak
                     waiting.pop(0)
                     hit = prefix_hit(req, now, deferred)
                     pf = now + (req.spec.prefill - hit) / self.prefill_rate

@@ -28,8 +28,10 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.api import (
+    AdmissionDeferred,
     AgentArrived,
     AgentCompleted,
+    AgentRequeued,
     AgentService,
     AgentSpec,
     EngineBackend,
@@ -61,12 +63,22 @@ def tiny_model():
 
 
 def assert_conformant_stream(
-    handle, *, expect_replica=False, token_demands=None, expect_tokens=True
+    handle, *, expect_replica=False, token_demands=None, expect_tokens=True,
+    allow_requeue=False,
 ):
     """Assert one agent's event stream satisfies the lifecycle grammar.
 
     ``token_demands``: multiset (sorted list) of per-request decode demands
     the agent was served with — compared against the per-rid token counts.
+
+    ``allow_requeue=True`` admits failover migrations into the grammar: an
+    ``AgentRequeued`` event restarts the lifecycle on the survivor (rid
+    space, swap chains, and stage indices all reset to the re-submitted
+    remaining-stage spec; subsequent events must carry the new replica),
+    timestamps stay monotone across the migration, and the token-demand
+    multiset check is skipped for migrated agents — the in-progress stage
+    is replayed from its start, so its per-rid counts legitimately repeat.
+    Returns the stage count observed on the FINAL replica.
     """
     evs = handle.events
     aid = handle.agent_id
@@ -85,11 +97,38 @@ def assert_conformant_stream(
     swapped_out: dict = {}
     token_counts: dict = {}
     stages_seen = 0
+    requeues = 0
+    cur_replica = evs[0].replica
     for ev in evs[1:-1]:
         assert ev.agent_id == aid
         if expect_replica:
             assert ev.replica is not None, f"agent {aid}: {ev} lacks replica"
-        if isinstance(ev, RequestAdmitted):
+        if isinstance(ev, AgentRequeued):
+            assert allow_requeue, f"agent {aid}: unexpected AgentRequeued"
+            if expect_replica:
+                assert ev.from_replica == cur_replica, (
+                    f"agent {aid}: requeued from replica "
+                    f"{ev.from_replica}, was on {cur_replica}"
+                )
+                assert ev.replica != ev.from_replica, (
+                    f"agent {aid}: requeued onto the failed replica"
+                )
+            cur_replica = ev.replica
+            admitted = set()
+            swapped_out = {}
+            stages_seen = 0
+            requeues += 1
+            continue
+        if expect_replica and cur_replica is not None:
+            assert ev.replica == cur_replica, (
+                f"agent {aid}: {ev} on replica {ev.replica}, expected "
+                f"{cur_replica}"
+            )
+        if isinstance(ev, AdmissionDeferred):
+            assert ev.rid not in admitted, (
+                f"agent {aid}: rid {ev.rid} deferred after admission"
+            )
+        elif isinstance(ev, RequestAdmitted):
             assert ev.rid not in admitted, (
                 f"agent {aid}: rid {ev.rid} admitted twice"
             )
@@ -123,7 +162,7 @@ def assert_conformant_stream(
     )
     if expect_tokens:
         assert token_counts, f"agent {aid}: no TokenGenerated events"
-    if token_demands is not None:
+    if token_demands is not None and requeues == 0:
         assert sorted(token_counts.values()) == sorted(token_demands), (
             f"agent {aid}: per-request token counts "
             f"{sorted(token_counts.values())} != decode demands "

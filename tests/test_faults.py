@@ -1,0 +1,451 @@
+"""Fault-tolerant fleet serving (PR 8): deterministic fault injection,
+watchdog failure detection, agent failover, and degraded-fleet fairness.
+
+Covers the PR 8 invariants (ROADMAP "Failure semantics"):
+
+  * :class:`repro.api.FaultPlan` — builder validation, seeded
+    reproducibility, horizon math;
+  * :class:`repro.core.GlobalVirtualClock` failure/migration — virtual
+    time carried across a migration, dead clocks frozen, live-only
+    snapshots and delay bounds;
+  * end-to-end sim-fleet crash: every agent completes on the survivors,
+    event streams stay conformant across the migration (AgentRequeued
+    resets the per-replica chain), JCTs span from the ORIGINAL arrival;
+  * stalls/slowdowns shorter than the watchdog budget leave final
+    results bit-identical to the fault-free fleet (timestamps are
+    model-derived, not advancement-driven) and exercise only the
+    suspect/recover path;
+  * with the watchdog disarmed, a crashed-and-busy child raises
+    :class:`repro.api.FleetStalledError` with diagnostics instead of
+    letting the fleet spin;
+  * routers place over live replicas only after a failure, and
+    ``Router.rebalance`` routes failover through the normal pick path;
+  * the same crash on an engine fleet completes on the survivor.
+"""
+
+import math
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from test_event_conformance import assert_conformant_stream
+
+from repro.api import (
+    AgentService,
+    AgentSpec,
+    Fault,
+    FaultPlan,
+    FleetStalledError,
+    ReplicatedBackend,
+    SimBackend,
+)
+from repro.api.replicated import RoundRobinRouter
+from repro.configs import get_config
+from repro.core import InferenceSpec
+from repro.core.virtual_time import GlobalVirtualClock
+from repro.models import Model
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("granite-3-2b").reduced(vocab=256)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _specs(n, *, stages=2, spacing=0.2):
+    return [
+        AgentSpec(
+            stages=[[InferenceSpec(300, 60)] for _ in range(stages)],
+            arrival=spacing * i,
+            name=f"a{i}",
+        )
+        for i in range(n)
+    ]
+
+
+# ------------------------------------------------------------- FaultPlan
+
+
+class TestFaultPlan:
+    def test_builder_validation(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            Fault(0, "explode", 1.0)
+        with pytest.raises(ValueError, match="permanent"):
+            Fault(0, "crash", 1.0, duration=2.0)
+        with pytest.raises(ValueError, match="factor"):
+            Fault(0, "slowdown", 1.0, duration=2.0, factor=1.5)
+        plan = FaultPlan().stall(0, 1.0, 2.0)
+        with pytest.raises(ValueError, match="overlap"):
+            plan.stall(0, 2.0, 1.0)
+        plan.stall(1, 2.0, 1.0)  # other replica: fine
+        plan.crash(0, 10.0)
+        with pytest.raises(ValueError, match="after it"):
+            plan.stall(0, 11.0, 1.0)
+        with pytest.raises(ValueError, match="precedes"):
+            plan.crash(1, 1.0)
+
+    def test_seeded_reproducible(self):
+        a = FaultPlan.seeded(42, 4, n_crashes=1, n_stalls=2)
+        b = FaultPlan.seeded(42, 4, n_crashes=1, n_stalls=2)
+        assert a.faults == b.faults
+        assert sum(f.kind == "crash" for f in a.faults) == 1
+        assert sum(f.kind == "stall" for f in a.faults) == 2
+        # crash and stalls land on distinct replicas
+        assert len({f.replica for f in a.faults}) == 3
+
+    def test_horizon(self):
+        plan = (
+            FaultPlan()
+            .crash(0, 5.0)
+            .stall(1, 2.0, 3.0)
+            .slowdown(2, 1.0, 2.0, 0.5)
+        )
+        # crash: clamped at the crash time forever
+        assert plan.horizon(0, 3.0) == 3.0
+        assert plan.horizon(0, 7.0) == 5.0
+        assert plan.horizon(0, 1e9) == 5.0
+        # stall: clamped at the window start until the window closes
+        assert plan.horizon(1, 3.0) == 2.0
+        assert plan.horizon(1, 4.999) == 2.0
+        assert plan.horizon(1, 6.0) == 6.0
+        # slowdown: factor-speed inside the window, free outside
+        assert plan.horizon(2, 0.5) == 0.5
+        assert plan.horizon(2, 2.0) == pytest.approx(1.5)
+        assert plan.horizon(2, 5.0) == 5.0
+        # unaffected replica
+        assert plan.horizon(3, 9.0) == 9.0
+        assert plan.max_boundary() == 5.0
+        assert plan.boundaries() == [1.0, 2.0, 3.0, 5.0]
+
+
+# ------------------------------------------------- global clock failover
+
+
+class TestGlobalClockFailover:
+    def test_migrate_carries_virtual_finish(self):
+        gc = GlobalVirtualClock([100.0, 100.0])
+        gc.register(0, 1, 0.0, 50.0)
+        gc.register(1, 2, 0.0, 50.0)
+        gc.reconcile(0.5)
+        f1 = gc.virtual_finish[1]
+        gc.fail_replica(0)
+        gc.migrate(1, 1, 1.0, 30.0)
+        gc.reconcile(2.0)
+        assert gc.virtual_finish[1] == f1, "migration rewrote accrued F_j"
+        assert gc.replica_of[1] == 1
+
+    def test_fail_replica_returns_unreplayed_orphans(self):
+        gc = GlobalVirtualClock([100.0, 100.0])
+        gc.register(0, 7, 5.0, 10.0)   # buffered, never reconciled
+        orphans = gc.fail_replica(0)
+        assert orphans == [(7, 10.0)]
+        with pytest.raises(ValueError, match="dead"):
+            gc.register(0, 8, 6.0, 1.0)
+        with pytest.raises(ValueError, match="dead"):
+            gc.migrate(9, 0, 6.0, 1.0)
+
+    def test_dead_clock_frozen_and_live_snapshot(self):
+        gc = GlobalVirtualClock([100.0, 100.0, 100.0])
+        for k in range(3):
+            gc.register(k, k, 0.0, 1000.0)
+        snap = gc.reconcile(1.0)
+        v_dead = snap.virtual_times[0]
+        gc.fail_replica(0)
+        snap2 = gc.reconcile(3.0)
+        assert snap2.virtual_times[0] == v_dead, "dead clock advanced"
+        assert snap2.live == (1, 2)
+        assert snap2.virtual_times[1] > v_dead
+        # global time / lag computed over live replicas only
+        assert snap2.global_virtual_time == min(snap2.virtual_times[1:])
+        assert snap2.lag == (
+            max(snap2.virtual_times[1:]) - min(snap2.virtual_times[1:])
+        )
+
+    def test_delay_bound_over_live_capacities(self):
+        gc = GlobalVirtualClock([50.0, 200.0])
+        full = gc.delay_bound(3.0, 100.0)
+        gc.fail_replica(1)          # only the SMALL replica survives
+        degraded = gc.delay_bound(3.0, 100.0)
+        assert degraded == full     # worst replica was already the bound
+        gc2 = GlobalVirtualClock([50.0, 200.0])
+        gc2.fail_replica(0)         # only the big replica survives
+        assert gc2.delay_bound(3.0, 100.0) < full
+
+
+# ------------------------------------------------- sim fleet end to end
+
+
+def _fleet(plan=None, watchdog=None, **kw):
+    return AgentService.sim(
+        replicas=4, total_kv=800.0, token_events=True,
+        fault_plan=plan, watchdog_timeout=watchdog, **kw,
+    )
+
+
+def test_crash_failover_completes_on_survivors():
+    svc0 = _fleet()
+    h0 = [svc0.submit(s) for s in _specs(12)]
+    base = svc0.drain()
+
+    plan = FaultPlan().crash(1, 3.0)
+    svc = _fleet(plan, watchdog=0.5)
+    handles = [svc.submit(s) for s in _specs(12)]
+    res = svc.drain()
+
+    assert set(res.finish) == set(base.finish), "agents lost in failover"
+    assert res.metrics["replica_failures"] == 1
+    assert res.metrics["failed_replicas"] == [1]
+    assert res.metrics["live_replicas"] == 3
+    assert res.metrics["agents_requeued"] >= 1
+    assert res.event_counts.get("ReplicaFailed") == 1
+    assert res.event_counts.get("AgentRequeued") == (
+        res.metrics["agents_requeued"]
+    )
+    requeued = 0
+    for h in handles:
+        assert_conformant_stream(
+            h, expect_replica=True, allow_requeue=True
+        )
+        if any(type(e).__name__ == "AgentRequeued" for e in h.events):
+            requeued += 1
+            # handle tracks the agent to its new replica, and the fleet's
+            # assignment agrees
+            assert h.replica != 1
+            assert h.replica == svc.backend.assignment[h.agent_id]
+            # JCT spans from the ORIGINAL arrival, not the re-submission
+            assert res.jct[h.agent_id] == pytest.approx(
+                res.finish[h.agent_id] - h.arrival
+            )
+    assert requeued == res.metrics["agents_requeued"]
+    # the degraded fleet pays: no agent finished EARLIER than fault-free
+    # on the failed replica's survivors is not guaranteed per-agent, but
+    # fleet-wide max delay is bounded and recorded
+    ratio = max(res.jct.values()) / max(base.jct.values())
+    assert 1.0 <= ratio < 10.0
+
+
+def test_stall_under_budget_bit_identical_plus_recovery():
+    svc0 = _fleet()
+    [svc0.submit(s) for s in _specs(12)]
+    base = svc0.drain()
+
+    plan = FaultPlan().stall(2, 1.0, 1.5)
+    svc = _fleet(plan, watchdog=1.0)   # budget 15s >> 1.5s stall
+    [svc.submit(s) for s in _specs(12)]
+    res = svc.drain()
+
+    assert res.finish == base.finish, "stall changed final results"
+    assert res.jct == base.jct
+    assert res.swaps == base.swaps
+    assert res.metrics["replica_failures"] == 0
+    assert res.event_counts.get("ReplicaRecovered", 0) >= 1
+    assert "ReplicaFailed" not in res.event_counts
+
+
+def test_slowdown_bit_identical():
+    svc0 = _fleet()
+    [svc0.submit(s) for s in _specs(12)]
+    base = svc0.drain()
+
+    plan = FaultPlan().slowdown(0, 0.5, 2.0, 0.25)
+    svc = _fleet(plan, watchdog=1.0)
+    [svc.submit(s) for s in _specs(12)]
+    res = svc.drain()
+    assert res.finish == base.finish
+    assert res.jct == base.jct
+    assert res.metrics["replica_failures"] == 0
+
+
+def test_crash_without_watchdog_raises_stall_guard():
+    plan = FaultPlan().crash(0, 2.0)
+    svc = _fleet(plan)   # watchdog disarmed
+    [svc.submit(s) for s in _specs(8)]
+    with pytest.raises(FleetStalledError) as ei:
+        svc.drain()
+    err = ei.value
+    assert err.replica == 0
+    assert err.last_time == pytest.approx(2.0)
+    assert err.in_flight > 0
+    assert set(err.queue_depths) == {0, 1, 2, 3}
+    assert "watchdog" in str(err)
+
+
+def test_crash_determinism():
+    """Same plan + same workload => bit-identical failover run."""
+    plan_a = FaultPlan.seeded(9, 4, crash_window=(2.0, 4.0))
+    plan_b = FaultPlan.seeded(9, 4, crash_window=(2.0, 4.0))
+    runs = []
+    for plan in (plan_a, plan_b):
+        svc = _fleet(plan, watchdog=0.5)
+        [svc.submit(s) for s in _specs(12)]
+        res = svc.drain()
+        runs.append(res)
+    assert runs[0].finish == runs[1].finish
+    assert runs[0].jct == runs[1].jct
+    assert runs[0].event_counts == runs[1].event_counts
+
+
+@given(st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=8, deadline=None)
+def test_crash_failover_never_loses_agents(seed):
+    """Property: any seeded 1-of-4 crash completes every agent."""
+    plan = FaultPlan.seeded(seed, 4, crash_window=(1.0, 6.0))
+    svc = _fleet(plan, watchdog=0.5)
+    handles = [svc.submit(s) for s in _specs(10)]
+    res = svc.drain()
+    assert set(res.finish) == {h.agent_id for h in handles}
+    assert res.metrics["replica_failures"] == 1
+
+
+# ------------------------------------------------------ router behavior
+
+
+def test_routers_place_on_live_replicas_only():
+    plan = FaultPlan().crash(0, 1.0)
+    svc = _fleet(plan, watchdog=0.25, router="round_robin")
+    [svc.submit(s) for s in _specs(8)]
+    svc.run(30.0)
+    fleet = svc.backend
+    assert fleet.dead_replica_indices == (0,)
+    # post-failure submissions go to survivors only, and round-robin
+    # cycles over the three live indices
+    late = [
+        svc.submit(AgentSpec(stages=[[InferenceSpec(100, 10)]],
+                             arrival=svc.now, name=f"late{i}"))
+        for i in range(6)
+    ]
+    picks = [fleet.assignment[h.agent_id] for h in late]
+    assert 0 not in picks
+    assert set(picks) == {1, 2, 3}
+    res = svc.drain()
+    assert all(h.agent_id in res.finish for h in late)
+
+
+def test_rebalance_default_routes_through_pick():
+    r = RoundRobinRouter(3)
+    specs = [(AgentSpec(stages=[[InferenceSpec(10, 5)]]), i, 1.0)
+             for i in range(5)]
+    assert r.rebalance(specs) == [0, 1, 2, 0, 1]
+
+
+# ------------------------------------------------- closed-loop failover
+
+
+def test_closed_loop_failover_preserves_turn_exactness():
+    """A crash mid-session must not double-fire stage callbacks: completed
+    stages are never replayed, the in-progress stage's callback never
+    fired pre-crash, so every logical stage triggers its callback exactly
+    once and sessions produce the same number of turns as fault-free."""
+
+    def make_specs():
+        counts = {}
+
+        def session(aid):
+            def cb(outcome):
+                counts[aid] = counts.get(aid, 0) + 1
+                if counts[aid] < 3:
+                    return [InferenceSpec(200, 40)]
+                return None
+
+            return cb
+
+        return [
+            AgentSpec(
+                stages=[[InferenceSpec(300, 60)]],
+                arrival=0.3 * i,
+                predicted_cost=3000.0,
+                true_cost=3000.0,
+                next_stage=session(i),
+                name=f"cl{i}",
+            )
+            for i in range(8)
+        ], counts
+
+    specs0, counts0 = make_specs()
+    svc0 = _fleet()
+    [svc0.submit(s) for s in specs0]
+    base = svc0.drain()
+    assert all(c == 3 for c in counts0.values())
+
+    specs, counts = make_specs()
+    plan = FaultPlan().crash(1, 2.5)
+    svc = _fleet(plan, watchdog=0.5)
+    handles = [svc.submit(s) for s in specs]
+    res = svc.drain()
+    assert set(res.finish) == set(base.finish)
+    assert res.metrics["replica_failures"] == 1
+    assert counts == counts0, "failover changed callback cadence"
+    for h in handles:
+        assert_conformant_stream(h, expect_replica=True, allow_requeue=True)
+
+
+# -------------------------------------------------------- engine fleet
+
+
+def test_engine_fleet_crash_failover(tiny_model):
+    model, params = tiny_model
+    svc = AgentService.engine(
+        model, params, "justitia", replicas=2, router="round_robin",
+        pool_tokens=256, block_size=16, max_batch=2, cache_len=64,
+        token_scale=1, time_scale=1.0,
+        fault_plan=FaultPlan().crash(0, 6.0),
+        watchdog_timeout=2.0, watchdog_retries=1,
+    )
+    raw = [
+        AgentSpec(stages=[[InferenceSpec(16, 30)], [InferenceSpec(12, 20)]],
+                  arrival=float(i))
+        for i in range(4)
+    ]
+    handles = [svc.submit(s) for s in raw]
+    res = svc.drain()
+    assert set(res.finish) == {h.agent_id for h in handles}
+    assert res.metrics["replica_failures"] == 1
+    assert res.metrics["failed_replicas"] == [0]
+    assert res.metrics["agents_requeued"] >= 1
+    for h in handles:
+        assert_conformant_stream(
+            h, expect_replica=True, allow_requeue=True
+        )
+
+
+# ---------------------------------------------------- degraded fairness
+
+
+def test_degraded_delay_bound_excludes_dead_capacity():
+    plan = FaultPlan().crash(3, 2.0)
+    svc = _fleet(plan, watchdog=0.5)
+    [svc.submit(s) for s in _specs(10)]
+    svc.drain()
+    fleet: ReplicatedBackend = svc.backend
+    full = GlobalVirtualClock(fleet.virtual_capacities).delay_bound(
+        3000.0, 3000.0
+    )
+    degraded = fleet.delay_bound(3000.0, 3000.0)
+    # homogeneous fleet: per-replica bound unchanged by losing a replica
+    assert degraded == pytest.approx(full)
+    # but it is genuinely computed over the survivors
+    assert fleet.global_clock.live_indices == (0, 1, 2)
+
+
+def test_fault_kwargs_require_fleet():
+    with pytest.raises(ValueError, match="replicas"):
+        AgentService.sim(fault_plan=FaultPlan().crash(0, 1.0))
+
+
+def test_fleet_without_plan_unchanged():
+    """fault_plan=None keeps the original plain lockstep drive —
+    bit-identical results with and without the fault machinery armed."""
+    a = AgentService.sim(replicas=3, total_kv=900.0)
+    [a.submit(s) for s in _specs(9)]
+    ra = a.drain()
+    b = AgentService.sim(replicas=3, total_kv=900.0, fault_plan=None,
+                         watchdog_timeout=None)
+    [b.submit(s) for s in _specs(9)]
+    rb = b.drain()
+    assert ra.finish == rb.finish
+    assert ra.jct == rb.jct
+    assert ra.event_counts == rb.event_counts

@@ -162,6 +162,7 @@ def test_main_writes_out_and_discovers_defaults(bench_pair, tmp_path,
         "BENCH_engine.json", "BENCH_engine_quick.json",
         "BENCH_cache.json", "BENCH_cache_quick.json",
         "BENCH_slo.json", "BENCH_slo_quick.json",
+        "BENCH_faults.json", "BENCH_faults_quick.json",
     )
 
 
@@ -204,6 +205,62 @@ CACHE_DATA = {
         {"bound_pools": 1.0, "hit_rate": 0.754, "jct_max": 651.0},
     ],
 }
+
+
+FAULTS_DATA = {
+    "benchmark": "faults_perf",
+    "quick": True,
+    "config": {
+        "replicas": 4, "agents": 16, "watchdog_timeout": 0.5,
+        "watermark": [0.5, 0.75],
+    },
+    "gates": {
+        "fault_off_bit_identical": True,
+        "chaos_deterministic": True,
+        "watermark_cuts_swaps": True,
+    },
+    "crash_cells": [
+        {
+            "seed": 7, "crashed_replica": 0, "crash_time": 4.33,
+            "agents_requeued": 4, "max_jct_ratio": 1.51,
+            "makespan_ratio": 1.38,
+        },
+    ],
+    "watermark_cells": [
+        {
+            "seed": 7, "swaps_off": 5, "swaps_wm": 0, "deferrals": 19,
+            "jct_mean_ratio": 1.48,
+        },
+    ],
+    "engine_crash": {
+        "agents": 4, "agents_requeued": 2, "makespan": 103.0,
+    },
+}
+
+
+def test_render_faults_golden_rows(tmp_path):
+    path = tmp_path / "BENCH_faults_quick.json"
+    path.write_text(json.dumps(FAULTS_DATA))
+    md = render([path])
+    lines = md.splitlines()
+    assert ("## BENCH_faults_quick.json — fault-tolerant fleet serving "
+            "(`benchmarks/perf_faults.py`)") in lines
+    assert any(
+        "Tier: **quick (CI)**" in ln and "4 replicas, 16 agents" in ln
+        and "fault-off bit-identical: **True**" in ln
+        and "chaos deterministic: **True**" in ln
+        for ln in lines
+    )
+    assert "| 7 | r0 | 4.33 | 4 | 1.51 | 1.38 |" in lines
+    assert any(
+        "Watermark admission [0.5, 0.75]" in ln
+        and "swaps 5 -> 0 (19 deferrals, jct ratio 1.48)" in ln
+        for ln in lines
+    )
+    assert any(
+        "Engine fleet crash: 2 requeued, 4 completed on the survivor" in ln
+        for ln in lines
+    )
 
 
 def test_render_cache_golden_rows(tmp_path):

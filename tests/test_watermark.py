@@ -1,0 +1,288 @@
+"""Watermark admission control (PR 8, satellite S4).
+
+Property-fuzzes the hysteresis admission gate shared by the sim, the
+frozen reference core, and the engine:
+
+  * with ``admission_watermark=(low, high)`` a busy pool never admits a
+    NEW request above the high watermark (``wm_admit_peak <= high * M``
+    whenever the idle-pool bypass never fired), yet every agent still
+    completes — deferred requests are eventually admitted once occupancy
+    drains below the low watermark;
+  * deferral delays but never reorders admission: under a static
+    scheduler the admitted-rid sequence is identical with and without
+    the gate;
+  * the gate is LOCKSTEP with the frozen reference core — same results,
+    same deferral counts, watermark on or off (the frozen-oracle
+    invariant extended to its third flag, after token_events and
+    prefix_cache);
+  * on a contended pool the gate trades queueing delay for swap thrash:
+    strictly fewer swaps at equal completions;
+  * each deferred rid emits AdmissionDeferred exactly once, before its
+    admit, and the serving layer surfaces it on the agent handle;
+  * the engine's block-granular gate defers and still completes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from test_event_conformance import assert_conformant_stream
+
+from repro.api import AdmissionDeferred, AgentService, AgentSpec
+from repro.configs import get_config
+from repro.core import InferenceSpec, agent_cost, make_scheduler
+from repro.models import Model
+from repro.sim import ClusterSim, SimAgent
+from repro.sim.reference import ReferenceClusterSim
+
+DECODE_RATE = 30.0
+
+agents_strategy = st.lists(
+    st.tuples(
+        st.floats(min_value=0.0, max_value=30.0),        # arrival
+        st.lists(                                        # one stage
+            st.tuples(
+                st.integers(min_value=50, max_value=600),   # prefill
+                st.integers(min_value=8, max_value=120),    # decode
+            ),
+            min_size=1,
+            max_size=2,
+        ),
+    ),
+    min_size=2,
+    max_size=10,
+)
+
+watermark_strategy = st.tuples(
+    st.floats(min_value=0.3, max_value=0.6),             # low
+    st.floats(min_value=0.6, max_value=0.95),            # high
+)
+
+
+def _sim_agents(raw):
+    agents = []
+    for i, (arr, stage) in enumerate(raw):
+        stages = [[InferenceSpec(p, d) for p, d in stage]]
+        cost = agent_cost(stages[0])
+        agents.append(
+            SimAgent(agent_id=i, arrival=float(arr), stages=stages,
+                     predicted_cost=cost, true_cost=cost)
+        )
+    return agents
+
+
+class _AdmitLog:
+    """Listener capturing admit order and deferral emissions."""
+
+    def __init__(self):
+        self.admits = []        # rid admission order
+        self.deferred = []      # (agent_id, rid) deferral emissions
+
+    def on_admit(self, agent_id, rid, t):
+        self.admits.append(rid)
+
+    def on_admission_deferred(self, agent_id, rid, t):
+        self.deferred.append((agent_id, rid))
+
+
+def test_watermark_validation():
+    sched = make_scheduler("justitia", 1000.0, service_rate=DECODE_RATE)
+    for bad in ((0.0, 0.5), (0.9, 0.5), (0.5, 1.5), (-0.1, 0.5)):
+        with pytest.raises(ValueError, match="admission_watermark"):
+            ClusterSim(sched, 1000.0, admission_watermark=bad)
+        with pytest.raises(ValueError, match="admission_watermark"):
+            ReferenceClusterSim(sched, 1000.0, admission_watermark=bad)
+
+
+@given(agents_strategy, watermark_strategy,
+       st.sampled_from(["justitia", "vtc", "vllm-fcfs"]))
+@settings(max_examples=25, deadline=None)
+def test_gate_bounds_peak_and_always_completes(raw, wm, sched):
+    """Never admit above high while busy (absent bypass); always drain."""
+    low, high = wm
+    m = 1000.0
+    res = ClusterSim(
+        make_scheduler(sched, m, service_rate=DECODE_RATE), m,
+        admission_watermark=(low, high),
+    ).run(_sim_agents(raw))
+    assert set(res.finish) == set(range(len(raw))), "gate starved an agent"
+    if res.wm_bypass_admits == 0:
+        assert res.wm_admit_peak <= high * m + 1e-9
+    assert res.admission_deferrals >= 0
+
+
+@given(agents_strategy, watermark_strategy,
+       st.sampled_from(["justitia", "vtc", "srjf", "vllm-fcfs"]))
+@settings(max_examples=25, deadline=None)
+def test_watermark_lockstep_with_frozen_reference(raw, wm, sched):
+    """ClusterSim and the frozen reference agree bit-for-bit, gate ON."""
+    m = 1200.0
+    la, lb = _AdmitLog(), _AdmitLog()
+    new = ClusterSim(
+        make_scheduler(sched, m, service_rate=DECODE_RATE), m,
+        listener=la, admission_watermark=wm,
+    ).run(_sim_agents(raw))
+    ref = ReferenceClusterSim(
+        make_scheduler(sched, m, service_rate=DECODE_RATE), m,
+        listener=lb, admission_watermark=wm,
+    ).run(_sim_agents(raw))
+    assert new.finish == ref.finish
+    assert new.jct == ref.jct
+    assert new.swaps == ref.swaps
+    assert new.admission_deferrals == ref.admission_deferrals
+    assert new.wm_admit_peak == ref.wm_admit_peak
+    assert new.wm_bypass_admits == ref.wm_bypass_admits
+    assert la.admits == lb.admits
+    assert la.deferred == lb.deferred
+
+
+@given(agents_strategy, st.sampled_from(["justitia", "vllm-fcfs"]))
+@settings(max_examples=15, deadline=None)
+def test_watermark_off_bit_identical(raw, sched):
+    """admission_watermark=None leaves the admission pass untouched."""
+    m = 900.0
+    off = ClusterSim(
+        make_scheduler(sched, m, service_rate=DECODE_RATE), m,
+        admission_watermark=None,
+    ).run(_sim_agents(raw))
+    ref = ReferenceClusterSim(
+        make_scheduler(sched, m, service_rate=DECODE_RATE), m,
+    ).run(_sim_agents(raw))
+    assert off.finish == ref.finish
+    assert off.jct == ref.jct
+    assert off.swaps == ref.swaps
+    assert off.admission_deferrals == 0
+    assert off.wm_admit_peak == 0.0
+
+
+@given(agents_strategy)
+@settings(max_examples=15, deadline=None)
+def test_gate_delays_but_never_reorders_admission(raw):
+    """Static FCFS: the admitted-rid sequence is identical with and
+    without the gate — deferral preserves scheduler order.  Pool is wide
+    enough that nothing swaps (re-admission order is timing-dependent),
+    but the high watermark sits well below it so deferrals still occur."""
+    m = 4000.0
+    runs = []
+    for wm in (None, (0.3, 0.45)):
+        log = _AdmitLog()
+        res = ClusterSim(
+            make_scheduler("vllm-fcfs", m, service_rate=DECODE_RATE), m,
+            listener=log, admission_watermark=wm,
+        ).run(_sim_agents(raw))
+        assert res.swaps == 0
+        runs.append((log, res))
+    (log_off, _), (log_wm, res_wm) = runs
+    assert log_wm.admits == log_off.admits
+    assert len(log_wm.deferred) == res_wm.admission_deferrals
+    # exactly-once emission per deferred rid
+    assert len(set(log_wm.deferred)) == len(log_wm.deferred)
+
+
+def test_idle_pool_bypass_admits_oversized():
+    """An agent bigger than the high watermark admits on an idle pool
+    (progress guarantee) and the violation is recorded."""
+    m = 1000.0
+    agents = [
+        SimAgent(agent_id=0, arrival=0.0,
+                 stages=[[InferenceSpec(900, 30)]],
+                 predicted_cost=1.0, true_cost=1.0)
+    ]
+    res = ClusterSim(
+        make_scheduler("justitia", m, service_rate=DECODE_RATE), m,
+        admission_watermark=(0.4, 0.6),
+    ).run(agents)
+    assert set(res.finish) == {0}
+    assert res.wm_bypass_admits >= 1
+    assert res.wm_admit_peak > 0.6 * m
+
+
+def _contended_specs(n=14, seed=3):
+    rng = np.random.default_rng(seed)
+    specs = []
+    for i in range(n):
+        pf = int(rng.integers(250, 500))
+        specs.append(
+            AgentSpec(
+                stages=[[InferenceSpec(pf, int(rng.integers(40, 90)))]],
+                arrival=float(rng.uniform(0.0, 2.0)),
+                name=f"c{i}",
+            )
+        )
+    return specs
+
+
+def test_watermark_reduces_swap_thrash_at_equal_completions():
+    """The headline trade: on a contended pool the gate strictly cuts
+    swaps while every agent still completes (the perf_faults.py
+    watermark cell asserts the same in-run oracle)."""
+    results = {}
+    for wm in (None, (0.5, 0.75)):
+        svc = AgentService.sim(total_kv=1000.0, admission_watermark=wm)
+        [svc.submit(s) for s in _contended_specs()]
+        results[wm] = svc.drain()
+    off, on = results[None], results[(0.5, 0.75)]
+    assert set(on.finish) == set(off.finish)
+    assert on.metrics["admission_deferrals"] > 0
+    assert on.swaps < off.swaps, (
+        f"watermark did not cut swaps: {on.swaps} vs {off.swaps}"
+    )
+
+
+def test_deferral_surfaces_on_handle_and_conformance():
+    """AdmissionDeferred lands on the agent handle before its admit and
+    the extended conformance grammar accepts (and checks) it."""
+    svc = AgentService.sim(total_kv=1000.0,
+                           admission_watermark=(0.5, 0.75))
+    handles = [svc.submit(s) for s in _contended_specs()]
+    res = svc.drain()
+    assert res.event_counts.get("AdmissionDeferred", 0) == (
+        res.metrics["admission_deferrals"]
+    )
+    deferred_handles = 0
+    for h in handles:
+        assert_conformant_stream(h, expect_tokens=False)
+        evs = [e for e in h.events if isinstance(e, AdmissionDeferred)]
+        if evs:
+            deferred_handles += 1
+            # exactly-once per rid
+            rids = [e.rid for e in evs]
+            assert len(set(rids)) == len(rids)
+    assert deferred_handles > 0
+
+
+def test_fleet_aggregates_deferrals():
+    svc = AgentService.sim(replicas=2, total_kv=1000.0,
+                           admission_watermark=(0.5, 0.75),
+                           router="round_robin")
+    [svc.submit(s) for s in _contended_specs(n=20)]
+    res = svc.drain()
+    assert set(res.finish) == set(range(20))
+    assert res.metrics["admission_deferrals"] > 0
+
+
+def test_engine_watermark_defers_and_completes():
+    import jax
+
+    cfg = get_config("granite-3-2b").reduced(vocab=256)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    svc = AgentService.engine(
+        model, params, "justitia",
+        pool_tokens=192, block_size=16, max_batch=3, cache_len=64,
+        token_scale=1, time_scale=1.0,
+        admission_watermark=(0.3, 0.5),
+    )
+    handles = [
+        svc.submit(AgentSpec(stages=[[InferenceSpec(40, 12)]],
+                             arrival=float(i) * 0.5))
+        for i in range(5)
+    ]
+    res = svc.drain()
+    assert set(res.finish) == {h.agent_id for h in handles}
+    assert res.metrics["admission_deferrals"] > 0
+    assert res.event_counts.get("AdmissionDeferred", 0) == (
+        res.metrics["admission_deferrals"]
+    )
+    for h in handles:
+        assert_conformant_stream(h)
