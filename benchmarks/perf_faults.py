@@ -12,6 +12,10 @@ measured claims, each with its in-band gate:
     the degradation price: max-JCT and makespan ratios vs the fault-free
     fleet on the identical workload.  The ratio is gated
     (``MAX_DELAY_RATIO``) — failover must degrade, not collapse.
+  * **transient chaos (PR 9)** — a seeded stall plus slowdown, both
+    shorter than the watchdog's death budget, must be serving-inert:
+    bit-identical finish/jct/swaps vs the fault-free fleet, zero
+    failovers (a suspect-then-recovery notice is the only trace).
   * **watermark admission** — on a contended pool,
     ``admission_watermark=(low, high)`` must cut swaps STRICTLY below
     the ungated baseline at equal completions (the gate trades queueing
@@ -242,6 +246,69 @@ def check_crash_determinism(seed: int) -> dict:
             "compared": ["finish", "jct", "event_counts"]}
 
 
+def stall_cell(seed: int) -> dict:
+    """Transient chaos under the watchdog budget must be serving-inert.
+
+    A seeded stall plus a seeded slowdown, both short enough that the
+    armed watchdog rides them out (suspect at most — never a death):
+    the drained run must be bit-identical to the fault-free fleet on the
+    identical workload (finish, jct, swaps), with zero replica failures
+    and zero failovers.  Event counts must also match except for the
+    ``ReplicaRecovered`` notices a suspect-then-recovery legitimately
+    adds.  PR 9 quick-tier cell: hiccups below the failover threshold
+    change NOTHING about serving outcomes.
+    """
+    from repro.api import FaultPlan
+
+    base, _ = run_sim_fleet(seed)
+    # watchdog budget (timeout 0.5, retries 3, backoff 2.0): a suspect
+    # replica survives ~3.5s of zero progress before being declared
+    # dead — keep every transient well inside that
+    rng = np.random.default_rng(seed + 0x5A11)
+    plan = FaultPlan()
+    plan.stall(0, float(rng.uniform(1.5, 3.0)),
+               float(rng.uniform(0.6, 1.4)))
+    plan.slowdown(1, float(rng.uniform(1.5, 3.0)),
+                  float(rng.uniform(1.0, 2.5)),
+                  factor=float(rng.uniform(0.2, 0.5)))
+    res, wall = run_sim_fleet(seed, plan, WATCHDOG)
+    if res.finish != base.finish or res.jct != base.jct \
+            or res.swaps != base.swaps:
+        raise AssertionError(
+            f"stall cell (seed {seed}): under-budget transients changed "
+            f"serving outcomes — stall/slowdown must be inert below the "
+            f"failover threshold"
+        )
+    strip = lambda ec: {k: v for k, v in ec.items()
+                        if k != "ReplicaRecovered"}
+    if strip(res.event_counts) != strip(base.event_counts):
+        raise AssertionError(
+            f"stall cell (seed {seed}): event stream diverged beyond "
+            f"suspect-recovery notices"
+        )
+    if res.metrics["replica_failures"] != 0 \
+            or res.metrics["agents_requeued"] != 0:
+        raise AssertionError(
+            f"stall cell (seed {seed}): watchdog escalated an "
+            f"under-budget transient to failover "
+            f"({res.metrics['replica_failures']} failures, "
+            f"{res.metrics['agents_requeued']} requeued)"
+        )
+    return {
+        "seed": seed,
+        "stall": {"replica": plan.faults[0].replica,
+                  "start": round(plan.faults[0].start, 3),
+                  "duration": round(plan.faults[0].duration, 3)},
+        "slowdown": {"replica": plan.faults[1].replica,
+                     "start": round(plan.faults[1].start, 3),
+                     "duration": round(plan.faults[1].duration, 3),
+                     "factor": round(plan.faults[1].factor, 3)},
+        "recoveries": res.event_counts.get("ReplicaRecovered", 0),
+        "bit_identical": True,
+        "wall_s": round(wall, 3),
+    }
+
+
 # ------------------------------------------------------- watermark cell
 
 
@@ -376,6 +443,17 @@ def main(argv=None) -> dict:
             f"makespan ratio {cell['makespan_ratio']:.2f}"
         )
 
+    stall_cells = []
+    for seed in seeds:
+        cell = stall_cell(seed)
+        stall_cells.append(cell)
+        print(
+            f"stall seed {seed:>3}: {cell['stall']['duration']:.1f}s "
+            f"stall + {cell['slowdown']['duration']:.1f}s slowdown "
+            f"under budget, {cell['recoveries']} recoveries, "
+            f"serving bit-identical"
+        )
+
     wm_cells = []
     for seed in seeds:
         cell = watermark_cell(seed)
@@ -411,6 +489,7 @@ def main(argv=None) -> dict:
         "oracle_fault_off": {"sim": sim_oracle, "engine": engine_oracle},
         "determinism": determinism,
         "crash_cells": crash_cells,
+        "stall_cells": stall_cells,
         "watermark_cells": wm_cells,
         "engine_crash": eng_cell,
         "gates": {
@@ -419,6 +498,7 @@ def main(argv=None) -> dict:
             "all_agents_complete": True,
             "failover_exercised": True,
             "max_jct_ratio_bound": MAX_DELAY_RATIO,
+            "stalls_under_budget_inert": True,
             "watermark_cuts_swaps": True,
         },
     }

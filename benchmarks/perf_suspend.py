@@ -1,0 +1,460 @@
+"""Suspension benchmark: think-time KV retention and graceful degradation.
+
+    PYTHONPATH=src python -m benchmarks.perf_suspend [--quick] [--out PATH]
+
+The PR 9 tracked benchmark for suspended agents: closed-loop sessions
+whose tool calls take seconds of wall clock between turns.  A suspended
+agent holds no decode slot; its finished stage's KV falls under the
+backend's ``suspend_retention`` policy — ``hold`` (pinned on device),
+``spill`` (host staging copy), or ``drop`` (release and re-prefill,
+cheap while the prefix survives in the radix index).  Measured claims,
+each with its in-band gate:
+
+  * **retention comparison** — a contended think-time fleet (the
+    ``tooluse`` closed-loop family on a 2-replica sim fleet with the
+    prefix cache on) is served under all three retentions.  Every
+    retention must complete every agent with zero stalls
+    (``FleetStalledError``); ``drop`` must evict STRICTLY less KV than
+    ``hold`` — evictions = swap-outs of running sequences PLUS
+    hold->spill escalations of suspended KV, which pay the identical
+    restore surcharge (held KV squeezes the pool; the
+    victimize-suspended-first escalation path converts the resulting
+    would-be swaps into spills, so raw swap counts alone understate the
+    thrash pinning causes); and the max-JCT spread between
+    retentions is bounded (``MAX_RETENTION_JCT_RATIO``) — retention is a
+    memory/latency trade, not a cliff.
+  * **graceful escalation** — under ``hold`` the fleet must record
+    ``suspend_spills`` > 0: admission pressure escalates held KV
+    (hold -> spill -> drop) instead of wedging the pool.
+  * **engine retention** — the same think-time session shape on the REAL
+    engine (hold vs drop, prefix cache on, tight pool): all agents
+    complete, suspensions observed, and hold's pinned KV is escalated
+    rather than stalling the engine.
+
+Gates run IN-BAND before anything is recorded (the run aborts on any
+failure, same contract as benchmarks/perf_engine.py):
+
+  * **suspension-off oracle** — with no resume delays the optimized
+    cores must stay bit-identical to BOTH frozen references in the same
+    run, for every retention setting: ``ClusterSim`` vs
+    ``ReferenceClusterSim`` (finish/jct/swap/event counts) and
+    ``ServeEngine`` vs ``ReferenceServeEngine`` (completions, clock,
+    token/prefill/swap/decode-step counts) — the PR 9 machinery is
+    strictly delay-gated and every held-occupancy adjustment is
+    bitwise-inert when nothing suspends;
+  * **determinism** — the seeded think-time fleet run is repeated and
+    must reproduce bit-for-bit (finish + jct + suspension counters).
+
+Results land in ``BENCH_suspend.json`` at the repo root (CI uploads the
+``--quick`` variant per commit; the committed file is the full-tier
+record); ``benchmarks/trend.py`` renders the trajectory alongside the
+other BENCH files.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.perf_engine import (
+    ORACLE_KEYS,
+    _snapshot,
+    bench_model,
+    synth_agents,
+)
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_OUT = REPO_ROOT / "BENCH_suspend.json"
+
+RETENTIONS = ("hold", "spill", "drop")
+REPLICAS = 2
+N_AGENTS = 12
+TOTAL_KV = 1500.0         # per replica — contended under held think-time KV
+WINDOW_S = 6.0
+#: retention is a memory/latency trade, not a cliff: the worst max-JCT
+#: across retentions may exceed the best by at most this factor
+MAX_RETENTION_JCT_RATIO = 3.0
+
+
+# --------------------------------------------------------------- oracle
+
+
+def check_suspend_off_sim_oracle() -> dict:
+    """No resume delays: ClusterSim bit-identical to the frozen reference
+    core under EVERY retention setting (the PR 9 sim machinery is
+    strictly delay-gated)."""
+    from repro.core import InferenceSpec, agent_cost, make_scheduler
+    from repro.sim import ClusterSim, SimAgent
+    from repro.sim.reference import ReferenceClusterSim
+
+    def agents():
+        # SimAgent stage state is mutated by a run: rebuild per core
+        rng = np.random.default_rng(11)
+        out = []
+        for i in range(40):
+            stages = [
+                [InferenceSpec(int(rng.integers(50, 400)),
+                               int(rng.integers(10, 120)))]
+                for _ in range(int(rng.integers(1, 3)))
+            ]
+            cost = agent_cost([s for st in stages for s in st])
+            out.append(SimAgent(agent_id=i,
+                                arrival=float(rng.uniform(0, 20)),
+                                stages=stages, predicted_cost=cost,
+                                true_cost=cost))
+        return out
+
+    checked = []
+    for sched in ("justitia", "vtc", "vllm-fcfs"):
+        m = 1500.0
+        ref = ReferenceClusterSim(
+            make_scheduler(sched, m, service_rate=30.0), m,
+        ).run(agents())
+        for retention in RETENTIONS:
+            new = ClusterSim(
+                make_scheduler(sched, m, service_rate=30.0), m,
+                suspend_retention=retention,
+            ).run(agents())
+            if (new.finish != ref.finish or new.jct != ref.jct
+                    or new.swaps != ref.swaps or new.events != ref.events
+                    or new.suspensions != 0):
+                raise AssertionError(
+                    f"suspend-off sim oracle mismatch ({sched}, "
+                    f"{retention}): optimized vs frozen reference diverged"
+                )
+        checked.append(sched)
+    return {"schedulers": checked, "retentions": list(RETENTIONS),
+            "compared": ["finish", "jct", "swaps", "events"],
+            "match": True}
+
+
+def check_suspend_off_engine_oracle(model, params) -> dict:
+    """No resume delays: ServeEngine bit-identical to the frozen
+    reference engine under every retention setting."""
+    from repro.core import make_scheduler
+    from repro.engine import ReferenceServeEngine, ServeEngine
+
+    checked = []
+    for sched in ("justitia", "vtc"):
+        ref = ReferenceServeEngine(
+            model, params, make_scheduler(sched, 256.0),
+            pool_tokens=256, max_batch=4, cache_len=96,
+        )
+        for a in synth_agents(3, 10):
+            ref.submit_agent(a)
+        ref.run_until_idle(max_iters=5_000_000)
+        base = _snapshot(ref)
+        for retention in RETENTIONS:
+            eng = ServeEngine(
+                model, params, make_scheduler(sched, 256.0),
+                pool_tokens=256, max_batch=4, cache_len=96,
+                suspend_retention=retention,
+            )
+            for a in synth_agents(3, 10):
+                eng.submit_agent(a)
+            eng.run_until_idle(max_iters=5_000_000)
+            eng.alloc.check_invariants()
+            snap = _snapshot(eng)
+            if snap != base or eng.metrics["suspensions"] != 0:
+                diff = {k: (snap[k], base[k])
+                        for k in snap if snap[k] != base[k]}
+                raise AssertionError(
+                    f"suspend-off engine oracle mismatch ({sched}, "
+                    f"{retention}): {diff}"
+                )
+        checked.append(sched)
+    return {"schedulers": checked, "retentions": list(RETENTIONS),
+            "compared": ["completions", "now", *ORACLE_KEYS],
+            "match": True}
+
+
+# ------------------------------------------------- think-time sim fleet
+
+
+def run_think_fleet(seed: int, retention: str):
+    """One contended think-time fleet run (single-use specs: rebuilt
+    per call from the same seed, so every retention serves the
+    bit-identical workload)."""
+    from repro.api import AgentService, FleetStalledError, specs_from_closed_loop
+
+    rng = np.random.default_rng(seed)
+    specs = specs_from_closed_loop(
+        rng, N_AGENTS, WINDOW_S, classes=("tooluse",)
+    )
+    svc = AgentService.sim(
+        "justitia", replicas=REPLICAS, total_kv=TOTAL_KV,
+        record_events=False, prefix_cache=True,
+        suspend_retention=retention,
+    )
+    for s in specs:
+        svc.submit(s)
+    t0 = time.perf_counter()
+    try:
+        res = svc.drain()
+    except FleetStalledError as exc:      # the gate this cell exists for
+        raise AssertionError(
+            f"think fleet (seed {seed}, {retention}): stalled — {exc}"
+        ) from exc
+    return res, time.perf_counter() - t0
+
+
+def retention_cell(seed: int) -> dict:
+    """All three retentions on the identical contended workload."""
+    rows, walls = {}, {}
+    for retention in RETENTIONS:
+        res, wall = run_think_fleet(seed, retention)
+        rows[retention], walls[retention] = res, wall
+        if len(res.finish) != N_AGENTS:
+            raise AssertionError(
+                f"retention cell (seed {seed}, {retention}): "
+                f"{N_AGENTS - len(res.finish)} agents lost"
+            )
+        if res.metrics["suspensions"] < 1 or (
+            res.metrics["suspensions"] != res.metrics["resumes"]
+        ):
+            raise AssertionError(
+                f"retention cell (seed {seed}, {retention}): suspensions "
+                f"not exercised or unbalanced ({res.metrics['suspensions']}"
+                f" vs {res.metrics['resumes']} resumes)"
+            )
+    sets = {r: set(res.finish) for r, res in rows.items()}
+    if len({frozenset(s) for s in sets.values()}) != 1:
+        raise AssertionError(
+            f"retention cell (seed {seed}): completion sets diverged "
+            f"across retentions"
+        )
+    hold, drop = rows["hold"], rows["drop"]
+    evictions = {
+        r: res.swaps + res.metrics["suspend_spills"]
+        for r, res in rows.items()
+    }
+    if not evictions["drop"] < evictions["hold"]:
+        raise AssertionError(
+            f"retention cell (seed {seed}): drop must evict strictly "
+            f"less KV than hold ({evictions['drop']} vs "
+            f"{evictions['hold']} swap-outs + escalated spills) — held "
+            f"think-time KV is supposed to be the pressure source here"
+        )
+    if hold.metrics["suspend_spills"] < 1:
+        raise AssertionError(
+            f"retention cell (seed {seed}): hold retention never "
+            f"escalated — the pool is not contended enough to measure "
+            f"graceful degradation"
+        )
+    max_jcts = {r: max(res.jct.values()) for r, res in rows.items()}
+    ratio = max(max_jcts.values()) / max(min(max_jcts.values()), 1e-9)
+    if ratio > MAX_RETENTION_JCT_RATIO:
+        raise AssertionError(
+            f"retention cell (seed {seed}): max-JCT spread {ratio:.2f} "
+            f"exceeds bound {MAX_RETENTION_JCT_RATIO}"
+        )
+    return {
+        "seed": seed,
+        "per_retention": {
+            r: {
+                "swaps": res.swaps,
+                "suspensions": res.metrics["suspensions"],
+                "resumes": res.metrics["resumes"],
+                "suspend_spills": res.metrics["suspend_spills"],
+                "held_peak": round(res.metrics["held_peak"], 1),
+                "jct_mean": round(
+                    float(np.mean(list(res.jct.values()))), 3
+                ),
+                "max_jct": round(max_jcts[r], 3),
+                "makespan": round(res.makespan, 3),
+                "wall_s": round(walls[r], 3),
+            }
+            for r, res in rows.items()
+        },
+        "evictions_hold": evictions["hold"],
+        "evictions_drop": evictions["drop"],
+        "max_jct_spread": round(ratio, 3),
+    }
+
+
+def check_think_determinism(seed: int) -> dict:
+    """Same seed + same retention twice => bit-identical think-time run."""
+    runs = [run_think_fleet(seed, "hold")[0] for _ in range(2)]
+    a, b = runs
+    keys = ("suspensions", "resumes", "suspend_spills", "held_peak")
+    if a.finish != b.finish or a.jct != b.jct or any(
+        a.metrics[k] != b.metrics[k] for k in keys
+    ):
+        raise AssertionError(
+            f"think determinism (seed {seed}): two identical think-time "
+            f"fleet runs diverged"
+        )
+    return {"seed": seed, "match": True,
+            "compared": ["finish", "jct", *keys]}
+
+
+# ------------------------------------------------- engine retention cell
+
+
+class _ThinkSession:
+    """Deterministic closed-loop session: ``turns`` follow-up stages,
+    each preceded by ``think`` seconds of tool time (keyed only on the
+    session's own turn counter — no RNG, so every retention and every
+    run sees the identical demand stream)."""
+
+    def __init__(self, turns: int = 3, think: float = 3.0):
+        self.turn = 0
+        self.turns = turns
+        self.think = think
+        self.last_resume_delay = None
+
+    def __call__(self, outcome):
+        from repro.core import InferenceSpec
+
+        self.turn += 1
+        if self.turn > self.turns:
+            return None
+        self.last_resume_delay = self.think
+        return [InferenceSpec(40, 12)]
+
+
+def engine_retention_cell(model, params) -> dict:
+    """Hold vs drop on the REAL engine: tight pool, prefix cache on."""
+    from repro.api import AgentService, AgentSpec
+    from repro.core import InferenceSpec
+
+    rows = {}
+    for retention in ("hold", "drop"):
+        svc = AgentService.engine(
+            model, params, "justitia",
+            pool_tokens=96, max_batch=2, cache_len=96,
+            token_scale=1, time_scale=1.0, record_events=False,
+            prefix_cache=True, suspend_retention=retention,
+        )
+        for i in range(6):
+            svc.submit(AgentSpec(
+                stages=[[InferenceSpec(40, 12)]], arrival=0.2 * i,
+                next_stage=_ThinkSession(),
+                predicted_cost=200.0, true_cost=200.0,
+            ))
+        t0 = time.perf_counter()
+        res = svc.drain()
+        wall = time.perf_counter() - t0
+        if len(res.finish) != 6:
+            raise AssertionError(
+                f"engine retention ({retention}): agents lost"
+            )
+        if res.metrics["suspensions"] < 1 or (
+            res.metrics["suspensions"] != res.metrics["resumes"]
+        ):
+            raise AssertionError(
+                f"engine retention ({retention}): suspensions not "
+                f"exercised or unbalanced"
+            )
+        rows[retention] = (res, wall)
+    hold = rows["hold"][0]
+    if hold.metrics["suspend_spills"] < 1:
+        raise AssertionError(
+            "engine retention: hold never escalated its pinned KV — the "
+            "pool is not tight enough to measure graceful degradation"
+        )
+    return {
+        "agents": 6,
+        "per_retention": {
+            r: {
+                "swaps": res.swaps,
+                "suspensions": res.metrics["suspensions"],
+                "resumes": res.metrics["resumes"],
+                "suspend_spills": res.metrics["suspend_spills"],
+                "makespan": round(res.makespan, 2),
+                "wall_s": round(wall, 2),
+            }
+            for r, (res, wall) in rows.items()
+        },
+    }
+
+
+# ----------------------------------------------------------------- main
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="one seed (the CI perf stage)")
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    args = ap.parse_args(argv)
+
+    seeds = (7,) if args.quick else (7, 11, 13)
+    model, params = bench_model()
+
+    print("== suspension-off oracle: optimized cores vs frozen "
+          "references ==")
+    sim_oracle = check_suspend_off_sim_oracle()
+    print(f"   sim bit-identical for {sim_oracle['schedulers']} x "
+          f"{sim_oracle['retentions']}")
+    engine_oracle = check_suspend_off_engine_oracle(model, params)
+    print(f"   engine bit-identical for {engine_oracle['schedulers']} x "
+          f"{engine_oracle['retentions']}")
+
+    determinism = check_think_determinism(seeds[0])
+    print(f"   seeded think-time fleet reproduces bit-for-bit "
+          f"(seed {determinism['seed']})")
+
+    cells = []
+    for seed in seeds:
+        cell = retention_cell(seed)
+        cells.append(cell)
+        per = cell["per_retention"]
+        print(
+            f"retention seed {seed:>3}: evictions "
+            f"hold={cell['evictions_hold']} "
+            f"drop={cell['evictions_drop']} (swaps "
+            + " ".join(f"{r}={per[r]['swaps']}" for r in RETENTIONS)
+            + f"), max-jct spread {cell['max_jct_spread']:.2f}"
+        )
+
+    eng_cell = engine_retention_cell(model, params)
+    per = eng_cell["per_retention"]
+    print(
+        f"engine retention: hold swaps={per['hold']['swaps']} "
+        f"escalations={per['hold']['suspend_spills']}, "
+        f"drop swaps={per['drop']['swaps']} "
+        f"({per['hold']['wall_s'] + per['drop']['wall_s']:.1f}s wall)"
+    )
+
+    out = {
+        "benchmark": "suspend_perf",
+        "quick": bool(args.quick),
+        "config": {
+            "replicas": REPLICAS,
+            "agents": N_AGENTS,
+            "total_kv_per_replica": TOTAL_KV,
+            "window_s": WINDOW_S,
+            "family": "tooluse",
+            "retentions": list(RETENTIONS),
+            "max_retention_jct_ratio": MAX_RETENTION_JCT_RATIO,
+            "seeds": list(seeds),
+            "engine_model":
+                "granite-3-2b reduced(d_model=64, L=2, vocab=256)",
+        },
+        "oracle_suspend_off": {"sim": sim_oracle, "engine": engine_oracle},
+        "determinism": determinism,
+        "retention_cells": cells,
+        "engine_retention": eng_cell,
+        "gates": {
+            "suspend_off_bit_identical": True,
+            "think_fleet_deterministic": True,
+            "all_agents_complete": True,
+            "zero_fleet_stalls": True,
+            "drop_evictions_lt_hold": True,
+            "hold_escalates_under_pressure": True,
+            "max_retention_jct_ratio": MAX_RETENTION_JCT_RATIO,
+        },
+    }
+    path = Path(args.out)
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {path}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -35,6 +35,8 @@ DEFAULT_CANDIDATES = (
     "BENCH_slo_quick.json",
     "BENCH_faults.json",
     "BENCH_faults_quick.json",
+    "BENCH_suspend.json",
+    "BENCH_suspend_quick.json",
 )
 
 
@@ -263,6 +265,16 @@ def render_faults(name: str, data: dict) -> list[str]:
             f"| {cell['max_jct_ratio']:.2f} "
             f"| {cell['makespan_ratio']:.2f} |"
         )
+    stalls = data.get("stall_cells", [])
+    if stalls:
+        parts = [
+            f"seed {row['seed']}: {row['stall']['duration']:.1f}s stall "
+            f"+ {row['slowdown']['duration']:.1f}s slowdown, "
+            f"{row['recoveries']} recoveries"
+            for row in stalls
+        ]
+        lines += ["", "Under-budget transients (serving bit-identical) — "
+                  + "; ".join(parts)]
     wm = data.get("watermark_cells", [])
     if wm:
         parts = [
@@ -285,12 +297,67 @@ def render_faults(name: str, data: dict) -> list[str]:
     return lines
 
 
+def render_suspend(name: str, data: dict) -> list[str]:
+    lines = [f"## {name} — think-time suspension + KV retention "
+             "(`benchmarks/perf_suspend.py`)", ""]
+    tier = "quick (CI)" if data.get("quick") else "full"
+    gates = data.get("gates", {})
+    cfg = data.get("config", {})
+    lines.append(
+        f"Tier: **{tier}** · {cfg.get('replicas', '?')} replicas, "
+        f"{cfg.get('agents', '?')} {cfg.get('family', '?')} sessions · "
+        f"suspend-off bit-identical: "
+        f"**{gates.get('suspend_off_bit_identical', '?')}** · "
+        f"deterministic: "
+        f"**{gates.get('think_fleet_deterministic', '?')}** · drop "
+        f"evicts < hold: **{gates.get('drop_evictions_lt_hold', '?')}** "
+        f"· hold escalates under pressure: "
+        f"**{gates.get('hold_escalates_under_pressure', '?')}**"
+    )
+    lines.append("")
+    lines.append("| seed | retention | swaps | suspensions | escalations "
+                 "| held peak | JCT mean | max JCT |")
+    lines.append("|---:|---|---:|---:|---:|---:|---:|---:|")
+    for cell in data.get("retention_cells", []):
+        for retention, row in cell.get("per_retention", {}).items():
+            lines.append(
+                f"| {cell['seed']} | {retention} | {_fmt(row['swaps'])} "
+                f"| {row['suspensions']} | {row['suspend_spills']} "
+                f"| {_fmt(row['held_peak'])} | {row['jct_mean']:.2f} "
+                f"| {row['max_jct']:.2f} |"
+            )
+    spreads = [
+        f"seed {c['seed']}: evictions hold {c['evictions_hold']} vs "
+        f"drop {c['evictions_drop']}, max-JCT spread "
+        f"{c['max_jct_spread']:.2f}"
+        for c in data.get("retention_cells", [])
+    ]
+    if spreads:
+        lines += ["", "Retention trade — " + "; ".join(spreads)
+                  + f" (spread bound "
+                  f"{cfg.get('max_retention_jct_ratio', '?')})"]
+    eng = data.get("engine_retention")
+    if eng:
+        per = eng.get("per_retention", {})
+        parts = [
+            f"{r}: {row['suspensions']} suspensions, "
+            f"{row['suspend_spills']} escalations, swaps "
+            f"{_fmt(row['swaps'])}"
+            for r, row in per.items()
+        ]
+        lines += ["", f"Engine retention ({eng.get('agents', '?')} "
+                  "sessions, tight pool) — " + "; ".join(parts) + "."]
+    lines.append("")
+    return lines
+
+
 RENDERERS = {
     "sim_core_perf": render_sim,
     "engine_hot_path_perf": render_engine,
     "prefix_cache_perf": render_cache,
     "slo_perf": render_slo,
     "faults_perf": render_faults,
+    "suspend_perf": render_suspend,
 }
 
 

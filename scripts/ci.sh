@@ -20,9 +20,12 @@
 #                 allocator invariants, and the locality_fair-vs-justitia
 #                 hit/delay claim in-band), plus
 #                 `benchmarks/perf_slo.py --quick` (fused-off oracle +
-#                 SLO latency) and `benchmarks/perf_faults.py --quick`
+#                 SLO latency), `benchmarks/perf_faults.py --quick`
 #                 (fault-off oracle, deterministic crash failover,
-#                 watermark swap-cut): each records its
+#                 under-budget stall inertness, watermark swap-cut), and
+#                 `benchmarks/perf_suspend.py --quick` (suspend-off
+#                 oracle, think-time KV retention hold/spill/drop,
+#                 graceful hold->spill escalation): each records its
 #                 BENCH_*_quick.json; `benchmarks/trend.py` renders
 #                 every BENCH artifact into TREND.md (all uploaded in CI);
 #   4. slow     — `pytest -m slow`: the full kernel/model/training sweeps.
@@ -86,6 +89,9 @@ python -m benchmarks.perf_slo --quick --out BENCH_slo_quick.json
 
 echo "== perf: benchmarks/perf_faults.py --quick (fault-off oracle + failover/watermark bench) =="
 python -m benchmarks.perf_faults --quick --out BENCH_faults_quick.json
+
+echo "== perf: benchmarks/perf_suspend.py --quick (suspend-off oracle + think-time retention bench) =="
+python -m benchmarks.perf_suspend --quick --out BENCH_suspend_quick.json
 
 echo "== perf: benchmarks/trend.py -> TREND.md =="
 python -m benchmarks.trend --out TREND.md > /dev/null

@@ -26,6 +26,8 @@ from repro.api.events import (
     AgentEvent,
     AgentHooks,
     AgentRequeued,
+    AgentResumed,
+    AgentSuspended,
     PrefixHit,
     ReplicaFailed,
     ReplicaRecovered,
@@ -69,6 +71,8 @@ __all__ = [
     "AgentEvent",
     "AgentHooks",
     "AgentRequeued",
+    "AgentResumed",
+    "AgentSuspended",
     "PrefixHit",
     "ReplicaFailed",
     "ReplicaRecovered",

@@ -157,6 +157,7 @@ class Backend(Protocol):
         *,
         prompt_ids: Optional[Sequence[np.ndarray]] = None,
         hints: Optional[Sequence[float]] = None,
+        resume_delay: Optional[float] = None,
     ) -> None:
         """Append one follow-up stage to a live agent (closed-loop).
 
@@ -168,6 +169,13 @@ class Backend(Protocol):
         ``prompt_ids``/``hints`` carry the stage's canonical prompt
         token streams and expected cached-prefix lengths (same
         semantics as the :class:`AgentSpec` fields); both optional.
+
+        ``resume_delay`` (workload seconds, PR 9) suspends the agent
+        for that long BEFORE this stage starts — tool-call / user think
+        time: the agent holds no decode slot, its KV falls under the
+        backend's ``suspend_retention`` policy, and the backend emits
+        ``on_suspend``/``on_resume`` around the gap.  ``None``/``0``
+        submits immediately (bit-identical to pre-PR-9 behaviour).
         """
         ...
 
@@ -214,6 +222,7 @@ class SimBackend:
         token_events: bool = False,
         prefix_cache: bool = False,
         admission_watermark: Optional[tuple] = None,
+        suspend_retention: str = "hold",
     ):
         sched = _resolve_scheduler(scheduler, total_kv, decode_rate)
         self.sim = ClusterSim(
@@ -225,6 +234,7 @@ class SimBackend:
             token_events=token_events,
             prefix_cache=prefix_cache,
             admission_watermark=admission_watermark,
+            suspend_retention=suspend_retention,
         )
         self.scheduler = sched
 
@@ -276,6 +286,7 @@ class SimBackend:
         *,
         prompt_ids: Optional[Sequence[np.ndarray]] = None,
         hints: Optional[Sequence[float]] = None,
+        resume_delay: Optional[float] = None,
     ) -> None:
         # the sim's analytic cache model needs only the hints; canonical
         # prompt ids are an engine-side concern
@@ -283,6 +294,7 @@ class SimBackend:
             agent_id,
             [list(specs)],
             hints=None if hints is None else [list(hints)],
+            resume_delay=0.0 if resume_delay is None else float(resume_delay),
         )
 
     def run(self, until: float) -> None:
@@ -310,6 +322,10 @@ class SimBackend:
                 "wm_bypass_admits": res.wm_bypass_admits,
                 "prefill_tokens_saved": res.prefill_tokens_saved,
                 "hit_fractions": self.sim.hit_fractions(),
+                "suspensions": res.suspensions,
+                "resumes": res.resumes,
+                "suspend_spills": res.suspend_spills,
+                "held_peak": res.held_peak,
             },
         )
 
@@ -345,6 +361,7 @@ class EngineBackend:
         prefix_cache: bool = False,
         fused_prefill: bool = False,
         admission_watermark: Optional[tuple] = None,
+        suspend_retention: str = "hold",
     ):
         sched = _resolve_scheduler(scheduler, float(pool_tokens), 1.0)
         self.engine = ServeEngine(
@@ -360,6 +377,7 @@ class EngineBackend:
             prefix_cache=prefix_cache,
             fused_prefill=fused_prefill,
             admission_watermark=admission_watermark,
+            suspend_retention=suspend_retention,
         )
         self.scheduler = sched
         self.token_scale = int(token_scale)
@@ -488,6 +506,7 @@ class EngineBackend:
         *,
         prompt_ids: Optional[Sequence[np.ndarray]] = None,
         hints: Optional[Sequence[float]] = None,
+        resume_delay: Optional[float] = None,
     ) -> None:
         """Append a follow-up stage to a live agent (closed-loop pacing).
 
@@ -513,6 +532,13 @@ class EngineBackend:
                 for j, s in enumerate(specs)
             ],
             hints=self._scale_hints(hints),
+            # a positive workload-seconds delay maps to >= 1 iteration so
+            # a think time shorter than one engine tick still suspends
+            resume_delay=(
+                None
+                if resume_delay is None or resume_delay <= 0.0
+                else max(1, int(round(resume_delay * self.time_scale)))
+            ),
         )
 
     def run(self, until: float) -> None:

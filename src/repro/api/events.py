@@ -116,6 +116,28 @@ class AgentRequeued(AgentEvent):
 
 
 @dataclasses.dataclass(frozen=True)
+class AgentSuspended(AgentEvent):
+    """The agent entered think time after completing ``stage`` (a closed-
+    loop ``resume_delay``): it holds no decode slot until ``until``
+    (workload seconds), and its KV sits under the backend's
+    ``suspend_retention`` policy (``hold``/``spill``/``drop``).  Between
+    this event and the matching :class:`AgentResumed`, the agent admits
+    nothing; a fleet may close the suspension with an
+    :class:`AgentRequeued` instead when the suspending replica dies."""
+
+    stage: int = -1
+    until: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class AgentResumed(AgentEvent):
+    """Think time ended: the agent's next stage was (re-)submitted.
+    Exactly one per :class:`AgentSuspended`, on the same replica — or at
+    requeue time (old replica) when the suspension is closed by a
+    failover migration."""
+
+
+@dataclasses.dataclass(frozen=True)
 class AdmissionDeferred(AgentEvent):
     """Watermark admission control held request ``rid`` back because
     occupancy sat above the high watermark (emitted at most once per
@@ -179,6 +201,10 @@ class AgentHooks:
     on_prefix_hit: Hook = None
     #: fires when the agent is failed over to a surviving replica
     on_requeued: Hook = None
+    #: fires when the agent enters think time (closed-loop ``resume_delay``)
+    on_suspend: Hook = None
+    #: fires when think time ends and the next stage is submitted
+    on_resume: Hook = None
     #: fires when watermark admission control defers one of the agent's
     #: requests (backends built with ``admission_watermark=...``)
     on_defer: Hook = None

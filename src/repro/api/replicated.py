@@ -285,6 +285,29 @@ class _ReplicaChannel:
         done[agent_id] = max(done.get(agent_id, 0), stage + 1)
         self._forward("on_stage_complete", agent_id, t, stage)
 
+    def on_suspend(
+        self, agent_id: int, stage: int, until: float, t: float
+    ) -> None:
+        fleet = self.fleet
+        child = fleet.children[self.replica]
+        until_w = child.to_workload_time(until)
+        fleet._suspended[agent_id] = until_w
+        if not fleet.think_time_accrual:
+            fleet.global_clock.note_suspend(
+                self.replica, agent_id, child.to_workload_time(t)
+            )
+        self._forward("on_suspend", agent_id, t, stage, until_w)
+
+    def on_resume(self, agent_id: int, t: float) -> None:
+        fleet = self.fleet
+        fleet._suspended.pop(agent_id, None)
+        if not fleet.think_time_accrual:
+            fleet.global_clock.note_resume(
+                self.replica, agent_id,
+                fleet.children[self.replica].to_workload_time(t),
+            )
+        self._forward("on_resume", agent_id, t)
+
     def on_agent_complete(self, agent_id: int, t: float) -> None:
         tw = self.fleet.children[self.replica].to_workload_time(t)
         self.fleet._on_child_complete(self.replica, agent_id, tw)
@@ -317,6 +340,7 @@ class ReplicatedBackend:
         watchdog_timeout: Optional[float] = None,
         watchdog_retries: int = 3,
         watchdog_backoff: float = 2.0,
+        think_time_accrual: bool = True,
     ):
         self.children: list[Backend] = list(children)
         if not self.children:
@@ -384,6 +408,15 @@ class ReplicatedBackend:
         self._arrived: set[int] = set()
         self._suppress_arrival: set[int] = set()
         self._requeued: set[int] = set()
+        # --- suspension (PR 9) ------------------------------------------
+        # ``think_time_accrual`` picks the fleet's GPS stance on tool-call
+        # think time: True (Justitia) keeps a suspended agent in its
+        # replica's GPS reference, so think time accrues virtual time and
+        # its F_j ordering is untouched; False (the Equinox stance) pulls
+        # it out via VirtualClock.deactivate — V speeds up for the agents
+        # still decoding and the thinker accrues nothing while idle.
+        self.think_time_accrual = bool(think_time_accrual)
+        self._suspended: dict[int, float] = {}   # agent_id -> until (s)
         for idx, child in enumerate(self.children):
             child.set_listener(_ReplicaChannel(self, idx))
 
@@ -650,6 +683,14 @@ class ReplicatedBackend:
             self.live_cost[k] -= self._pred_cost.get(aid, 0.0)
             if spec is None:
                 continue
+            until_s = self._suspended.get(aid)
+            if until_s is not None and until_s > spec.arrival:
+                # a suspended victim keeps thinking through the failover:
+                # its remaining work may not start before the think time
+                # elapses, so the survivor sees a correspondingly later
+                # arrival (the tool call itself survives the crash — only
+                # the serving replica died)
+                spec = dataclasses.replace(spec, arrival=float(until_s))
             queued.append((spec, aid, spec.resolved_costs()[0]))
         placements = self.router.rebalance(queued)
         for (spec, aid, cost), r in zip(queued, placements):
@@ -674,10 +715,20 @@ class ReplicatedBackend:
             self._pred_cost[aid] = cost
             self.global_clock.migrate(aid, r, arrival, cost)
             if aid in self._arrived:
+                # a suspended victim's open suspension closes HERE, on the
+                # dead replica, exactly once — the survivor serves the
+                # re-specced remainder as a fresh submission and will not
+                # re-emit the resume
+                if self._suspended.pop(aid, None) is not None:
+                    self._notify(
+                        "on_resume", aid, t=max(arrival, t), replica=k
+                    )
                 self._requeued.add(aid)
                 self._notify(
                     "on_requeued", aid, k, t=max(arrival, t), replica=r
                 )
+            else:
+                self._suspended.pop(aid, None)
 
     # ------------------------------------------------------------ drain
 
@@ -706,6 +757,8 @@ class ReplicatedBackend:
         hit_fractions: dict[int, float] = {}
         prefill_tokens_saved = 0
         admission_deferrals = 0
+        suspensions = resumes = suspend_spills = 0
+        held_peak = 0.0
         for idx, child in enumerate(self.children):
             if idx in self._dead:
                 # never driven again: harvest its pre-failure completions
@@ -739,6 +792,12 @@ class ReplicatedBackend:
             admission_deferrals += res.metrics.get(
                 "admission_deferrals", 0
             ) or 0
+            suspensions += res.metrics.get("suspensions", 0) or 0
+            resumes += res.metrics.get("resumes", 0) or 0
+            suspend_spills += res.metrics.get("suspend_spills", 0) or 0
+            held_peak = max(
+                held_peak, res.metrics.get("held_peak", 0.0) or 0.0
+            )
             per_replica.append(
                 {
                     "backend": child.name,
@@ -788,6 +847,11 @@ class ReplicatedBackend:
                 "replica_failures": len(self._failures),
                 "failed_replicas": sorted(self._dead),
                 "agents_requeued": len(self._requeued),
+                "suspensions": suspensions,
+                "resumes": resumes,
+                "suspend_spills": suspend_spills,
+                "held_peak": held_peak,
+                "think_time_accrual": self.think_time_accrual,
             },
         )
 

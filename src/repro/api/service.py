@@ -29,6 +29,8 @@ from repro.api.events import (
     AgentEvent,
     AgentHooks,
     AgentRequeued,
+    AgentResumed,
+    AgentSuspended,
     PrefixHit,
     ReplicaFailed,
     ReplicaRecovered,
@@ -98,6 +100,12 @@ class AgentHandle:
         elif isinstance(ev, AgentRequeued):
             if self.hooks.on_requeued:
                 self.hooks.on_requeued(ev)
+        elif isinstance(ev, AgentSuspended):
+            if self.hooks.on_suspend:
+                self.hooks.on_suspend(ev)
+        elif isinstance(ev, AgentResumed):
+            if self.hooks.on_resume:
+                self.hooks.on_resume(ev)
         elif isinstance(ev, AdmissionDeferred):
             if self.hooks.on_defer:
                 self.hooks.on_defer(ev)
@@ -350,6 +358,27 @@ class _Dispatcher:
         self._push(agent_id, AgentRequeued(agent_id, self._t(t),
                                            from_replica, replica=replica))
 
+    # suspension events (PR 9): closed-loop think time between stages.
+    # ``until`` is a timestamp too — the fleet channel pre-converts it
+    # alongside ``t``, so ``self._t`` is the identity there and the real
+    # conversion on unreplicated backends.
+
+    def on_suspend(
+        self, agent_id: int, stage: int, until: float, t: float, *,
+        replica: Optional[int] = None,
+    ) -> None:
+        self._push(
+            agent_id,
+            AgentSuspended(agent_id, self._t(t), stage, self._t(until),
+                           replica=replica),
+        )
+
+    def on_resume(
+        self, agent_id: int, t: float, *, replica: Optional[int] = None
+    ) -> None:
+        self._push(agent_id, AgentResumed(agent_id, self._t(t),
+                                          replica=replica))
+
     def on_admission_deferred(
         self, agent_id: int, rid: int, t: float, *,
         replica: Optional[int] = None,
@@ -380,7 +409,7 @@ class AgentService:
     #: ``engine`` constructors (everything else goes to the child backends)
     _FLEET_KW = (
         "fault_plan", "watchdog_timeout", "watchdog_retries",
-        "watchdog_backoff",
+        "watchdog_backoff", "think_time_accrual",
     )
 
     @classmethod
@@ -553,6 +582,7 @@ class AgentService:
                 list(specs),
                 prompt_ids=getattr(session, "last_prompt_ids", None),
                 hints=getattr(session, "last_cached_hints", None),
+                resume_delay=getattr(session, "last_resume_delay", None),
             )
 
     def run(self, until: float) -> None:

@@ -25,8 +25,14 @@ from repro.workloads import (
 #: default small-agent mix used by the CLI drivers
 DEFAULT_CLASSES = ("EV", "FV", "CC", "KBQAV")
 
-#: default closed-loop session mix (multi-turn chat + react tool loops)
-DEFAULT_CLOSED_LOOP = tuple(CLOSED_LOOP_CLASSES)
+#: default closed-loop session mix (multi-turn chat + react tool loops).
+#: Think-time-heavy families are EXCLUDED from the default: they suspend
+#: agents mid-run, which would silently change every CLI/benchmark run
+#: that relies on the default mix — opt in with ``--closed-loop-classes``
+#: or an explicit ``classes=`` list (e.g. ``("tooluse",)``)
+DEFAULT_CLOSED_LOOP = tuple(
+    name for name, c in CLOSED_LOOP_CLASSES.items() if c.think[1] <= 0.0
+)
 
 #: engine serves token demands divided by this (predicted costs by its
 #: square, since KV token-time is ~quadratic in token counts)
@@ -136,7 +142,11 @@ def service_for_backend(
     fused_prefill: bool = False,
     fault_plan=None,
     watchdog_timeout: Optional[float] = None,
+    watchdog_retries: Optional[int] = None,
+    watchdog_backoff: Optional[float] = None,
     admission_watermark: Optional[tuple] = None,
+    suspend_retention: Optional[str] = None,
+    think_time_accrual: bool = True,
 ) -> AgentService:
     """Build an AgentService for ``backend`` in {"sim", "engine"}.
 
@@ -168,15 +178,32 @@ def service_for_backend(
 
     ``fault_plan`` (a :class:`repro.api.FaultPlan`) plus
     ``watchdog_timeout`` arm deterministic fault injection and failover
-    on the fleet — both require ``replicas > 1``.
+    on the fleet — both require ``replicas > 1``; ``watchdog_retries`` /
+    ``watchdog_backoff`` tune the suspect-probe schedule (backend
+    defaults apply when ``None``).
     ``admission_watermark=(low, high)`` (pool fractions) turns on
     watermark admission control on every child backend.
+
+    ``suspend_retention`` in {"hold", "spill", "drop"} picks what happens
+    to a suspended agent's KV during tool-call think time (``None`` keeps
+    the backend default, "hold"); ``think_time_accrual=False`` removes
+    thinking agents from the fleet's GPS reference so think time accrues
+    no virtual time (the default True is the paper's stance).
     """
     fleet_kw = {}
     if fault_plan is not None:
         fleet_kw["fault_plan"] = fault_plan
     if watchdog_timeout is not None:
         fleet_kw["watchdog_timeout"] = watchdog_timeout
+    if watchdog_retries is not None:
+        fleet_kw["watchdog_retries"] = int(watchdog_retries)
+    if watchdog_backoff is not None:
+        fleet_kw["watchdog_backoff"] = float(watchdog_backoff)
+    if not think_time_accrual:
+        fleet_kw["think_time_accrual"] = False
+    child_kw = {}
+    if suspend_retention is not None:
+        child_kw["suspend_retention"] = suspend_retention
     if backend == "sim":
         return AgentService.sim(
             scheduler,
@@ -186,6 +213,7 @@ def service_for_backend(
             token_events=stream,
             prefix_cache=prefix_cache,
             admission_watermark=admission_watermark,
+            **child_kw,
             **fleet_kw,
         )
     if backend != "engine":
@@ -205,5 +233,6 @@ def service_for_backend(
         replicas=replicas, router=router, seed=seed,
         prefix_cache=prefix_cache, fused_prefill=fused_prefill,
         admission_watermark=admission_watermark,
+        **child_kw,
         **fleet_kw,
     )

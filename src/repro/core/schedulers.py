@@ -97,6 +97,15 @@ class AgentScheduler:
             rec.completed = True
         self.version += 1
 
+    def on_agent_suspend(self, agent_id: int, t: float) -> None:
+        """The agent entered think time (PR 9): it holds no decode slot
+        until the matching :meth:`on_agent_resume`.  Default: no-op —
+        the stock policies key on arrival-anchored or service-accrued
+        state, neither of which a suspension moves."""
+
+    def on_agent_resume(self, agent_id: int, t: float) -> None:
+        """Think time ended; the agent's next stage was submitted."""
+
     def on_service(
         self,
         agent_id: int,

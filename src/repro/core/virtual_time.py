@@ -37,6 +37,7 @@ class VirtualClock:
         self._t = 0.0          # real time of last update
         self._finish_heap: list[tuple[float, int]] = []  # (F_j, agent_id)
         self._active: set[int] = set()
+        self._retired: set[int] = set()   # swept past their F_j
 
     # -- inspection ---------------------------------------------------------
 
@@ -79,6 +80,7 @@ class VirtualClock:
         v, retired = self._simulate(t, self._finish_heap)
         for agent_id in retired:
             self._active.discard(agent_id)
+            self._retired.add(agent_id)
         self._v, self._t = v, t
 
     def on_arrival(self, agent_id: int, t: float, cost: float) -> float:
@@ -88,6 +90,29 @@ class VirtualClock:
         self._active.add(agent_id)
         heapq.heappush(self._finish_heap, (f, agent_id))
         return f
+
+    def deactivate(self, agent_id: int, t: float) -> None:
+        """Remove an agent from the GPS reference at real time ``t``.
+
+        Think-time semantics with accrual DISABLED (the Equinox stance —
+        see ``ReplicatedBackend(think_time_accrual=False)``): a suspended
+        agent stops drawing GPS service, so V speeds up for the agents
+        still active and the thinker accrues no virtual time while idle.
+        Its F_j stays on the heap (one-shot property untouched); while
+        inactive a sweep past F_j does not change the service rate.
+        No-op if the agent is not currently active.
+        """
+        self.advance(t)
+        self._active.discard(agent_id)
+
+    def reactivate(self, agent_id: int, t: float) -> None:
+        """Re-enter the GPS reference after think time (pairs with
+        :meth:`deactivate`).  An agent whose F_j was already swept while
+        it was inactive stays retired — re-adding it would suppress the
+        clock rate forever, since its heap entry is gone."""
+        self.advance(t)
+        if agent_id not in self._retired:
+            self._active.add(agent_id)
 
     # -- internals ----------------------------------------------------------
 
@@ -120,8 +145,12 @@ class VirtualClock:
                 v = max(v, heap[0][0])
                 elapsed -= dt_next
                 while heap and heap[0][0] <= v + 1e-12:
-                    retired.append(heapq.heappop(heap)[1])
-                    active -= 1
+                    aid = heapq.heappop(heap)[1]
+                    retired.append(aid)
+                    # a deactivated (thinking) agent was not counted in
+                    # ``active``, so sweeping past its F_j changes nothing
+                    if aid in self._active:
+                        active -= 1
         return v, retired
 
 
@@ -181,8 +210,10 @@ class GlobalVirtualClock:
             raise ValueError("need at least one replica capacity")
         self.capacities = caps
         self.clocks = [VirtualClock(m) for m in caps]
-        # (arrival t, submit seq, replica, agent_id, cost) min-heap
-        self._pending: list[tuple[float, int, int, int, float]] = []
+        # (t, submit seq, replica, agent_id, cost, kind) min-heap; kind is
+        # "arrive" | "suspend" | "resume", replayed in time order so a
+        # suspension's GPS-rate change lands between the right arrivals
+        self._pending: list[tuple[float, int, int, int, float, str]] = []
         self._seq = 0
         self._horizon = 0.0            # arrivals <= horizon are replayed
         self.virtual_finish: dict[int, float] = {}
@@ -212,7 +243,35 @@ class GlobalVirtualClock:
                 f"arrival at {t} predates reconciled horizon {self._horizon}"
             )
         heapq.heappush(
-            self._pending, (float(t), self._seq, replica, agent_id, float(cost))
+            self._pending,
+            (float(t), self._seq, replica, agent_id, float(cost), "arrive"),
+        )
+        self._seq += 1
+
+    def note_suspend(self, replica: int, agent_id: int, t: float) -> None:
+        """Buffer a think-time suspension (GPS deactivation) for replay.
+
+        Only meaningful when the fleet runs with think-time virtual-time
+        accrual DISABLED; silently ignored for dead replicas (their clocks
+        are frozen — the agent migrates and re-arrives on a survivor).
+        """
+        if replica in self._dead:
+            return
+        heapq.heappush(
+            self._pending,
+            (max(float(t), self._horizon), self._seq, replica, agent_id,
+             0.0, "suspend"),
+        )
+        self._seq += 1
+
+    def note_resume(self, replica: int, agent_id: int, t: float) -> None:
+        """Buffer a think-time resume (GPS reactivation) for replay."""
+        if replica in self._dead:
+            return
+        heapq.heappush(
+            self._pending,
+            (max(float(t), self._horizon), self._seq, replica, agent_id,
+             0.0, "resume"),
         )
         self._seq += 1
 
@@ -230,13 +289,14 @@ class GlobalVirtualClock:
         self._dead.add(replica)
         orphaned = [
             (aid, cost)
-            for (_, _, k, aid, cost) in self._pending
-            if k == replica
+            for (_, _, k, aid, cost, kind) in self._pending
+            if k == replica and kind == "arrive"
         ]
-        if orphaned:
-            self._pending = [
-                entry for entry in self._pending if entry[2] != replica
-            ]
+        # drop EVERY buffered entry for the dead replica (suspends/resumes
+        # included — the frozen clock must never be replayed into again)
+        pruned = [entry for entry in self._pending if entry[2] != replica]
+        if len(pruned) != len(self._pending):
+            self._pending = pruned
             heapq.heapify(self._pending)
         return orphaned
 
@@ -272,7 +332,13 @@ class GlobalVirtualClock:
         """
         until = float(until)
         while self._pending and self._pending[0][0] <= until:
-            t, _, replica, agent_id, cost = heapq.heappop(self._pending)
+            t, _, replica, agent_id, cost, kind = heapq.heappop(self._pending)
+            if kind == "suspend":
+                self.clocks[replica].deactivate(agent_id, t)
+                continue
+            if kind == "resume":
+                self.clocks[replica].reactivate(agent_id, t)
+                continue
             f = self.clocks[replica].on_arrival(agent_id, t, cost)
             # never overwrite: a migrated agent's re-arrival joins the new
             # clock's GPS reference but its recorded F_j is carried over

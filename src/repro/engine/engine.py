@@ -322,6 +322,10 @@ class EngineAgent:
     #: optional per-stage expected cached-prefix hints (engine-scale
     #: tokens), aligned with ``stages``; entries may be None
     hints: Optional[list] = None
+    #: per-stage think-time delays in ITERATIONS (PR 9), aligned with
+    #: ``stages``: a positive entry suspends the agent that long before
+    #: the stage submits (``None``: never)
+    resume_delays: Optional[list] = None
     # runtime
     next_stage: int = 0
     live: int = 0
@@ -360,6 +364,7 @@ class ServeEngine:
         prefix_cache: bool = False,
         fused_prefill: bool = False,
         admission_watermark: Any = None,
+        suspend_retention: str = "hold",
     ):
         self.model = model
         self.params = params
@@ -421,6 +426,32 @@ class ServeEngine:
             self._wm = None
         self._wm_gated = False
         self._wm_emitted: set[int] = set()
+        #: suspended-agent KV retention (PR 9): a closed-loop stage
+        #: appended with ``resume_delay`` iterations of think time does
+        #: not submit at its stage boundary — the agent suspends, holding
+        #: no decode slot, and the completed stage's final request falls
+        #: under this policy: ``hold`` keeps its blocks allocated (with
+        #: the prefix cache they stay pinned in the radix index, so the
+        #: next turn's prompt is a guaranteed match), ``spill`` copies
+        #: the slot's rows to a host staging buffer and releases the
+        #: blocks, ``drop`` releases outright (still matchable under the
+        #: prefix-aware allocator until evicted).  Under memory pressure
+        #: held blocks are released (``_escalate_held``) BEFORE any
+        #: running sequence is swapped out.  Strictly flag-gated: with no
+        #: suspensions every path is bit-identical to the frozen
+        #: reference engine.
+        if suspend_retention not in ("hold", "spill", "drop"):
+            raise ValueError(
+                f"suspend_retention must be 'hold', 'spill' or 'drop',"
+                f" got {suspend_retention!r}"
+            )
+        self.suspend_retention = suspend_retention
+        # scheduled resumes: (resume_iter, seq, EngineAgent) min-heap;
+        # _held maps a suspended agent to the rid whose blocks it pins
+        # (insertion order == suspension order, the escalation order)
+        self._resumes: list[tuple[int, int, EngineAgent]] = []
+        self._rseq = 0
+        self._held: dict[int, int] = {}
         self.max_batch = max_batch
         self.cache_len = cache_len
         self.prefill_chunk = prefill_chunk
@@ -476,7 +507,9 @@ class ServeEngine:
                         "tokens": 0, "sorts": 0, "key_evals": 0,
                         "host_syncs": 0, "windows": 0,
                         "prefill_tokens_saved": 0, "prefix_hits": 0,
-                        "fused_slices": 0, "admission_deferrals": 0}
+                        "fused_slices": 0, "admission_deferrals": 0,
+                        "suspensions": 0, "resumes": 0,
+                        "suspend_spills": 0}
         # per-agent prefix-cache accounting (engine-scale tokens)
         self.agent_prefill_tokens: dict[int, int] = {}
         self.agent_hit_tokens: dict[int, int] = {}
@@ -611,9 +644,26 @@ class ServeEngine:
             _, _, agent = heapq.heappop(self.pending)
             self._arrive(agent)
 
+    def _release_resumes(self) -> None:
+        """Wake suspended agents whose think time has elapsed (PR 9)."""
+        while self._resumes and self._resumes[0][0] <= self.now:
+            _, _, agent = heapq.heappop(self._resumes)
+            aid = agent.agent_id
+            rid = self._held.pop(aid, None)
+            if rid is not None:
+                # hold retention: the pinned stage KV served its purpose
+                # (the prefix cache re-matches it during admission of the
+                # next stage) — release it so admission sees the blocks
+                self.alloc.release(rid)
+            self.metrics["resumes"] += 1
+            self.sched.on_agent_resume(aid, float(self.now))
+            self._emit("on_resume", aid, float(self.now))
+            self._submit_stage(agent)
+
     def append_stage(
         self, agent_id: int, stage: list[tuple[np.ndarray, int]],
         hints: Optional[list[float]] = None,
+        resume_delay: Optional[int] = None,
     ) -> None:
         """Append one follow-up stage to a live agent (closed-loop).
 
@@ -646,6 +696,14 @@ class ServeEngine:
                     f"request p={len(prompt)} d={d} exceeds cache_len "
                     f"{self.cache_len}"
                 )
+        if resume_delay is not None and int(resume_delay) > 0:
+            # think time (PR 9): suspend the agent ``resume_delay``
+            # iterations before this stage submits
+            if agent.resume_delays is None:
+                agent.resume_delays = [None] * len(agent.stages)
+            while len(agent.resume_delays) < len(agent.stages):
+                agent.resume_delays.append(None)
+            agent.resume_delays.append(int(resume_delay))
         agent.stages.append(
             [(np.asarray(p, np.int32), int(d)) for p, d in stage]
         )
@@ -695,6 +753,7 @@ class ServeEngine:
         try:
             start = self.now
             self._release_arrivals()
+            self._release_resumes()
             self._admit()
             if limit is not None:
                 # the admission pass may itself advance the clock (chunked
@@ -709,11 +768,23 @@ class ServeEngine:
 
     @property
     def busy(self) -> bool:
-        """Work is queued or running (pending future arrivals excluded)."""
+        """Work is queued or running.  Pending future arrivals and
+        scheduled resumes are excluded: both are future clock targets the
+        run drivers jump to in O(1), not work the engine can advance."""
         return bool(
             self.waiting or self.swapped or self.slot_req
             or self._pf is not None
         )
+
+    def _next_wake(self, default: int) -> int:
+        """Earliest scheduled clock target: pending arrival or
+        suspended-agent resume, else ``default`` (both heaps empty)."""
+        cands = []
+        if self.pending:
+            cands.append(self.pending[0][0])
+        if self._resumes:
+            cands.append(self._resumes[0][0])
+        return min(cands) if cands else default
 
     def run(self, until: int) -> None:
         """Advance the engine clock to iteration ``until`` (re-entrant).
@@ -729,7 +800,7 @@ class ServeEngine:
         try:
             while self.now < until:
                 if not self.busy:
-                    nxt = self.pending[0][0] if self.pending else until
+                    nxt = self._next_wake(until)
                     if nxt > self.now:
                         self.now = min(int(nxt), until)
                         if self.now >= until:
@@ -753,7 +824,7 @@ class ServeEngine:
         self._in_run = True
         try:
             steps = 0
-            while self.busy or self.pending:
+            while self.busy or self.pending or self._resumes:
                 if steps >= max_iters:
                     raise EngineStalledError(
                         self._stall_report(max_iters),
@@ -761,9 +832,11 @@ class ServeEngine:
                         dict(self.metrics),
                     )
                 if not self.busy:
-                    # idle gap before the next scheduled arrival: jump the
-                    # clock
-                    self.now = max(self.now, int(self.pending[0][0]))
+                    # idle gap before the next scheduled arrival or
+                    # suspended-agent resume: jump the clock
+                    self.now = max(
+                        self.now, int(self._next_wake(self.now))
+                    )
                 steps += self.step()
         finally:
             self._in_run = False
@@ -781,6 +854,7 @@ class ServeEngine:
             f"{self.now}): waiting={len(self.waiting)} "
             f"swapped={len(self.swapped)} running={len(self.slot_req)} "
             f"pending_arrivals={len(self.pending)} "
+            f"suspended={len(self._resumes)} held_rids={len(self._held)} "
             f"fused_prefill_in_flight={self._pf is not None} "
             f"free_slots={len(self.slot_free)}/{self.max_batch} "
             f"free_blocks={self.alloc.free_blocks}/{self.alloc.n_blocks} "
@@ -815,6 +889,8 @@ class ServeEngine:
         while self.swapped and self.slot_free:
             req = self.swapped.peek()
             if not self.alloc.swap_in(req.rid):
+                if self._escalate_held():
+                    continue
                 break
             self.swapped.popleft()
             self._swapped_rids.discard(req.rid)
@@ -834,12 +910,16 @@ class ServeEngine:
                 break
             if self.prefix_cache:
                 if not self.alloc.can_admit_prefix(req.prompt):
+                    if self._escalate_held():
+                        continue
                     break
                 self.waiting.popleft()
                 _, hit = self.alloc.admit_prefix(req.rid, req.prompt)
                 req.cached_tokens = int(hit)
             else:
                 if not self.alloc.can_admit(len(req.prompt) + 1):
+                    if self._escalate_held():
+                        continue
                     break
                 self.waiting.popleft()
                 self.alloc.admit(req.rid, len(req.prompt))
@@ -867,14 +947,16 @@ class ServeEngine:
         if self._wm is not None and self._wm_gate(req):
             return
         if self.prefix_cache:
-            if not self.alloc.can_admit_prefix(req.prompt):
-                return
+            while not self.alloc.can_admit_prefix(req.prompt):
+                if not self._escalate_held():
+                    return
             self.waiting.popleft()
             _, hit = self.alloc.admit_prefix(req.rid, req.prompt)
             req.cached_tokens = int(hit)
         else:
-            if not self.alloc.can_admit(len(req.prompt) + 1):
-                return
+            while not self.alloc.can_admit(len(req.prompt) + 1):
+                if not self._escalate_held():
+                    return
             self.waiting.popleft()
             self.alloc.admit(req.rid, len(req.prompt))
         p = len(req.prompt)
@@ -1087,7 +1169,12 @@ class ServeEngine:
         self._emit("on_swap_in", req.agent_id, req.rid, float(self.now))
 
     def _swap_out_worst(self) -> bool:
-        """Evict the running request with the WORST scheduler key."""
+        """Evict the running request with the WORST scheduler key —
+        after victimizing suspended agents' held KV first (PR 9): a
+        thinker's retained blocks are always cheaper to give up than a
+        running decoder's progress."""
+        if self._escalate_held():
+            return True
         if len(self.slot_req) <= 1:
             return False
         self._apply_dirty()
@@ -1148,6 +1235,12 @@ class ServeEngine:
         # need 0 fresh blocks, so zero free is not conclusive there
         if free == 0 and not self.prefix_cache:
             return False
+        if self._held and (
+            self.swapped or (self.waiting and self._pf is None)
+        ):
+            # held-KV escalation can free blocks at the very next admit
+            # pass, so a failed fit now is not conclusive (PR 9)
+            return True
         static = not self.sched.dynamic
         if self.swapped:
             # a non-empty swapped queue blocks the waiting queue entirely
@@ -1267,6 +1360,10 @@ class ServeEngine:
         )
         if self.pending:
             cap = min(cap, int(self.pending[0][0]) - self.now)
+        if self._resumes:
+            # a suspended agent's resume submits new work (PR 9) — any
+            # mid-run scheduling trigger must bound the window
+            cap = min(cap, int(self._resumes[0][0]) - self.now)
         if self._pf is not None:
             chunk = self.prefill_chunk
             cap = min(cap, -(-(self._pf.total - self._pf.written) // chunk))
@@ -1421,24 +1518,99 @@ class ServeEngine:
 
     def _complete(self, slot: int, req: EngineRequest) -> None:
         req.done = True
-        self.alloc.release(req.rid)
         self.slot_req.pop(slot)
         self.slot_free.append(slot)
         self.running.remove(req)
         self._slots_stale = True
         agent = self.agents[req.agent_id]
         agent.live -= 1
-        if agent.live == 0:
+        if agent.live > 0:
+            self.alloc.release(req.rid)
+            return
+        # the stage-complete callback may append a follow-up stage WITH a
+        # resume delay, so the KV release decision (hold retention keeps
+        # the final rid pinned through think time) must wait for the emit
+        self._emit(
+            "on_stage_complete", agent.agent_id, agent.next_stage - 1,
+            float(self.now),
+        )
+        if agent.next_stage < len(agent.stages):
+            delay = self._stage_delay(agent)
+            if delay > 0:
+                self._suspend(agent, req, slot, delay)
+                return
+            self.alloc.release(req.rid)
+            self._submit_stage(agent)
+        else:
+            self.alloc.release(req.rid)
+            agent.finish_iter = self.now
+            self.completions[agent.agent_id] = self.now
+            self.sched.on_agent_complete(agent.agent_id, float(self.now))
             self._emit(
-                "on_stage_complete", agent.agent_id, agent.next_stage - 1,
-                float(self.now),
+                "on_agent_complete", agent.agent_id, float(self.now)
             )
-            if agent.next_stage < len(agent.stages):
-                self._submit_stage(agent)
-            else:
-                agent.finish_iter = self.now
-                self.completions[agent.agent_id] = self.now
-                self.sched.on_agent_complete(agent.agent_id, float(self.now))
-                self._emit(
-                    "on_agent_complete", agent.agent_id, float(self.now)
-                )
+
+    def _stage_delay(self, agent: EngineAgent) -> int:
+        """Resume delay (iterations) attached to the agent's NEXT stage."""
+        delays = agent.resume_delays
+        if delays is None or agent.next_stage >= len(delays):
+            return 0
+        d = delays[agent.next_stage]
+        return int(d) if d is not None else 0
+
+    def _suspend(
+        self, agent: EngineAgent, req: EngineRequest, slot: int, delay: int
+    ) -> None:
+        """Park a closed-loop agent through tool-call think time (PR 9).
+
+        The agent holds NO decode slot while suspended (it was freed by
+        ``_complete`` before this call).  Its finished stage's KV falls
+        under the retention policy:
+
+        * ``hold``  — the final rid stays allocated (pinned blocks); the
+          next stage re-matches it byte-for-byte via the prefix cache.
+          ``_escalate_held`` releases it under memory pressure.
+        * ``spill`` — the slot's cache rows are gathered to a host
+          staging buffer (counted as a host sync) and the blocks are
+          released; the radix index may still serve the prefix until
+          eviction.
+        * ``drop``  — blocks released outright; with the prefix cache on,
+          reprefill is cheap while the chain survives in the radix index.
+        """
+        aid = agent.agent_id
+        if self.suspend_retention == "hold":
+            self._held[aid] = req.rid
+        else:
+            if self.suspend_retention == "spill":
+                dev = _gather_slot_jit(self.cache, slot)
+                self.metrics["host_syncs"] += 1
+                if len(self._staging) < 2 * self.max_batch:
+                    self._staging.append(jax.tree.map(np.array, dev))
+                self.metrics["suspend_spills"] += 1
+            self.alloc.release(req.rid)
+        until = self.now + int(delay)
+        self._rseq += 1
+        heapq.heappush(self._resumes, (until, self._rseq, agent))
+        self.metrics["suspensions"] += 1
+        self.sched.on_agent_suspend(aid, float(self.now))
+        self._emit(
+            "on_suspend", aid, agent.next_stage - 1, float(until),
+            float(self.now),
+        )
+
+    def _escalate_held(self) -> bool:
+        """Release the oldest suspended agent's pinned KV (hold -> drop).
+
+        Called when admission, swap-in, or victim selection cannot make
+        progress: suspended agents are victimized BEFORE running ones.
+        With the prefix cache on, the released blocks stay matchable in
+        the radix index until evicted, so escalation degrades hold into
+        an effective drop rather than wedging the pool.
+        """
+        if not self._held:
+            return False
+        aid = next(iter(self._held))
+        rid = self._held.pop(aid)
+        self.alloc.release(rid)
+        self.metrics["suspend_spills"] += 1
+        return True

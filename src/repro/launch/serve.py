@@ -53,7 +53,27 @@ def main() -> None:
     ap.add_argument("--router", default="round_robin",
                     choices=router_names(),
                     help="fleet placement policy (with --replicas > 1)")
+    ap.add_argument("--watchdog-timeout", type=float, default=None,
+                    metavar="S",
+                    help="(with --replicas > 1) suspect a busy replica "
+                         "lagging the fleet clock by S seconds")
+    ap.add_argument("--watchdog-retries", type=int, default=None,
+                    help="suspect probes before declaring a replica dead "
+                         "(fleet default: 3)")
+    ap.add_argument("--watchdog-backoff", type=float, default=None,
+                    help="multiplier between successive suspect probes "
+                         "(fleet default: 2.0)")
+    ap.add_argument("--admission-watermark", type=float, nargs=2,
+                    default=None, metavar=("LOW", "HIGH"),
+                    help="watermark admission control: defer admissions "
+                         "below LOW free-pool fraction, resume above HIGH")
+    ap.add_argument("--suspend-retention", default=None,
+                    choices=("hold", "spill", "drop"),
+                    help="KV retention for agents suspended through "
+                         "tool-call think time (closed-loop workloads)")
     args = ap.parse_args()
+    if args.watchdog_timeout is not None and args.replicas <= 1:
+        ap.error("--watchdog-timeout requires --replicas > 1")
 
     rng = np.random.default_rng(0)
     specs = specs_from_classes(rng, args.n_agents, args.window_s)
@@ -62,6 +82,14 @@ def main() -> None:
         arch=args.arch, pool_tokens=args.pool_tokens,
         max_batch=args.max_batch,
         replicas=args.replicas, router=args.router,
+        watchdog_timeout=args.watchdog_timeout,
+        watchdog_retries=args.watchdog_retries,
+        watchdog_backoff=args.watchdog_backoff,
+        admission_watermark=(
+            tuple(args.admission_watermark)
+            if args.admission_watermark is not None else None
+        ),
+        suspend_retention=args.suspend_retention,
     )
 
     t0 = time.time()

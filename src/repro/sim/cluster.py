@@ -96,6 +96,22 @@ deliberately emit BEFORE checking whether the agent has stages left, so a
 callback-appended stage seamlessly continues the agent (this is what
 ``repro.api``'s closed-loop ``AgentSpec.next_stage`` builds on).  Listener
 callbacks must NOT re-enter ``advance``/``drain`` (guarded).
+
+Suspended agents (PR 9)
+-----------------------
+A closed-loop stage appended with ``resume_delay > 0`` does not submit at
+the stage boundary: the agent SUSPENDS for the delay (tool-call / user
+think time), holding no decode slot, and its conversation-tail KV sits
+under the ``suspend_retention`` policy — ``hold`` keeps it resident and
+charged against the pool, ``spill`` parks it host-side for a
+``swap_penalty`` restore surcharge at resume, ``drop`` releases it
+outright.  Memory pressure victimizes suspended agents BEFORE running
+ones: admission fit-failures and the saturation trip escalate held KV
+hold→spill one agent at a time (oldest first) and only swap a running
+sequence when nothing is held.  Strictly flag-gated: with no suspensions
+``_held_total`` stays 0.0 and every adjusted expression reduces to the
+pre-PR-9 arithmetic bit-for-bit.  LOCKSTEP: the frozen reference core
+carries the identical model.
 """
 
 from __future__ import annotations
@@ -128,6 +144,9 @@ class SimAgent:
     prefix_group: str = ""
     shared_prefix: float = 0.0
     cached_hints: Any = None
+    #: per-stage think-time delays (PR 9): ``resume_delays[j]`` seconds of
+    #: suspension inserted before stage ``j`` submits (``None``: never)
+    resume_delays: Any = None
 
     # runtime
     finish: float = float("inf")
@@ -195,6 +214,12 @@ class SimResult:
     agent_hit_tokens: dict[int, float] = dataclasses.field(
         default_factory=dict
     )
+    # suspension accounting (PR 9; populated only when closed-loop stages
+    # carry a ``resume_delay``)
+    suspensions: int = 0
+    resumes: int = 0
+    suspend_spills: int = 0                # hold→spill escalations + spills
+    held_peak: float = 0.0                 # max KV held by suspended agents
 
 
 class ClusterSim:
@@ -209,6 +234,7 @@ class ClusterSim:
         token_events: bool = False,
         prefix_cache: bool = False,
         admission_watermark: Any = None,
+        suspend_retention: str = "hold",
     ):
         self.sched = scheduler
         self.m = float(total_kv)
@@ -249,6 +275,29 @@ class ClusterSim:
             self._wm = None
         self._wm_gated = False
         self._wm_emitted: set[int] = set()
+        #: suspended-agent KV retention (PR 9): an agent in think time
+        #: (closed-loop ``resume_delay``) holds no decode slot; ``hold``
+        #: keeps its conversation tail resident (charged to the pool via
+        #: ``_held_total``), ``spill`` parks it host-side for a
+        #: ``swap_penalty`` restore surcharge at resume, ``drop`` releases
+        #: it outright.  Under pressure held KV escalates hold→spill
+        #: BEFORE any running sequence is swapped.  Strictly flag-gated:
+        #: with no suspensions ``_held_total`` stays 0.0 and every
+        #: adjusted expression is bit-identical (``x - 0.0 == x``).
+        #: LOCKSTEP: the frozen reference carries the identical model.
+        if suspend_retention not in ("hold", "spill", "drop"):
+            raise ValueError(
+                f"suspend_retention must be 'hold', 'spill' or 'drop',"
+                f" got {suspend_retention!r}"
+            )
+        self.suspend_retention = suspend_retention
+        # pending resumes: (resume_time, seq, agent_id) min-heap
+        self._resume_heap: list[tuple[float, int, int]] = []
+        self._rseq = 0
+        self._held: dict[int, float] = {}  # suspended aid -> resident KV
+        self._held_total = 0.0
+        self._spilled: set[int] = set()    # suspended aids parked host-side
+        self._penalized: set[int] = set()  # spilled aids past their restore
         self._in_run = False             # re-entrancy guard (listener rule)
 
         # clock + result (cumulative across submit/advance/drain rounds)
@@ -419,7 +468,9 @@ class ClusterSim:
                     growing += 1
         if growing == 0:
             return float("inf")
-        return t + max(0.0, self.m - occ) / (growing * rate)
+        return t + max(0.0, self.m - occ - self._held_total) / (
+            growing * rate
+        )
 
     # ----------------------------------------------------------- accounting
 
@@ -518,13 +569,64 @@ class ClusterSim:
         self._add_running(r, now)
         deferred.append(("on_swap_in", r.req.agent_id, r.req.rid, now))
 
+    # ------------------------------------------------------------ suspension
+
+    def _suspend(self, agent: SimAgent, delay: float, now: float) -> None:
+        """Park a closed-loop agent for ``delay`` seconds of think time.
+
+        The agent holds no decode slot; under ``hold`` retention its
+        conversation tail (the completed stage's last inference) stays
+        resident and charged against the pool via ``_held_total``; under
+        ``spill``/``drop`` nothing stays resident (spill pays the
+        ``swap_penalty`` restore surcharge at resume, drop re-prefills —
+        cheap when the prefix-cache model still matches the history).
+        """
+        aid = agent.agent_id
+        stage = agent.next_stage - 1
+        until = now + float(delay)
+        held = 0.0
+        if self.suspend_retention == "hold":
+            spec = agent.stages[stage][-1]
+            held = float(spec.prefill + spec.decode)
+        self._held[aid] = held
+        self._held_total += held
+        if self.suspend_retention == "spill":
+            self._spilled.add(aid)
+        self._rseq += 1
+        heapq.heappush(self._resume_heap, (until, self._rseq, aid))
+        self.result.suspensions += 1
+        if self._held_total > self.result.held_peak:
+            self.result.held_peak = self._held_total
+        _t0 = _time.perf_counter()
+        self.sched.on_agent_suspend(aid, now)
+        self._sched_clock += _time.perf_counter() - _t0
+        self._emit("on_suspend", aid, stage, until, now)
+
+    def _spill_oldest_held(self) -> float:
+        """Escalate hold→spill on the oldest held agent; returns freed KV.
+
+        Memory pressure victimizes suspended agents BEFORE running ones:
+        admission fit-failures and the saturation trip call this first,
+        and only when nothing is held does a running sequence get
+        swapped.  The spilled agent pays the ``swap_penalty`` restore
+        surcharge at resume, exactly like a swapped sequence.
+        """
+        for aid, held in self._held.items():
+            if held > 0.0:
+                self._held[aid] = 0.0
+                self._held_total -= held
+                self._spilled.add(aid)
+                self.result.suspend_spills += 1
+                return held
+        return 0.0
+
     def _admit(self, now: float) -> None:
         """Admission pass: swapped queue first, then waiting (vLLM)."""
         # listener emits are deferred past the timed window so the
         # reported scheduler overhead measures policy code only
         deferred: list[tuple] = []
         t0 = _time.perf_counter()
-        free = self.m - self._occupancy(now)
+        free = self.m - self._occupancy(now) - self._held_total
         # None (a policy without the version counter) => refresh falls back
         # to sorting whenever the queue is dirty-or-dynamic, always safe
         version = getattr(self.sched, "version", None)
@@ -539,6 +641,10 @@ class ClusterSim:
                 r = self._swapped.peek()
                 need = r.req.spec.prefill + r.decoded_at_last
                 if need > free:
+                    spilled = self._spill_oldest_held()
+                    if spilled > 0.0:
+                        free += spilled
+                        continue
                     break
                 self._swapped.popleft()
                 self._resume(r, now, deferred)
@@ -557,6 +663,10 @@ class ClusterSim:
                     not self._running and req.spec.prefill >= self.m
                 )
                 if not (fits or solo_oversized):
+                    spilled = self._spill_oldest_held()
+                    if spilled > 0.0:
+                        free += spilled
+                        continue
                     break
                 if self._wm is not None:
                     low, high = self._wm
@@ -719,6 +829,7 @@ class ClusterSim:
     def append_stage(
         self, agent_id: int, stages: list[list[InferenceSpec]],
         hints: Any = None,
+        resume_delay: float = 0.0,
     ) -> None:
         """Append follow-up stages to a live agent (closed-loop clients).
 
@@ -730,10 +841,19 @@ class ClusterSim:
 
         ``hints`` (optional, aligned with ``stages``) carries per-spec
         expected cached-prefix lengths for the prefix-cache model.
+        ``resume_delay > 0`` (seconds of think time, PR 9) suspends the
+        agent for that long before the FIRST appended stage submits.
         """
         agent = self._by_id.get(agent_id)
         if agent is None or agent.finish != float("inf"):
             raise ValueError(f"agent {agent_id} is not live")
+        if resume_delay and resume_delay > 0.0 and stages:
+            if agent.resume_delays is None:
+                agent.resume_delays = [0.0] * len(agent.stages)
+            while len(agent.resume_delays) < len(agent.stages):
+                agent.resume_delays.append(0.0)
+            agent.resume_delays.append(float(resume_delay))
+            agent.resume_delays.extend([0.0] * (len(stages) - 1))
         if hints is not None:
             if agent.cached_hints is None:
                 agent.cached_hints = [None] * len(agent.stages)
@@ -776,7 +896,8 @@ class ClusterSim:
     @property
     def busy(self) -> bool:
         return bool(
-            self._arrivals or self._waiting or self._running or self._swapped
+            self._arrivals or self._waiting or self._running
+            or self._swapped or self._resume_heap
         )
 
     def occupancy_now(self) -> float:
@@ -786,7 +907,7 @@ class ClusterSim:
         return sum(
             r.req.spec.prefill + r.decoded(t, rate)
             for r in self._running.values()
-        )
+        ) + self._held_total
 
     # ------------------------------------------------------------- stepping
 
@@ -800,6 +921,9 @@ class ClusterSim:
         through the reference loop.
         """
         t_arr = self._arrivals[0][0] if self._arrivals else float("inf")
+        t_res = (
+            self._resume_heap[0][0] if self._resume_heap else float("inf")
+        )
         t_fin = self._peek_fin()
         t_pref = self._peek_pref()
         # the saturation probe is evaluated at the LAST EVENT time, not at
@@ -819,7 +943,7 @@ class ClusterSim:
             if self._running
             else float("inf")
         )
-        t_next = min(t_arr, t_fin, t_sat, t_pref)
+        t_next = min(t_arr, t_res, t_fin, t_sat, t_pref)
         if t_next == float("inf"):
             if self._waiting or self._swapped:
                 raise RuntimeError(
@@ -831,6 +955,7 @@ class ClusterSim:
         if (
             len(self._running) == 1
             and t_arr > until
+            and t_res > until
             and t_fin > until
             and t_pref > until
         ):
@@ -874,6 +999,33 @@ class ClusterSim:
             self._admit(t)
             return True
 
+        # -- resumes: think time ended (one per trip, like arrivals)
+        if t_res <= t + 1e-12:
+            _, _, aid = heapq.heappop(self._resume_heap)
+            if aid in self._spilled and aid not in self._penalized:
+                # spilled KV pays the swap-in restore surcharge before
+                # the next stage submits — one deterministic penalty trip
+                self._penalized.add(aid)
+                self._rseq += 1
+                heapq.heappush(
+                    self._resume_heap,
+                    (t + self.swap_penalty, self._rseq, aid),
+                )
+                return True
+            held = self._held.pop(aid, 0.0)
+            self._held_total -= held
+            self._spilled.discard(aid)
+            self._penalized.discard(aid)
+            self.result.resumes += 1
+            agent = self._by_id[aid]
+            _t0 = _time.perf_counter()
+            self.sched.on_agent_resume(aid, t)
+            self._sched_clock += _time.perf_counter() - _t0
+            self._emit("on_resume", aid, t)
+            self._submit_stage(agent, t)
+            self._admit(t)
+            return True
+
         # -- completions: drain the finish calendar within the snap window
         if t_fin <= t + self._fin_eps:
             batch: list[_Running] = []
@@ -895,7 +1047,17 @@ class ClusterSim:
                         agent.next_stage - 1, t,
                     )
                     if agent.next_stage < len(agent.stages):
-                        self._submit_stage(agent, t)
+                        delays = agent.resume_delays
+                        delay = (
+                            float(delays[agent.next_stage])
+                            if delays is not None
+                            and agent.next_stage < len(delays)
+                            else 0.0
+                        )
+                        if delay > 0.0:
+                            self._suspend(agent, delay, t)
+                        else:
+                            self._submit_stage(agent, t)
                     else:
                         agent.finish = t
                         self.result.finish[agent.agent_id] = t
@@ -914,8 +1076,15 @@ class ClusterSim:
         # entry that triggered this trip is purged by the next _peek_pref.)
 
         # -- saturation: swap out the worst-priority running inference
-        occ_sat = self._occupancy(t) if self._running else 0.0
+        occ_sat = (
+            self._occupancy(t) + self._held_total if self._running else 0.0
+        )
         if occ_sat >= self.m - 1e-6 and self._running:
+            if self._held_total > 0.0:
+                # memory pressure victimizes suspended agents first:
+                # escalate one hold→spill instead of swapping a runner
+                self._spill_oldest_held()
+                return True
             if len(self._running) > 1:
                 t0 = _time.perf_counter()
                 if self.sched.dynamic:
@@ -947,6 +1116,8 @@ class ClusterSim:
                 fin = r.fin
                 if self._arrivals and self._arrivals[0][0] < fin:
                     fin = self._arrivals[0][0]
+                if self._resume_heap and self._resume_heap[0][0] < fin:
+                    fin = self._resume_heap[0][0]
                 if fin > until:
                     # don't overshoot an advance() horizon: a later submit
                     # would clamp its arrival to the overshot clock.  The

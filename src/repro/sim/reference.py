@@ -41,6 +41,14 @@ inert to the dynamics when off:
   deferred while anything is running, until occupancy drains to the low
   watermark.  Off (``None``), the admission pass is untouched — the gate
   branch is never entered.
+* ``suspend_retention`` (PR 9) — suspended agents: a stage whose
+  ``SimAgent.resume_delays`` entry is positive suspends the agent (no
+  decode slot) until its resume time, with its conversation-tail KV
+  ``hold``-resident (charged via a held total), ``spill``-parked (a
+  ``swap_penalty`` restore trip at resume) or ``drop``-released; memory
+  pressure escalates held KV hold→spill BEFORE swapping any running
+  sequence.  With no suspensions the held total stays 0.0 and every
+  adjusted expression reduces to the prior arithmetic bit-for-bit.
 """
 
 from __future__ import annotations
@@ -113,6 +121,7 @@ class ReferenceClusterSim:
         token_events: bool = False,
         prefix_cache: bool = False,
         admission_watermark: Any = None,
+        suspend_retention: str = "hold",
     ):
         self.sched = scheduler
         self.m = float(total_kv)
@@ -132,6 +141,12 @@ class ReferenceClusterSim:
             self._wm = (low * self.m, high * self.m)
         else:
             self._wm = None
+        if suspend_retention not in ("hold", "spill", "drop"):
+            raise ValueError(
+                f"suspend_retention must be 'hold', 'spill' or 'drop',"
+                f" got {suspend_retention!r}"
+            )
+        self.suspend_retention = suspend_retention
 
     def _emit(self, event: str, *args) -> None:
         if self.listener is not None:
@@ -157,6 +172,13 @@ class ReferenceClusterSim:
         seeded_groups: set[str] = set()
         wm_state = {"gated": False}
         wm_emitted: set[int] = set()
+        # suspension state (PR 9) — LOCKSTEP with the optimized core
+        resume_heap: list[tuple[float, int, int]] = []
+        held: dict[int, float] = {}
+        spilled: set[int] = set()
+        penalized: set[int] = set()
+        held_total = 0.0
+        rseq = 0
         _sched_clock = 0.0
         _decisions = 0
         _key_evals = 0
@@ -257,6 +279,43 @@ class ReferenceClusterSim:
             running.append(r)
             deferred.append(("on_swap_in", r.req.agent_id, r.req.rid, now))
 
+        def suspend(agent: SimAgent, delay: float, now: float) -> None:
+            """Park a closed-loop agent for ``delay`` seconds of think
+            time — LOCKSTEP with the optimized core's ``_suspend``."""
+            nonlocal held_total, rseq
+            aid = agent.agent_id
+            stage = agent.next_stage - 1
+            until = now + float(delay)
+            h = 0.0
+            if self.suspend_retention == "hold":
+                spec = agent.stages[stage][-1]
+                h = float(spec.prefill + spec.decode)
+            held[aid] = h
+            held_total += h
+            if self.suspend_retention == "spill":
+                spilled.add(aid)
+            rseq += 1
+            heapq.heappush(resume_heap, (until, rseq, aid))
+            result.suspensions += 1
+            if held_total > result.held_peak:
+                result.held_peak = held_total
+            self.sched.on_agent_suspend(aid, now)
+            self._emit("on_suspend", aid, stage, until, now)
+
+        def spill_oldest_held() -> float:
+            """Escalate hold→spill on the oldest held agent (freed KV) —
+            memory pressure victimizes suspended agents before running
+            ones.  LOCKSTEP with ``_spill_oldest_held``."""
+            nonlocal held_total
+            for aid, h in held.items():
+                if h > 0.0:
+                    held[aid] = 0.0
+                    held_total -= h
+                    spilled.add(aid)
+                    result.suspend_spills += 1
+                    return h
+            return 0.0
+
         def admit(now: float) -> None:
             """Admission pass: swapped queue first, then waiting (vLLM)."""
             nonlocal _sched_clock, _decisions, _key_evals
@@ -264,7 +323,7 @@ class ReferenceClusterSim:
             # reported scheduler overhead measures policy code only
             deferred: list[tuple] = []
             t0 = _time.perf_counter()
-            free = self.m - occupancy(now)
+            free = self.m - occupancy(now) - held_total
             # swapped queue has absolute priority and blocks new admissions
             _key_evals += len(swapped)
             swapped.sort(key=lambda r: self.sched.request_key(r.req, now))
@@ -272,6 +331,10 @@ class ReferenceClusterSim:
                 r = swapped[0]
                 need = r.req.spec.prefill + r.decoded_at_last
                 if need > free:
+                    sp = spill_oldest_held()
+                    if sp > 0.0:
+                        free += sp
+                        continue
                     break
                 swapped.pop(0)
                 resume(r, now, deferred)
@@ -291,6 +354,10 @@ class ReferenceClusterSim:
                         not running and req.spec.prefill >= self.m
                     )
                     if not (fits or solo_oversized):
+                        sp = spill_oldest_held()
+                        if sp > 0.0:
+                            free += sp
+                            continue
                         break
                     # watermark admission gate — LOCKSTEP with the
                     # optimized core's ``_admit`` (same expressions, same
@@ -344,7 +411,7 @@ class ReferenceClusterSim:
             _decisions += 1
             _sched_clock += _time.perf_counter() - t0
             result.peak_occupancy = max(
-                result.peak_occupancy, occupancy(now)
+                result.peak_occupancy, occupancy(now) + held_total
             )
             for ev in deferred:
                 self._emit(*ev)
@@ -398,11 +465,13 @@ class ReferenceClusterSim:
             if growing == 0:
                 return float("inf")
             rate = growing * self.decode_rate
-            return now + max(0.0, free) / rate
+            return now + max(0.0, free - held_total) / rate
 
         # main event loop
-        while ai < len(arrivals) or waiting or running or swapped:
+        while (ai < len(arrivals) or waiting or running or swapped
+               or resume_heap):
             t_arr = arrivals[ai].arrival if ai < len(arrivals) else float("inf")
+            t_res = resume_heap[0][0] if resume_heap else float("inf")
             t_fin = min(
                 (r.fin for r in running),
                 default=float("inf"),
@@ -412,7 +481,7 @@ class ReferenceClusterSim:
                 default=float("inf"),
             )
             t_sat = saturation_time(t) if running else float("inf")
-            t_next = min(t_arr, t_fin, t_sat, t_pref)
+            t_next = min(t_arr, t_res, t_fin, t_sat, t_pref)
             if t_next == float("inf"):
                 # nothing running/finishing: only waiting items blocked by
                 # swapped priority or memory — should not happen if pool can
@@ -443,6 +512,33 @@ class ReferenceClusterSim:
                 admit(t)
                 continue
 
+            # resumes: think time ended (one per trip, like arrivals)
+            if t_res <= t + 1e-12:
+                _, _, aid = heapq.heappop(resume_heap)
+                if aid in spilled and aid not in penalized:
+                    # spilled KV pays the swap-in restore surcharge before
+                    # the next stage submits — one deterministic penalty
+                    # trip (LOCKSTEP with the optimized core)
+                    penalized.add(aid)
+                    rseq += 1
+                    heapq.heappush(
+                        resume_heap, (t + self.swap_penalty, rseq, aid)
+                    )
+                    continue
+                h = held.pop(aid, 0.0)
+                held_total -= h
+                spilled.discard(aid)
+                penalized.discard(aid)
+                result.resumes += 1
+                agent = by_id[aid]
+                _t0 = _time.perf_counter()
+                self.sched.on_agent_resume(aid, t)
+                _sched_clock += _time.perf_counter() - _t0
+                self._emit("on_resume", aid, t)
+                submit_stage(agent, t)
+                admit(t)
+                continue
+
             # completions
             done = [
                 r
@@ -461,7 +557,17 @@ class ReferenceClusterSim:
                             agent.next_stage - 1, t,
                         )
                         if agent.next_stage < len(agent.stages):
-                            submit_stage(agent, t)
+                            delays = agent.resume_delays
+                            delay = (
+                                float(delays[agent.next_stage])
+                                if delays is not None
+                                and agent.next_stage < len(delays)
+                                else 0.0
+                            )
+                            if delay > 0.0:
+                                suspend(agent, delay, t)
+                            else:
+                                submit_stage(agent, t)
                         else:
                             agent.finish = t
                             result.finish[agent.agent_id] = t
@@ -475,29 +581,37 @@ class ReferenceClusterSim:
                 admit(t)
                 continue
 
-            # saturation: swap out the worst-priority running inference
-            if occupancy(t) >= self.m - 1e-6 and len(running) > 1:
-                _key_evals += len(running)
-                victim = max(
-                    running, key=lambda r: self.sched.request_key(r.req, t)
-                )
-                running.remove(victim)
-                victim.swapped = True
-                swapped.append(victim)
-                result.swaps += 1
-                self._emit(
-                    "on_swap_out", victim.req.agent_id, victim.req.rid, t
-                )
-                continue
-            if occupancy(t) >= self.m - 1e-6 and len(running) <= 1:
+            # saturation: swap out the worst-priority running inference —
+            # but memory pressure victimizes suspended agents first
+            occ_sat = occupancy(t) + held_total if running else 0.0
+            if occ_sat >= self.m - 1e-6 and running:
+                if held_total > 0.0:
+                    spill_oldest_held()
+                    continue
+                if len(running) > 1:
+                    _key_evals += len(running)
+                    victim = max(
+                        running,
+                        key=lambda r: self.sched.request_key(r.req, t),
+                    )
+                    running.remove(victim)
+                    victim.swapped = True
+                    swapped.append(victim)
+                    result.swaps += 1
+                    self._emit(
+                        "on_swap_out", victim.req.agent_id, victim.req.rid, t
+                    )
+                    continue
                 # single sequence saturating the pool: let it finish —
-                # but never past the next arrival, which must be processed
-                # on time (assume p + d < M for all workloads; see App. B
-                # assumption)
+                # but never past the next arrival or resume, which must be
+                # processed on time (assume p + d < M for all workloads;
+                # see App. B assumption)
                 r = running[0]
                 fin = r.fin
                 if ai < len(arrivals):
                     fin = min(fin, arrivals[ai].arrival)
+                if resume_heap:
+                    fin = min(fin, resume_heap[0][0])
                 account(fin)
                 t = fin
                 continue

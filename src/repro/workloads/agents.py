@@ -257,6 +257,12 @@ class ClosedLoopClass:
     #: prompt — identical across all sessions of the family, so a
     #: prefix-aware KV cache reuses it across agents (and across turns)
     sys_prefix: int = 0
+    #: [lo, hi] tool-call think time (workload seconds) between turns —
+    #: the wall-clock gap while the agent executes tools / awaits a human
+    #: before its next stage submits.  (0, 0) disables suspension (the
+    #: default: legacy families consume no extra RNG draws and stay
+    #: bit-identical to their pre-suspension streams)
+    think: tuple = (0.0, 0.0)
 
 
 CLOSED_LOOP_CLASSES: dict[str, ClosedLoopClass] = {
@@ -287,6 +293,14 @@ CLOSED_LOOP_CLASSES: dict[str, ClosedLoopClass] = {
     "batch": ClosedLoopClass(
         "batch", (1, 3), (900, 200, 1.5), (320, 80, 1.5), carry=0.25,
         sys_prefix=256,
+    ),
+    # --- think-time-heavy family (PR 9): agentic tool use where each
+    # turn's decode is short but the tool call between turns takes
+    # seconds of wall clock — the agent holds no decode slot while it
+    # thinks, and its KV falls under the backend's retention policy ---
+    "tooluse": ClosedLoopClass(
+        "tooluse", (3, 8), (220, 50, 2.0), (40, 12, 2.0), carry=0.3,
+        fanout=(1, 2), sys_prefix=384, think=(4.0, 12.0),
     ),
 }
 
@@ -370,6 +384,12 @@ class ClosedLoopSession:
     #: ``Backend.submit_stage``)
     last_prompt_ids: Optional[list] = None
     last_cached_hints: Optional[list] = None
+    #: think time preceding the most recently sampled stage (seconds) —
+    #: the serving layer forwards it as ``submit_stage(resume_delay=...)``
+    #: so the backend suspends the agent for that long first.  ``None``
+    #: for think-free families (kept ``None`` without touching the RNG,
+    #: preserving their pre-suspension demand streams bit-for-bit)
+    last_resume_delay: Optional[float] = None
 
     def _prompt_for(self, p: int) -> np.ndarray:
         """Canonical ids for a ``p``-token prompt: the family's shared
@@ -420,6 +440,11 @@ class ClosedLoopSession:
         if self.cls.stop_prob and self._rng.random() < self.cls.stop_prob:
             return None
         self._turn += 1
+        lo, hi = self.cls.think
+        if hi > 0.0:
+            self.last_resume_delay = float(lo + (hi - lo) * self._rng.random())
+        else:
+            self.last_resume_delay = None
         return self._sample_stage()
 
 

@@ -4,7 +4,8 @@ For identical workloads served through :class:`repro.api.AgentService` on
 the sim, engine, and replicated backends, every agent's event stream must
 satisfy the same lifecycle grammar:
 
-    Arrival <= Admit <= (SwapOut/SwapIn)* <= StageComplete* <= AgentComplete
+    Arrival <= Admit <= (SwapOut/SwapIn)* <= StageComplete*
+            <= (Suspended <= Resumed)* <= AgentComplete
 
 with timestamps monotone non-decreasing in workload seconds (in emission
 order), per-request ``TokenGenerated`` counts summing to each stage's
@@ -32,8 +33,10 @@ from repro.api import (
     AgentArrived,
     AgentCompleted,
     AgentRequeued,
+    AgentResumed,
     AgentService,
     AgentSpec,
+    AgentSuspended,
     EngineBackend,
     ReplicatedBackend,
     RequestAdmitted,
@@ -79,6 +82,16 @@ def assert_conformant_stream(
     multiset check is skipped for migrated agents — the in-progress stage
     is replayed from its start, so its per-rid counts legitimately repeat.
     Returns the stage count observed on the FINAL replica.
+
+    Suspension grammar (PR 9), checked unconditionally: an
+    ``AgentSuspended`` may appear only immediately after a
+    ``StageCompleted`` (tool-call think time starts at a stage boundary)
+    with ``until >= time``; while the suspension is open the agent emits
+    NO admissions, tokens, swaps, or stage completions; the suspension is
+    closed by ``AgentResumed`` or — on a crashed replica — by
+    ``AgentRequeued`` (the resume is emitted just before the requeue);
+    at most one suspension is open at a time, an agent never completes
+    suspended, and for never-requeued agents suspensions == resumes.
     """
     evs = handle.events
     aid = handle.agent_id
@@ -98,13 +111,46 @@ def assert_conformant_stream(
     token_counts: dict = {}
     stages_seen = 0
     requeues = 0
+    suspended = False
+    suspensions = 0
+    resumes = 0
+    prev_ev = evs[0]
     cur_replica = evs[0].replica
     for ev in evs[1:-1]:
         assert ev.agent_id == aid
         if expect_replica:
             assert ev.replica is not None, f"agent {aid}: {ev} lacks replica"
+        if suspended:
+            assert isinstance(ev, (AgentResumed, AgentRequeued)), (
+                f"agent {aid}: {type(ev).__name__} emitted while "
+                f"suspended — a thinking agent holds no decode slot"
+            )
+        if isinstance(ev, AgentSuspended):
+            assert isinstance(prev_ev, StageCompleted), (
+                f"agent {aid}: AgentSuspended after "
+                f"{type(prev_ev).__name__}, not a StageCompleted — "
+                f"think time starts at a stage boundary"
+            )
+            assert ev.until >= ev.time - 1e-9, (
+                f"agent {aid}: suspension resumes in the past "
+                f"({ev.until} < {ev.time})"
+            )
+            suspended = True
+            suspensions += 1
+            prev_ev = ev
+            continue
+        if isinstance(ev, AgentResumed):
+            assert suspended, (
+                f"agent {aid}: AgentResumed without an open suspension"
+            )
+            suspended = False
+            resumes += 1
+            prev_ev = ev
+            continue
+        prev_ev = ev
         if isinstance(ev, AgentRequeued):
             assert allow_requeue, f"agent {aid}: unexpected AgentRequeued"
+            suspended = False
             if expect_replica:
                 assert ev.from_replica == cur_replica, (
                     f"agent {aid}: requeued from replica "
@@ -160,6 +206,12 @@ def assert_conformant_stream(
     assert not any(swapped_out.values()), (
         f"agent {aid}: completed while a request was swapped out"
     )
+    assert not suspended, f"agent {aid}: completed while suspended"
+    if requeues == 0:
+        assert suspensions == resumes, (
+            f"agent {aid}: {suspensions} suspensions vs {resumes} "
+            f"resumes with no failover migration"
+        )
     if expect_tokens:
         assert token_counts, f"agent {aid}: no TokenGenerated events"
     if token_demands is not None and requeues == 0:

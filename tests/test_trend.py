@@ -163,6 +163,7 @@ def test_main_writes_out_and_discovers_defaults(bench_pair, tmp_path,
         "BENCH_cache.json", "BENCH_cache_quick.json",
         "BENCH_slo.json", "BENCH_slo_quick.json",
         "BENCH_faults.json", "BENCH_faults_quick.json",
+        "BENCH_suspend.json", "BENCH_suspend_quick.json",
     )
 
 
@@ -259,6 +260,70 @@ def test_render_faults_golden_rows(tmp_path):
     )
     assert any(
         "Engine fleet crash: 2 requeued, 4 completed on the survivor" in ln
+        for ln in lines
+    )
+
+
+SUSPEND_DATA = {
+    "benchmark": "suspend_perf",
+    "quick": True,
+    "config": {
+        "replicas": 2, "agents": 12, "family": "tooluse",
+        "max_retention_jct_ratio": 3.0,
+    },
+    "gates": {
+        "suspend_off_bit_identical": True,
+        "think_fleet_deterministic": True,
+        "drop_evictions_lt_hold": True,
+        "hold_escalates_under_pressure": True,
+    },
+    "retention_cells": [
+        {
+            "seed": 7,
+            "per_retention": {
+                "hold": {"swaps": 5, "suspensions": 31, "resumes": 31,
+                         "suspend_spills": 52, "held_peak": 1184.0,
+                         "jct_mean": 14.91, "max_jct": 36.02},
+                "drop": {"swaps": 5, "suspensions": 31, "resumes": 31,
+                         "suspend_spills": 0, "held_peak": 0.0,
+                         "jct_mean": 14.82, "max_jct": 35.48},
+            },
+            "evictions_hold": 57, "evictions_drop": 5,
+            "max_jct_spread": 1.02,
+        },
+    ],
+    "engine_retention": {
+        "agents": 6,
+        "per_retention": {
+            "hold": {"swaps": 23, "suspensions": 18, "resumes": 18,
+                     "suspend_spills": 18},
+        },
+    },
+}
+
+
+def test_render_suspend_golden_rows(tmp_path):
+    path = tmp_path / "BENCH_suspend_quick.json"
+    path.write_text(json.dumps(SUSPEND_DATA))
+    md = render([path])
+    lines = md.splitlines()
+    assert ("## BENCH_suspend_quick.json — think-time suspension + KV "
+            "retention (`benchmarks/perf_suspend.py`)") in lines
+    assert any(
+        "Tier: **quick (CI)**" in ln and "12 tooluse sessions" in ln
+        and "suspend-off bit-identical: **True**" in ln
+        and "drop evicts < hold: **True**" in ln
+        for ln in lines
+    )
+    assert "| 7 | hold | 5 | 31 | 52 | 1,184.0 | 14.91 | 36.02 |" in lines
+    assert "| 7 | drop | 5 | 31 | 0 | 0.00 | 14.82 | 35.48 |" in lines
+    assert any(
+        "evictions hold 57 vs drop 5" in ln
+        and "max-JCT spread 1.02" in ln for ln in lines
+    )
+    assert any(
+        "Engine retention (6 sessions, tight pool)" in ln
+        and "hold: 18 suspensions, 18 escalations, swaps 23" in ln
         for ln in lines
     )
 
