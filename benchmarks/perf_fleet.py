@@ -1,0 +1,572 @@
+"""Fleet concurrency benchmark: bit-identity, overlap speedup, streaming.
+
+    PYTHONPATH=src python -m benchmarks.perf_fleet [--quick] [--out PATH]
+
+The PR 10 tracked benchmark for concurrent fleet advancement with
+load-triggered work stealing.  Cells, each with its in-band gate:
+
+  * **bit-identity gate** — run IN-BAND before anything is recorded:
+    ``fleet_workers > 1`` must reproduce the sequential lockstep loop
+    event-for-event (finish/jct/event_counts) on a plain open-loop fleet,
+    under a crash plan with the watchdog and work stealing armed, and on
+    a closed-loop workload with suspensions.  Any divergence aborts the
+    run: the concurrency machinery is an execution strategy, never a
+    semantics change.
+  * **device-overlap speedup** — eight sim children are wrapped in a
+    shim that sleeps (GIL released) for a fixed slice on every ``run``
+    call, modeling the device compute a real engine child performs per
+    advancement slice.  The sequential loop pays 8 sleeps per slice,
+    the 8-worker pool pays ~1; the measured speedup is gated at
+    ``MIN_OVERLAP_SPEEDUP`` (this gate is honest on a single-core host
+    because the sleeps overlap regardless of CPU count).
+  * **pure-Python advancement** — the same fleet with no sleep shim:
+    real sim event processing only.  Speedup here needs real cores, so
+    the >= 2x gate applies only when ``os.cpu_count() >= 4``; below
+    that the cell records its numbers with ``gate_waived_single_core``
+    set (the GIL serializes pure-Python children on one core).
+  * **heterogeneous calibration** — a 2:1 mixed-capacity fleet under
+    the capacity-normalized ``least_loaded`` router: the wide replicas
+    must complete strictly more agents than the narrow ones (the raw
+    live-agent count would split them evenly), and the concurrent run
+    must stay bit-identical to the sequential one.
+  * **streaming scale** — ``--quick``: tens of thousands of agents;
+    full tier: ONE MILLION agents through a 4-replica fleet in
+    constant memory (``retain_results=False`` children,
+    ``retain_agents=False`` fleet, periodic ``compact()`` sweeps).
+    Events are folded into a running CRC as they are emitted — nothing
+    is retained — and the cell runs BOTH modes in the same invocation:
+    the concurrent+stealing run must produce the identical event CRC,
+    completion count, and reconciled global clock as the sequential
+    run.  Peak tracked-state sizes are gated at a constant bound
+    independent of the agent count.
+
+Results land in ``BENCH_fleet.json`` at the repo root (CI uploads the
+``--quick`` variant per commit; the committed file is the full-tier
+record); ``benchmarks/trend.py`` renders the trajectory alongside the
+other BENCH files.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+import zlib
+from pathlib import Path
+
+import numpy as np
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_OUT = REPO_ROOT / "BENCH_fleet.json"
+
+REPLICAS = 4              # identity / hetero / streaming fleets
+OVERLAP_REPLICAS = 8      # device-overlap + pure-python fleets
+TOTAL_KV = 1200.0         # per replica
+STEAL = 1.3
+STEAL_INTERVAL = 0.5
+#: device-overlap gate: 8 children sleeping per slice must advance at
+#: least this much faster on an 8-worker pool (measured ~5-7x)
+MIN_OVERLAP_SPEEDUP = 2.0
+#: pure-python gate (only enforced with >= this many cores)
+MIN_CORES_FOR_PY_GATE = 4
+MIN_PY_SPEEDUP = 2.0
+#: streaming cell: peak tracked agents must stay under this constant
+#: bound regardless of the total agent count (quick and full tier share
+#: it — that is the point)
+MAX_TRACKED_AGENTS = 60_000
+
+
+def fleet_specs(seed: int, n: int, *, window: float = 6.0,
+                stages: int = 2):
+    from repro.api import AgentSpec
+    from repro.core import InferenceSpec
+
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        st = [
+            [InferenceSpec(int(rng.integers(120, 400)),
+                           int(rng.integers(20, 80)))]
+            for _ in range(stages)
+        ]
+        out.append(AgentSpec(stages=st,
+                             arrival=float(rng.uniform(0.0, window)),
+                             name=f"a{i}"))
+    return out
+
+
+# ------------------------------------------------- in-band identity gate
+
+
+def _run_fleet(seed: int, *, workers=None, plan=None, watchdog=None,
+               steal=None, closed_loop=False):
+    from repro.api import AgentService
+    from repro.api.workload import specs_from_closed_loop
+
+    svc = AgentService.sim(
+        replicas=REPLICAS, total_kv=TOTAL_KV, token_events=True,
+        fault_plan=plan, watchdog_timeout=watchdog,
+        fleet_workers=workers, steal_threshold=steal,
+        steal_interval=STEAL_INTERVAL if steal is not None else 1.0,
+    )
+    if closed_loop:
+        rng = np.random.default_rng(seed)
+        specs = specs_from_closed_loop(rng, 10, 6.0,
+                                       classes=("chat", "tooluse"))
+    else:
+        specs = fleet_specs(seed, 20)
+    svc.submit_many(specs)
+    res = svc.drain()
+    return res
+
+
+def identity_gate(seed: int) -> dict:
+    """Sequential vs concurrent, bit-for-bit, across the serving modes.
+
+    Aborts the whole benchmark on any divergence — no throughput number
+    is worth recording if the concurrent loop changed semantics.
+    """
+    from repro.api import FaultPlan
+
+    modes = {
+        "open_loop": dict(),
+        "crash_steal": dict(plan=FaultPlan().crash(1, 2.5),
+                            watchdog=0.5, steal=STEAL),
+        "closed_loop": dict(closed_loop=True),
+    }
+    checked = []
+    for name, kw in modes.items():
+        a = _run_fleet(seed, workers=None, **kw)
+        b = _run_fleet(seed, workers=REPLICAS, **kw)
+        if (a.finish != b.finish or a.jct != b.jct
+                or a.event_counts != b.event_counts):
+            raise AssertionError(
+                f"identity gate ({name}, seed {seed}): concurrent "
+                f"advancement diverged from the sequential loop"
+            )
+        if b.metrics["fleet_workers"] != REPLICAS:
+            raise AssertionError(
+                f"identity gate ({name}): pool not engaged "
+                f"({b.metrics['fleet_workers']} workers)"
+            )
+        checked.append(name)
+    return {"seed": seed, "modes": checked, "match": True,
+            "compared": ["finish", "jct", "event_counts"]}
+
+
+# --------------------------------------------------- device-overlap cell
+
+
+class _DeviceShim:
+    """Backend wrapper that sleeps (GIL released) on every ``run`` call,
+    modeling the per-slice device compute of a real engine child."""
+
+    def __init__(self, inner, delay: float):
+        self._inner = inner
+        self._delay = delay
+
+    def run(self, until: float) -> None:
+        time.sleep(self._delay)
+        self._inner.run(until)
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+def _drive_sliced(fleet, specs, *, horizon: float, slices: int):
+    for i, s in enumerate(specs):
+        fleet.submit(s, i)
+    t0 = time.perf_counter()
+    for k in range(1, slices + 1):
+        fleet.run(horizon * k / slices)
+    res = fleet.drain()
+    wall = time.perf_counter() - t0
+    fleet.close()
+    return res, wall
+
+
+def _overlap_fleet(workers, delay, seed):
+    from repro.api import ReplicatedBackend, SimBackend
+
+    children = [
+        SimBackend("justitia", total_kv=TOTAL_KV)
+        for _ in range(OVERLAP_REPLICAS)
+    ]
+    if delay > 0.0:
+        children = [_DeviceShim(c, delay) for c in children]
+    return ReplicatedBackend(children, router="round_robin", seed=seed,
+                             fleet_workers=workers)
+
+
+def overlap_cell(seed: int, *, slices: int, delay: float = 0.005) -> dict:
+    """8 sleeping children, sequential vs 8-worker pool: the sleeps must
+    overlap.  Gated >= MIN_OVERLAP_SPEEDUP even on one core."""
+    runs = {}
+    for workers in (None, OVERLAP_REPLICAS):
+        specs = fleet_specs(seed, 24, window=8.0)
+        fleet = _overlap_fleet(workers, delay, seed)
+        runs[workers] = _drive_sliced(fleet, specs, horizon=60.0,
+                                      slices=slices)
+    (res_a, wall_a) = runs[None]
+    (res_b, wall_b) = runs[OVERLAP_REPLICAS]
+    if res_a.finish != res_b.finish or res_a.jct != res_b.jct:
+        raise AssertionError(
+            f"overlap cell (seed {seed}): shimmed concurrent run "
+            f"diverged from sequential"
+        )
+    speedup = wall_a / max(wall_b, 1e-9)
+    if speedup < MIN_OVERLAP_SPEEDUP:
+        raise AssertionError(
+            f"overlap cell (seed {seed}): {speedup:.2f}x < "
+            f"{MIN_OVERLAP_SPEEDUP}x — per-slice device time is not "
+            f"overlapping across children"
+        )
+    return {
+        "seed": seed,
+        "replicas": OVERLAP_REPLICAS,
+        "slices": slices,
+        "slice_sleep_s": delay,
+        "wall_sequential_s": round(wall_a, 3),
+        "wall_concurrent_s": round(wall_b, 3),
+        "speedup": round(speedup, 2),
+        "gate": MIN_OVERLAP_SPEEDUP,
+    }
+
+
+def python_cell(seed: int, *, slices: int) -> dict:
+    """Same fleet, no sleep shim: pure-Python sim advancement.  The
+    speedup gate needs real cores — waived (numbers still recorded)
+    below MIN_CORES_FOR_PY_GATE."""
+    runs = {}
+    for workers in (None, OVERLAP_REPLICAS):
+        specs = fleet_specs(seed, 640, window=60.0, stages=3)
+        fleet = _overlap_fleet(workers, 0.0, seed)
+        runs[workers] = _drive_sliced(fleet, specs, horizon=240.0,
+                                      slices=slices)
+    (res_a, wall_a) = runs[None]
+    (res_b, wall_b) = runs[OVERLAP_REPLICAS]
+    if res_a.finish != res_b.finish or res_a.jct != res_b.jct:
+        raise AssertionError(
+            f"python cell (seed {seed}): concurrent run diverged"
+        )
+    cores = os.cpu_count() or 1
+    speedup = wall_a / max(wall_b, 1e-9)
+    waived = cores < MIN_CORES_FOR_PY_GATE
+    if not waived and speedup < MIN_PY_SPEEDUP:
+        raise AssertionError(
+            f"python cell (seed {seed}): {speedup:.2f}x < "
+            f"{MIN_PY_SPEEDUP}x with {cores} cores"
+        )
+    return {
+        "seed": seed,
+        "replicas": OVERLAP_REPLICAS,
+        "agents": 640,
+        "cpu_count": cores,
+        "wall_sequential_s": round(wall_a, 3),
+        "wall_concurrent_s": round(wall_b, 3),
+        "speedup": round(speedup, 2),
+        "gate": MIN_PY_SPEEDUP,
+        "gate_waived_single_core": waived,
+    }
+
+
+# ----------------------------------------------- heterogeneous fleet cell
+
+
+def hetero_cell(seed: int) -> dict:
+    """2:1 mixed-capacity fleet under capacity-normalized least_loaded:
+    wide replicas must serve strictly more agents, and the concurrent
+    run must match the sequential one bit-for-bit."""
+    from repro.api import ReplicatedBackend, SimBackend
+
+    caps = (2 * TOTAL_KV, 2 * TOTAL_KV, TOTAL_KV, TOTAL_KV)
+
+    def build(workers):
+        children = [SimBackend("justitia", total_kv=m) for m in caps]
+        return ReplicatedBackend(
+            children, router="least_loaded", seed=seed,
+            fleet_workers=workers,
+            steal_threshold=STEAL, steal_interval=STEAL_INTERVAL,
+        )
+
+    runs = {}
+    for workers in (None, REPLICAS):
+        specs = fleet_specs(seed, 48, window=10.0)
+        fleet = build(workers)
+        for i, s in enumerate(specs):
+            fleet.submit(s, i)
+        fleet.run(200.0)
+        res = fleet.drain()
+        runs[workers] = (dict(res.finish), dict(res.jct), res.metrics)
+        fleet.close()
+    (fin_a, jct_a, met_a), (fin_b, jct_b, met_b) = \
+        runs[None], runs[REPLICAS]
+    if fin_a != fin_b or jct_a != jct_b \
+            or met_a["virtual_times"] != met_b["virtual_times"]:
+        raise AssertionError(
+            f"hetero cell (seed {seed}): concurrent heterogeneous run "
+            f"diverged from sequential"
+        )
+    served = [row["agents"] for row in met_b["per_replica"]]
+    wide, narrow = served[0] + served[1], served[2] + served[3]
+    if not wide > narrow:
+        raise AssertionError(
+            f"hetero cell (seed {seed}): wide replicas served {wide} vs "
+            f"{narrow} — least_loaded is not capacity-normalized"
+        )
+    return {
+        "seed": seed,
+        "capacities_kv": list(caps),
+        "agents": 48,
+        "completions_wide": wide,
+        "completions_narrow": narrow,
+        "steals": met_b.get("steals", 0),
+        "bit_identical": True,
+    }
+
+
+# ------------------------------------------------------- streaming cell
+
+
+class _HashTape:
+    """Constant-memory event sink: folds every listener callback into a
+    running CRC32 instead of retaining anything."""
+
+    def __init__(self):
+        self.crc = 0
+        self.events = 0
+        self.completed = 0
+
+    def __getattr__(self, name):
+        if not name.startswith("on_"):
+            raise AttributeError(name)
+
+        def cb(*a, **kw):
+            payload = repr((name, a, tuple(sorted(kw.items()))))
+            self.crc = zlib.crc32(payload.encode(), self.crc)
+            self.events += 1
+            if name == "on_agent_complete":
+                self.completed += 1
+
+        setattr(self, name, cb)
+        return cb
+
+
+def _streaming_run(n_agents: int, *, workers, seed: int) -> dict:
+    """Pace n_agents through a streaming fleet; return CRC + peaks."""
+    from repro.api import AgentSpec, ReplicatedBackend, SimBackend
+    from repro.core import InferenceSpec
+
+    children = [
+        SimBackend("justitia", total_kv=TOTAL_KV, retain_results=False)
+        for _ in range(REPLICAS)
+    ]
+    fleet = ReplicatedBackend(
+        children, router="round_robin", seed=seed,
+        fleet_workers=workers,
+        steal_threshold=STEAL, steal_interval=STEAL_INTERVAL,
+        retain_agents=False,
+    )
+    tape = _HashTape()
+    fleet.set_listener(tape)
+
+    # arrival pacing: drive the fleet at ~60% of aggregate capacity so
+    # the backlog stays bounded and compact() can actually retire state
+    rng = np.random.default_rng(seed)
+    mean_cost = float(np.mean([
+        s.resolved_costs()[0] for s in fleet_specs(seed, 64)
+    ]))
+    rate = 0.6 * sum(fleet.virtual_capacities) / mean_cost  # agents/s
+    batch = min(10_000, max(1_000, n_agents // 20))
+    lag = 10.0  # compact() retention window (workload seconds)
+
+    peak_specs = peak_by_id = 0
+    aid = 0
+    t0 = time.perf_counter()
+    while aid < n_agents:
+        hi = min(aid + batch, n_agents)
+        while aid < hi:
+            p = int(rng.integers(80, 240))
+            d = int(rng.integers(10, 40))
+            fleet.submit(
+                AgentSpec(stages=[[InferenceSpec(p, d)]],
+                          arrival=aid / rate),
+                aid,
+            )
+            aid += 1
+        peak_specs = max(peak_specs, len(fleet._specs))
+        horizon = aid / rate
+        fleet.run(horizon)
+        fleet.compact(max(0.0, horizon - lag))
+        peak_specs = max(peak_specs, len(fleet._specs))
+        peak_by_id = max(peak_by_id,
+                         sum(len(c.sim._by_id) for c in children))
+    # flush the tail: advance until every child is idle
+    t = n_agents / rate
+    while sum(c.in_flight for c in children) > 0:
+        t += 5.0
+        fleet.run(t)
+    fleet.drain()
+    snap = fleet.compact(fleet.now)
+    wall = time.perf_counter() - t0
+    residual = {
+        "specs": len(fleet._specs),
+        "assignment": len(fleet.assignment),
+        "virtual_finish": len(fleet.global_clock.virtual_finish),
+        "by_id": sum(len(c.sim._by_id) for c in children),
+        "compact_queue": len(fleet._compact_done),
+    }
+    steals = len(fleet._steals)
+    fleet.close()
+    return {
+        "crc": tape.crc,
+        "events": tape.events,
+        "completed": tape.completed,
+        "peak_specs": peak_specs,
+        "peak_by_id": peak_by_id,
+        "residual": residual,
+        "virtual_times": [round(v, 6) for v in snap.virtual_times],
+        "steals": steals,
+        "wall_s": round(wall, 2),
+        "agents_per_s": round(n_agents / max(wall, 1e-9), 1),
+    }
+
+
+def streaming_cell(n_agents: int, seed: int) -> dict:
+    """Both modes in the same invocation; gate on identical CRC streams,
+    completion counts, reconciled clocks, and constant-bounded peaks."""
+    seq = _streaming_run(n_agents, workers=None, seed=seed)
+    con = _streaming_run(n_agents, workers=REPLICAS, seed=seed)
+    for key in ("crc", "events", "completed", "virtual_times", "steals"):
+        if seq[key] != con[key]:
+            raise AssertionError(
+                f"streaming cell ({n_agents} agents): {key} diverged — "
+                f"sequential {seq[key]!r} vs concurrent {con[key]!r}"
+            )
+    if seq["completed"] != n_agents:
+        raise AssertionError(
+            f"streaming cell: {seq['completed']} of {n_agents} agents "
+            f"completed"
+        )
+    for run in (seq, con):
+        if run["peak_specs"] > MAX_TRACKED_AGENTS \
+                or run["peak_by_id"] > MAX_TRACKED_AGENTS:
+            raise AssertionError(
+                f"streaming cell: peak tracked state "
+                f"({run['peak_specs']} specs, {run['peak_by_id']} sim "
+                f"agents) exceeds the constant bound "
+                f"{MAX_TRACKED_AGENTS} — memory is not O(1) in agents"
+            )
+        if any(run["residual"].values()):
+            raise AssertionError(
+                f"streaming cell: residual per-agent state after final "
+                f"compact: {run['residual']}"
+            )
+    return {
+        "agents": n_agents,
+        "seed": seed,
+        "event_crc": seq["crc"],
+        "events": seq["events"],
+        "steals": seq["steals"],
+        "peak_specs": max(seq["peak_specs"], con["peak_specs"]),
+        "peak_sim_agents": max(seq["peak_by_id"], con["peak_by_id"]),
+        "tracked_bound": MAX_TRACKED_AGENTS,
+        "wall_sequential_s": seq["wall_s"],
+        "wall_concurrent_s": con["wall_s"],
+        "agents_per_s_sequential": seq["agents_per_s"],
+        "agents_per_s_concurrent": con["agents_per_s"],
+        "bit_identical": True,
+    }
+
+
+# ----------------------------------------------------------------- main
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small streaming tier (the CI perf stage)")
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    ap.add_argument("--streaming-agents", type=int, default=None,
+                    help="override the streaming cell size")
+    args = ap.parse_args(argv)
+
+    seed = 7
+    n_stream = args.streaming_agents or (
+        20_000 if args.quick else 1_000_000
+    )
+    slices = 40 if args.quick else 100
+
+    print("== identity gate: concurrent vs sequential, bit-for-bit ==")
+    gate = identity_gate(seed)
+    print(f"   identical across {gate['modes']}")
+
+    cell_overlap = overlap_cell(seed, slices=slices)
+    print(
+        f"overlap: {cell_overlap['wall_sequential_s']:.2f}s -> "
+        f"{cell_overlap['wall_concurrent_s']:.2f}s "
+        f"({cell_overlap['speedup']:.1f}x, gate "
+        f">={MIN_OVERLAP_SPEEDUP}x)"
+    )
+
+    cell_py = python_cell(seed, slices=slices)
+    waived = " [gate waived: single core]" \
+        if cell_py["gate_waived_single_core"] else ""
+    print(
+        f"python : {cell_py['wall_sequential_s']:.2f}s -> "
+        f"{cell_py['wall_concurrent_s']:.2f}s "
+        f"({cell_py['speedup']:.2f}x on {cell_py['cpu_count']} "
+        f"cores){waived}"
+    )
+
+    cell_het = hetero_cell(seed)
+    print(
+        f"hetero : wide {cell_het['completions_wide']} vs narrow "
+        f"{cell_het['completions_narrow']} completions, "
+        f"{cell_het['steals']} steals, bit-identical"
+    )
+
+    cell_stream = streaming_cell(n_stream, seed)
+    print(
+        f"stream : {n_stream:,} agents, crc {cell_stream['event_crc']:#x} "
+        f"identical, peak {cell_stream['peak_specs']:,} tracked "
+        f"({cell_stream['agents_per_s_sequential']:,.0f} -> "
+        f"{cell_stream['agents_per_s_concurrent']:,.0f} agents/s)"
+    )
+
+    out = {
+        "benchmark": "fleet_perf",
+        "quick": bool(args.quick),
+        "config": {
+            "replicas": REPLICAS,
+            "overlap_replicas": OVERLAP_REPLICAS,
+            "total_kv_per_replica": TOTAL_KV,
+            "steal_threshold": STEAL,
+            "steal_interval": STEAL_INTERVAL,
+            "streaming_agents": n_stream,
+            "cpu_count": os.cpu_count(),
+        },
+        "identity_gate": gate,
+        "overlap": cell_overlap,
+        "python": cell_py,
+        "hetero": cell_het,
+        "streaming": cell_stream,
+        "gates": {
+            "concurrent_bit_identical": True,
+            "overlap_speedup_min": MIN_OVERLAP_SPEEDUP,
+            "python_speedup_min": MIN_PY_SPEEDUP,
+            "python_gate_waived_single_core":
+                cell_py["gate_waived_single_core"],
+            "hetero_capacity_normalized": True,
+            "streaming_constant_memory": True,
+        },
+    }
+    path = Path(args.out)
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {path}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -37,6 +37,8 @@ DEFAULT_CANDIDATES = (
     "BENCH_faults_quick.json",
     "BENCH_suspend.json",
     "BENCH_suspend_quick.json",
+    "BENCH_fleet.json",
+    "BENCH_fleet_quick.json",
 )
 
 
@@ -351,6 +353,75 @@ def render_suspend(name: str, data: dict) -> list[str]:
     return lines
 
 
+def render_fleet(name: str, data: dict) -> list[str]:
+    lines = [f"## {name} — concurrent fleet advancement + work stealing "
+             "(`benchmarks/perf_fleet.py`)", ""]
+    tier = "quick (CI)" if data.get("quick") else "full"
+    gates = data.get("gates", {})
+    cfg = data.get("config", {})
+    lines.append(
+        f"Tier: **{tier}** · {cfg.get('replicas', '?')} replicas "
+        f"(streaming), {cfg.get('overlap_replicas', '?')} (overlap) · "
+        f"{cfg.get('cpu_count', '?')} cores · concurrent bit-identical: "
+        f"**{gates.get('concurrent_bit_identical', '?')}** · streaming "
+        f"constant-memory: "
+        f"**{gates.get('streaming_constant_memory', '?')}**"
+    )
+    lines.append("")
+    lines.append("| cell | sequential | concurrent | speedup | gate |")
+    lines.append("|---|---:|---:|---:|---|")
+    ov = data.get("overlap", {})
+    if ov:
+        lines.append(
+            f"| device overlap ({ov.get('slices', '?')} slices x "
+            f"{ov.get('slice_sleep_s', 0) * 1e3:.0f}ms) "
+            f"| {_fmt(ov.get('wall_sequential_s', 0))}s "
+            f"| {_fmt(ov.get('wall_concurrent_s', 0))}s "
+            f"| {ov.get('speedup', '?')}x | >={ov.get('gate', '?')}x |"
+        )
+    py = data.get("python", {})
+    if py:
+        waived = (" (waived: single core)"
+                  if py.get("gate_waived_single_core") else "")
+        lines.append(
+            f"| pure-python ({py.get('agents', '?')} agents, "
+            f"{py.get('cpu_count', '?')} cores) "
+            f"| {_fmt(py.get('wall_sequential_s', 0))}s "
+            f"| {_fmt(py.get('wall_concurrent_s', 0))}s "
+            f"| {py.get('speedup', '?')}x "
+            f"| >={py.get('gate', '?')}x{waived} |"
+        )
+    st = data.get("streaming", {})
+    if st:
+        lines.append(
+            f"| streaming ({st.get('agents', 0):,} agents) "
+            f"| {_fmt(st.get('wall_sequential_s', 0))}s "
+            f"| {_fmt(st.get('wall_concurrent_s', 0))}s "
+            f"| — | event CRC identical |"
+        )
+        lines += [
+            "",
+            f"Streaming scale: {st.get('agents', 0):,} agents in "
+            f"constant memory — peak {st.get('peak_specs', 0):,} tracked "
+            f"fleet entries / {st.get('peak_sim_agents', 0):,} sim agents "
+            f"(bound {st.get('tracked_bound', 0):,}), "
+            f"{st.get('steals', 0)} steals, "
+            f"{_fmt(st.get('agents_per_s_sequential', 0))} -> "
+            f"{_fmt(st.get('agents_per_s_concurrent', 0))} agents/s.",
+        ]
+    het = data.get("hetero", {})
+    if het:
+        lines += [
+            "",
+            f"Heterogeneous calibration (2:1 capacities, least_loaded): "
+            f"wide {het.get('completions_wide', '?')} vs narrow "
+            f"{het.get('completions_narrow', '?')} completions, "
+            f"{het.get('steals', 0)} steals, bit-identical.",
+        ]
+    lines.append("")
+    return lines
+
+
 RENDERERS = {
     "sim_core_perf": render_sim,
     "engine_hot_path_perf": render_engine,
@@ -358,6 +429,7 @@ RENDERERS = {
     "slo_perf": render_slo,
     "faults_perf": render_faults,
     "suspend_perf": render_suspend,
+    "fleet_perf": render_fleet,
 }
 
 

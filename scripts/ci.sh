@@ -25,9 +25,14 @@
 #                 under-budget stall inertness, watermark swap-cut), and
 #                 `benchmarks/perf_suspend.py --quick` (suspend-off
 #                 oracle, think-time KV retention hold/spill/drop,
-#                 graceful hold->spill escalation): each records its
+#                 graceful hold->spill escalation), and
+#                 `benchmarks/perf_fleet.py --quick` (concurrent-vs-
+#                 sequential bit-identity gate, device-overlap speedup,
+#                 streaming constant-memory scale): each records its
 #                 BENCH_*_quick.json; `benchmarks/trend.py` renders
 #                 every BENCH artifact into TREND.md (all uploaded in CI);
+#                 tier-1 additionally re-runs the concurrency suites
+#                 under PYTHONDEVMODE=1 + faulthandler (thread-safety);
 #   4. slow     — `pytest -m slow`: the full kernel/model/training sweeps.
 #                 Run as its own stage so a Pallas-on-CPU container gap
 #                 cannot mask a broken scheduler/serving path.
@@ -72,6 +77,15 @@ python -m pytest -x -q tests/test_event_conformance.py
 echo "== tier-1: pytest (slow tier deselected) =="
 python -m pytest -x -q
 
+# Re-run the concurrency-sensitive suites in dev mode: PYTHONDEVMODE
+# surfaces unjoined threads / unclosed resources and faulthandler dumps
+# every thread on a hang — the concurrent fleet drive (fleet_workers)
+# must stay clean under both.
+echo "== tier-1 thread-safety: concurrency suites under PYTHONDEVMODE =="
+PYTHONDEVMODE=1 PYTHONFAULTHANDLER=1 python -m pytest -x -q \
+    tests/test_fleet_concurrent.py tests/test_faults.py \
+    tests/test_suspend.py
+
 echo "== perf: benchmarks/perf.py --quick (oracle + 1k sim-core bench) =="
 # separate output paths: the committed BENCH_sim.json / BENCH_engine.json
 # are the FULL-tier records (acceptance numbers) and must not be
@@ -92,6 +106,9 @@ python -m benchmarks.perf_faults --quick --out BENCH_faults_quick.json
 
 echo "== perf: benchmarks/perf_suspend.py --quick (suspend-off oracle + think-time retention bench) =="
 python -m benchmarks.perf_suspend --quick --out BENCH_suspend_quick.json
+
+echo "== perf: benchmarks/perf_fleet.py --quick (concurrent-fleet identity + overlap/streaming bench) =="
+python -m benchmarks.perf_fleet --quick --out BENCH_fleet_quick.json
 
 echo "== perf: benchmarks/trend.py -> TREND.md =="
 python -m benchmarks.trend --out TREND.md > /dev/null

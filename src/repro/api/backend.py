@@ -179,6 +179,18 @@ class Backend(Protocol):
         """
         ...
 
+    def cancel(self, agent_id: int) -> bool:
+        """Withdraw a never-admitted agent (fleet work stealing, PR 10).
+
+        Returns True and silently removes the agent — no events, no
+        result entry — when its whole opening stage is still queued (or
+        its arrival is still pending); returns False, leaving the
+        backend untouched, for any agent that was ever admitted,
+        suspended, or has completed.  The fleet uses this to migrate
+        queued backlog off an overloaded replica.
+        """
+        ...
+
     def run(self, until: float) -> None: ...
 
     def drain(self) -> BackendResult: ...
@@ -223,6 +235,7 @@ class SimBackend:
         prefix_cache: bool = False,
         admission_watermark: Optional[tuple] = None,
         suspend_retention: str = "hold",
+        retain_results: bool = True,
     ):
         sched = _resolve_scheduler(scheduler, total_kv, decode_rate)
         self.sim = ClusterSim(
@@ -235,6 +248,7 @@ class SimBackend:
             prefix_cache=prefix_cache,
             admission_watermark=admission_watermark,
             suspend_retention=suspend_retention,
+            retain_results=retain_results,
         )
         self.scheduler = sched
 
@@ -296,6 +310,9 @@ class SimBackend:
             hints=None if hints is None else [list(hints)],
             resume_delay=0.0 if resume_delay is None else float(resume_delay),
         )
+
+    def cancel(self, agent_id: int) -> bool:
+        return self.sim.cancel(agent_id)
 
     def run(self, until: float) -> None:
         # stale horizons (at-or-before the clock) are no-ops by the sim's
@@ -540,6 +557,9 @@ class EngineBackend:
                 else max(1, int(round(resume_delay * self.time_scale)))
             ),
         )
+
+    def cancel(self, agent_id: int) -> bool:
+        return self.engine.cancel(agent_id)
 
     def run(self, until: float) -> None:
         # ceil (with an fp guard): run must advance AT LEAST to `until`, or

@@ -46,6 +46,25 @@ emits ``ReplicaFailed`` + per-agent ``AgentRequeued`` events.  With the
 watchdog disabled, a crashed child with in-flight work raises
 :class:`FleetStalledError` instead of leaving the fleet spinning.
 
+Concurrent advancement + work stealing (PR 10).  ``fleet_workers > 1``
+fans each ``_drive`` slice out on a bounded thread pool: engine children
+release the GIL inside device compute, sim children are independent
+pure-Python cores, and the only serialized sections are the slice barrier
+(horizon clamping, watchdog probes, ``GlobalVirtualClock`` bookkeeping)
+and the child-major buffer replay that re-emits every child's events in
+child-index order — reproducing the sequential loop's global event order
+bit for bit (see :class:`_ReplicaChannel`).  ``steal_threshold`` arms
+load-triggered work stealing: at every ``steal_interval`` multiple, a
+replica whose queued-and-never-admitted backlog (predicted cost normalized
+by ``virtual_capacity``) exceeds the threshold times the live-fleet mean
+migrates its newest queued agents to underloaded live replicas through the
+failover requeue machinery, with accrued virtual time carried by
+``GlobalVirtualClock.steal``.  ``retain_agents=False`` (with the
+children's ``retain_results=False``) switches the fleet to streaming
+emission: per-agent bookkeeping is dropped at completion and ``compact()``
+trims the reconciled clock, bounding memory by the live-agent population
+instead of the total workload.
+
 Listener callbacks from child k are forwarded in *workload seconds* with a
 ``replica=k`` keyword, so the service's dispatcher (and the typed events in
 ``repro.api.events``) know which replica served each lifecycle step.
@@ -54,6 +73,10 @@ Listener callbacks from child k are forwarded in *workload seconds* with a
 from __future__ import annotations
 
 import dataclasses
+import math
+import threading
+import weakref
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Optional, Sequence
 
 import numpy as np
@@ -167,9 +190,21 @@ class RoundRobinRouter(Router):
 
 @register_router("least_loaded", "ll")
 class LeastLoadedRouter(Router):
+    """Fewest live agents *per unit of capacity*.
+
+    A raw live-agent count systematically overloads the small replicas of
+    a heterogeneous fleet (a child with half the decode rate drains its
+    queue at half the speed, so equal counts are not equal load): the
+    count is normalized by each replica's ``virtual_capacity``, with the
+    deterministic lowest-index tie-break.  On a homogeneous fleet the
+    normalization divides every candidate by the same constant, so
+    placements are unchanged.
+    """
+
     def pick(self, spec: AgentSpec, agent_id: int, pred_cost: float) -> int:
         loads = self._backend.live_agents
-        return min(self.candidates(), key=lambda k: (loads[k], k))
+        caps = self._backend.virtual_capacities
+        return min(self.candidates(), key=lambda k: (loads[k] / caps[k], k))
 
 
 @register_router("memory_cost_aware", "cost_aware", "mca")
@@ -201,7 +236,10 @@ class FleetStalledError(RuntimeError):
     spinning toward a horizon a crashed child can never reach.  Carries the
     diagnostic state the watchdog would have acted on: the stalled child's
     index, its last event time, its in-flight count, the drive target, and
-    every live child's queue depth.
+    the fleet queue-depth snapshot — live replicas report their in-flight
+    counts, already-dead replicas are labeled ``"dead"`` explicitly (their
+    stranded queues are not depths the fleet can still drain, so counting
+    them as numbers misdiagnosed the backlog).
     """
 
     def __init__(
@@ -232,11 +270,31 @@ class _ReplicaChannel:
     """Child k's listener: tags callbacks with ``replica=k``, converts the
     child's native timestamps to workload seconds, and keeps the fleet's
     load accounting current (completions decrement the router's view,
-    stage completions feed the failover respec bookkeeping)."""
+    stage completions feed the failover respec bookkeeping).
+
+    Concurrent advancement (PR 10) puts the channel in *buffering* mode
+    for the span of one fleet slice: ``_buf`` is flipped from ``None`` to
+    a list before the child is handed to a worker thread, every callback
+    then records ``(method, args)`` and returns, and after the barrier the
+    fleet replays the buffers **in child-index order** by re-invoking the
+    same methods with ``_buf = None`` — which reproduces, event for event,
+    the global order the sequential lockstep loop (child 0 fully, then
+    child 1, ...) would have produced, so listener streams, fleet
+    bookkeeping, and global-clock ``_seq`` assignment are bit-identical.
+    Two side effects cannot wait for the replay because the child consults
+    their results *before* its ``run()`` returns: closed-loop stage
+    advancement (the session must append the next stage ahead of the
+    child's stage-exhaustion check — see :meth:`on_stage_complete`) and
+    the per-agent token counters that feed it.  Both are thread-confined:
+    each agent lives on exactly one replica during a slice, so its counter
+    keys are touched by one worker only, and the in-band session call is
+    serialized under the fleet's ``_cl_lock``.
+    """
 
     def __init__(self, fleet: "ReplicatedBackend", replica: int):
         self.fleet = fleet
         self.replica = replica
+        self._buf: Optional[list] = None
 
     def _forward(self, event: str, agent_id: int, t: float, *args) -> None:
         listener = self.fleet._listener
@@ -248,7 +306,19 @@ class _ReplicaChannel:
         tw = self.fleet.children[self.replica].to_workload_time(t)
         fn(agent_id, *args, tw, replica=self.replica)
 
+    def _replay(self) -> None:
+        """Flush the slice buffer through the passthrough paths (barrier
+        side, main thread): re-invoke each buffered method with ``_buf``
+        cleared so fleet bookkeeping and listener forwards run exactly as
+        they would have in the sequential loop."""
+        buf, self._buf = self._buf, None
+        for name, args in buf:
+            getattr(self, name)(*args)
+
     def on_arrival(self, agent_id: int, t: float) -> None:
+        if self._buf is not None:
+            self._buf.append(("on_arrival", (agent_id, t)))
+            return
         fleet = self.fleet
         fleet._arrived.add(agent_id)
         if agent_id in fleet._suppress_arrival:
@@ -259,35 +329,85 @@ class _ReplicaChannel:
         self._forward("on_arrival", agent_id, t)
 
     def on_admit(self, agent_id: int, rid: int, t: float) -> None:
+        if self._buf is not None:
+            self._buf.append(("on_admit", (agent_id, rid, t)))
+            return
+        self.fleet._ever_admitted.add(agent_id)
         self._forward("on_admit", agent_id, t, rid)
 
     def on_swap_out(self, agent_id: int, rid: int, t: float) -> None:
+        if self._buf is not None:
+            self._buf.append(("on_swap_out", (agent_id, rid, t)))
+            return
         self._forward("on_swap_out", agent_id, t, rid)
 
     def on_swap_in(self, agent_id: int, rid: int, t: float) -> None:
+        if self._buf is not None:
+            self._buf.append(("on_swap_in", (agent_id, rid, t)))
+            return
         self._forward("on_swap_in", agent_id, t, rid)
 
     def on_token(self, agent_id: int, rid: int, token: int, t: float) -> None:
+        if self._buf is not None:
+            # counted in-band: an in-band closed-loop stage boundary later
+            # in this same slice needs the stage's token count before the
+            # replay delivers the events (thread-confined per agent key)
+            tok = self.fleet._cl_tokens
+            tok[agent_id] = tok.get(agent_id, 0) + 1
+            self._buf.append(("on_token", (agent_id, rid, token, t)))
+            return
         self._forward("on_token", agent_id, t, rid, token)
 
     def on_prefix_hit(
         self, agent_id: int, rid: int, cached: int, prefill: int, t: float
     ) -> None:
+        if self._buf is not None:
+            self._buf.append(
+                ("on_prefix_hit", (agent_id, rid, cached, prefill, t))
+            )
+            return
         self._forward("on_prefix_hit", agent_id, t, rid, cached, prefill)
 
     def on_admission_deferred(
         self, agent_id: int, rid: int, t: float
     ) -> None:
+        if self._buf is not None:
+            self._buf.append(("on_admission_deferred", (agent_id, rid, t)))
+            return
         self._forward("on_admission_deferred", agent_id, t, rid)
 
     def on_stage_complete(self, agent_id: int, stage: int, t: float) -> None:
-        done = self.fleet._stages_done
+        fleet = self.fleet
+        if self._buf is not None:
+            spec = fleet._specs.get(agent_id)
+            if spec is not None and spec.next_stage is not None:
+                # in-band closed-loop advancement: the child checks stage
+                # exhaustion the moment this emission returns, so the
+                # session must run NOW, on this worker thread, and append
+                # the next stage via submit_stage — buffering it to the
+                # replay would complete the agent a whole slice early.
+                # new_tokens comes from the fleet's in-band counters (the
+                # dispatcher's handle counts are stale until the replay).
+                tok = fleet._cl_tokens.get(agent_id, 0)
+                new = tok - fleet._cl_marks.get(agent_id, 0)
+                fleet._cl_marks[agent_id] = tok
+                fleet._cl_inband(
+                    agent_id, stage, new,
+                    fleet.children[self.replica].to_workload_time(t),
+                    self.replica,
+                )
+            self._buf.append(("on_stage_complete", (agent_id, stage, t)))
+            return
+        done = fleet._stages_done
         done[agent_id] = max(done.get(agent_id, 0), stage + 1)
         self._forward("on_stage_complete", agent_id, t, stage)
 
     def on_suspend(
         self, agent_id: int, stage: int, until: float, t: float
     ) -> None:
+        if self._buf is not None:
+            self._buf.append(("on_suspend", (agent_id, stage, until, t)))
+            return
         fleet = self.fleet
         child = fleet.children[self.replica]
         until_w = child.to_workload_time(until)
@@ -299,6 +419,9 @@ class _ReplicaChannel:
         self._forward("on_suspend", agent_id, t, stage, until_w)
 
     def on_resume(self, agent_id: int, t: float) -> None:
+        if self._buf is not None:
+            self._buf.append(("on_resume", (agent_id, t)))
+            return
         fleet = self.fleet
         fleet._suspended.pop(agent_id, None)
         if not fleet.think_time_accrual:
@@ -309,6 +432,9 @@ class _ReplicaChannel:
         self._forward("on_resume", agent_id, t)
 
     def on_agent_complete(self, agent_id: int, t: float) -> None:
+        if self._buf is not None:
+            self._buf.append(("on_agent_complete", (agent_id, t)))
+            return
         tw = self.fleet.children[self.replica].to_workload_time(t)
         self.fleet._on_child_complete(self.replica, agent_id, tw)
         self._forward("on_agent_complete", agent_id, t)
@@ -341,6 +467,10 @@ class ReplicatedBackend:
         watchdog_retries: int = 3,
         watchdog_backoff: float = 2.0,
         think_time_accrual: bool = True,
+        fleet_workers: Optional[int] = None,
+        steal_threshold: Optional[float] = None,
+        steal_interval: float = 1.0,
+        retain_agents: bool = True,
     ):
         self.children: list[Backend] = list(children)
         if not self.children:
@@ -417,8 +547,47 @@ class ReplicatedBackend:
         # still decoding and the thinker accrues nothing while idle.
         self.think_time_accrual = bool(think_time_accrual)
         self._suspended: dict[int, float] = {}   # agent_id -> until (s)
-        for idx, child in enumerate(self.children):
-            child.set_listener(_ReplicaChannel(self, idx))
+        # --- concurrent advancement + work stealing (PR 10) -------------
+        # fleet_workers > 1 turns each _drive slice into a bounded
+        # thread-pool fan-out with child-major buffer replay (see
+        # _ReplicaChannel); None/0/1 keeps the frozen sequential loop.
+        if fleet_workers is not None and fleet_workers < 0:
+            raise ValueError("fleet_workers must be >= 0")
+        self._n_workers = min(
+            int(fleet_workers or 1), len(self.children)
+        ) or 1
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._pool_finalizer = None
+        # load-triggered work stealing: armed when steal_threshold is set
+        # (> 1 — it multiplies the fleet-mean normalized backlog; the gap
+        # between trigger and the stop-at-mean drain is the hysteresis
+        # band that prevents migration thrash)
+        if steal_threshold is not None and steal_threshold <= 1.0:
+            raise ValueError("steal_threshold must be > 1")
+        if steal_interval <= 0.0:
+            raise ValueError("steal_interval must be positive")
+        self.steal_threshold = (
+            None if steal_threshold is None else float(steal_threshold)
+        )
+        self.steal_interval = float(steal_interval)
+        self._ever_admitted: set[int] = set()
+        self._stolen: set[int] = set()
+        self._steals: list[tuple[int, int, int, float]] = []
+        # in-band closed-loop plumbing (concurrent slices only)
+        self._cl_lock = threading.Lock()
+        self._cl_tokens: dict[int, int] = {}
+        self._cl_marks: dict[int, int] = {}
+        # streaming mode: retain_agents=False drops per-agent fleet
+        # bookkeeping at completion and queues the finish times for
+        # compact(), trading per-agent results for O(live) memory
+        self.retain_agents = bool(retain_agents)
+        self._compact_done: list[tuple[float, int]] = []
+        self._channels: list[_ReplicaChannel] = [
+            _ReplicaChannel(self, idx)
+            for idx in range(len(self.children))
+        ]
+        for child, chan in zip(self.children, self._channels):
+            child.set_listener(chan)
 
     # --------------------------------------------------------- protocol
 
@@ -516,39 +685,249 @@ class ReplicatedBackend:
     def run(self, until: float) -> None:
         """Advance the whole fleet in lockstep to ``until`` (seconds).
 
-        Without a fault plan this is the plain lockstep loop (bit-identical
-        to the pre-fault-tolerance fleet).  With one, advancement is sliced
-        at the plan's window edges and the watchdog's probe deadlines so
-        fault onsets, suspect flags, recoveries, and failovers land at
-        deterministic workload times.
+        Without a fault plan, work stealing, or a worker pool this is the
+        plain lockstep loop (bit-identical to the pre-fault-tolerance
+        fleet).  Otherwise advancement goes through :meth:`_drive`, sliced
+        at the plan's window edges, the watchdog's probe deadlines, and
+        the steal-interval multiples — the slice targets depend only on
+        the plan/steal configuration, never on ``fleet_workers``, which is
+        what lets the concurrency property tests demand bit-identity
+        between the sequential and the pooled stepper on the same plan.
         """
-        if self._plan is not None:
+        if (
+            self._plan is not None
+            or self.steal_threshold is not None
+            or self._n_workers > 1
+        ):
             self._drive(float(until))
             return
         for k, child in enumerate(self.children):
             if k not in self._dead:
                 child.run(until)
 
-    # ------------------------------------------------------- fault drive
+    # ------------------------------------------------------- sliced drive
 
     def _drive(self, until: float) -> None:
         start = self.now
         if until <= start + _EPS:
             return
         cand: set[float] = set()
-        for b in self._plan.boundaries():
-            cand.add(b)
-            for off in self._wd_offsets:
-                cand.add(b + off)
+        if self._plan is not None:
+            for b in self._plan.boundaries():
+                cand.add(b)
+                for off in self._wd_offsets:
+                    cand.add(b + off)
+        if self.steal_threshold is not None:
+            # integer multiples of the steal interval (no accumulating
+            # float steps): the serialized points where backlog imbalance
+            # is measured and queued agents may migrate
+            step = self.steal_interval
+            i = int(math.floor((start + _EPS) / step)) + 1
+            while i * step < until - _EPS:
+                if i * step > start + _EPS:
+                    cand.add(i * step)
+                i += 1
         targets = sorted(t for t in cand if start + _EPS < t < until - _EPS)
         targets.append(until)
         for s in targets:
-            for k in self.live_replica_indices:
-                child = self.children[k]
-                h = min(s, self._plan.horizon(k, s))
-                if h > child.now + _EPS:
-                    child.run(h)
-            self._watch(s)
+            self._advance_slice(s)
+            if self._plan is not None:
+                self._watch(s)
+            if self.steal_threshold is not None:
+                self._steal(s)
+
+    def _advance_slice(self, s: float) -> None:
+        """Step every live child to its (fault-clamped) horizon for one
+        slice ending at fleet time ``s``.
+
+        Sequential mode steps children in index order on the caller's
+        thread.  Concurrent mode flips every stepped child's channel into
+        buffering, fans the ``run`` calls out on the worker pool (the only
+        shared state a child touches mid-slice is thread-confined or
+        ``_cl_lock``-serialized — see :class:`_ReplicaChannel`), joins
+        them all (the reconcile barrier), then replays the buffers in
+        child-index order, which reproduces the sequential loop's global
+        event order exactly.  A child that raises still has its buffer
+        replayed (its pre-fault events are real); the lowest-index error
+        is then re-raised.
+        """
+        horizons: list[tuple[int, float]] = []
+        for k in self.live_replica_indices:
+            child = self.children[k]
+            h = s if self._plan is None else min(s, self._plan.horizon(k, s))
+            if h > child.now + _EPS:
+                horizons.append((k, h))
+        if not horizons:
+            return
+        if self._n_workers <= 1:
+            for k, h in horizons:
+                self.children[k].run(h)
+            return
+        for k, _ in horizons:
+            self._channels[k]._buf = []
+        pool = self._ensure_pool()
+        futures = [
+            (k, pool.submit(self.children[k].run, h)) for k, h in horizons
+        ]
+        errors: list[tuple[int, BaseException]] = []
+        for k, fut in futures:
+            try:
+                fut.result()
+            except BaseException as exc:  # noqa: BLE001 — rethrown below
+                errors.append((k, exc))
+        for k, _ in horizons:
+            self._channels[k]._replay()
+        if errors:
+            raise errors[0][1]
+
+    def _ensure_pool(self) -> ThreadPoolExecutor:
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=self._n_workers,
+                thread_name_prefix="fleet-child",
+            )
+            # bound method keeps the executor (not self) alive until the
+            # fleet is collected without an explicit close()
+            self._pool_finalizer = weakref.finalize(
+                self, self._pool.shutdown, wait=False
+            )
+        return self._pool
+
+    def close(self) -> None:
+        """Shut the worker pool down (idempotent; the fleet stays usable —
+        the next concurrent slice lazily recreates the pool)."""
+        if self._pool is not None:
+            if self._pool_finalizer is not None:
+                self._pool_finalizer.detach()
+                self._pool_finalizer = None
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+    # ---------------------------------------------------- work stealing
+
+    def _steal(self, s: float) -> None:
+        """One load-triggered stealing pass at fleet time ``s`` (serialized,
+        after the slice barrier and any watchdog verdicts).
+
+        Backlog load of replica k = Σ predicted cost of its *eligible*
+        agents / ``virtual_capacity[k]``; eligible means arrived, never
+        admitted, not completed, not suspended — an admitted agent has KV
+        state worth locality, a suspended one is mid-think with retained
+        state, and a not-yet-arrived one is invisible backlog, so only
+        cold queued work ever migrates.  A replica whose load exceeds
+        ``steal_threshold`` x the live-fleet mean sheds its newest-arrived
+        victims (LIFO keeps FIFO service order intact for the head of the
+        queue) onto underloaded live, non-suspect replicas until it drains
+        back to the mean — the threshold→mean gap is the hysteresis band.
+        The mean is fixed for the pass; per-replica loads update as each
+        victim lands so one pass cannot overshoot a target.  The child's
+        ``cancel`` is the authoritative eligibility gate: anything it
+        refuses (raced into admission inside the slice) is skipped.
+        """
+        thr = self.steal_threshold
+        live = [k for k in self.live_replica_indices if k not in self._suspect]
+        if len(live) < 2:
+            return
+        eligible: dict[int, list[int]] = {k: [] for k in live}
+        for aid, k in self.assignment.items():
+            if (
+                k in eligible
+                and aid in self._arrived
+                and aid not in self._ever_admitted
+                and aid not in self._completed
+                and aid not in self._suspended
+            ):
+                eligible[k].append(aid)
+        load = {
+            k: sum(self._pred_cost.get(a, 0.0) for a in eligible[k])
+            / self.virtual_capacities[k]
+            for k in live
+        }
+        mean = sum(load.values()) / len(live)
+        if mean <= _EPS:
+            return
+        for k in live:
+            if load[k] <= thr * mean + _EPS:
+                continue
+            victims = sorted(
+                eligible[k],
+                key=lambda a: (-self._arrival0.get(a, 0.0), -a),
+            )
+            for aid in victims:
+                if load[k] <= mean + _EPS:
+                    break
+                targets = [
+                    j for j in live if j != k and load[j] < mean - _EPS
+                ]
+                if not targets:
+                    break
+                j = min(targets, key=lambda x: (load[x], x))
+                old_cost = self._pred_cost.get(aid, 0.0)
+                # anti-thrash guard: the move must strictly shrink the
+                # pairwise max — when the tail holds too few queued agents
+                # to balance, "drain to the mean" alone ping-pongs the
+                # same victims between replicas every interval
+                new_k = load[k] - old_cost / self.virtual_capacities[k]
+                new_j = load[j] + old_cost / self.virtual_capacities[j]
+                if max(new_k, new_j) >= load[k] - _EPS:
+                    continue
+                if not self.children[k].cancel(aid):
+                    continue
+                spec = self._respec(aid, s)
+                if spec is None:  # pragma: no cover — never-admitted ⇒ work
+                    continue
+                cost = spec.resolved_costs()[0]
+                self.live_agents[k] -= 1
+                self.live_cost[k] -= old_cost
+                self._stage_base[aid] = self._stage_base.get(
+                    aid, 0
+                ) + self._stages_done.pop(aid, 0)
+                self._extras.pop(aid, None)
+                self._specs[aid] = spec
+                self._suppress_arrival.add(aid)
+                arrival = self.children[j].submit(spec, aid)
+                self.assignment[aid] = j
+                self.live_agents[j] += 1
+                self.live_cost[j] += cost
+                self._pred_cost[aid] = cost
+                self.global_clock.steal(aid, k, j, arrival, cost)
+                self._requeued.add(aid)
+                self._stolen.add(aid)
+                self._steals.append((aid, k, j, float(max(arrival, s))))
+                self._notify(
+                    "on_requeued", aid, k, t=max(arrival, s), replica=j
+                )
+                load[k] -= old_cost / self.virtual_capacities[k]
+                load[j] += cost / self.virtual_capacities[j]
+
+    # ------------------------------------------------ closed-loop in-band
+
+    def _cl_inband(
+        self, agent_id: int, stage: int, new_tokens: int, t: float,
+        replica: int,
+    ) -> None:
+        """Run a closed-loop agent's session in-band during a concurrent
+        slice (called from the serving child's worker thread — see
+        :meth:`_ReplicaChannel.on_stage_complete`).  Serialized under
+        ``_cl_lock``; the listener's ``on_closed_loop_stage`` runs the
+        session and appends the next stage, and later suppresses its own
+        replayed ``on_stage_complete`` advancement so the session fires
+        exactly once per logical stage."""
+        listener = self._listener
+        if listener is None:
+            return
+        fn = getattr(listener, "on_closed_loop_stage", None)
+        if fn is None:
+            raise RuntimeError(
+                "concurrent fleet advancement requires the listener to "
+                "implement on_closed_loop_stage for closed-loop agents: "
+                "the session must run inside the serving child's emission "
+                "(before its stage-exhaustion check), not at buffer "
+                "replay — drive closed-loop work through AgentService, or "
+                "add the hook to the listener"
+            )
+        with self._cl_lock:
+            fn(agent_id, stage, new_tokens, t, replica=replica)
 
     def _watch(self, s: float) -> None:
         """One watchdog pass at fleet time ``s`` (after driving children).
@@ -569,11 +948,7 @@ class ReplicatedBackend:
             if self._wd_timeout is None:
                 if busy and lag > _EPS and self._plan.crash_time(k) <= s:
                     raise FleetStalledError(
-                        k, now_k, child.in_flight, s,
-                        {
-                            j: getattr(self.children[j], "in_flight", 0)
-                            for j in self.live_replica_indices
-                        },
+                        k, now_k, child.in_flight, s, self._queue_depths()
                     )
                 continue
             last = self._wd_last.get(k)
@@ -593,6 +968,18 @@ class ReplicatedBackend:
                 self._notify("on_replica_recovered", -1, t=s, replica=k)
         for k in deaths:
             self._fail_replica(k, s)
+
+    def _queue_depths(self) -> dict:
+        """Diagnostic fleet snapshot: live replicas map to their in-flight
+        counts; dead replicas map to the literal ``"dead"`` so a stranded
+        queue is never mistaken for drainable backlog."""
+        depths: dict = {
+            j: getattr(self.children[j], "in_flight", 0)
+            for j in self.live_replica_indices
+        }
+        for j in self.dead_replica_indices:
+            depths[j] = "dead"
+        return depths
 
     # --------------------------------------------------------- failover
 
@@ -847,6 +1234,9 @@ class ReplicatedBackend:
                 "replica_failures": len(self._failures),
                 "failed_replicas": sorted(self._dead),
                 "agents_requeued": len(self._requeued),
+                "fleet_workers": self._n_workers,
+                "agents_stolen": len(self._stolen),
+                "steals": len(self._steals),
                 "suspensions": suspensions,
                 "resumes": resumes,
                 "suspend_spills": suspend_spills,
@@ -862,9 +1252,57 @@ class ReplicatedBackend:
     ) -> None:
         self.live_agents[replica] -= 1
         self.live_cost[replica] -= self._pred_cost.pop(agent_id, 0.0)
-        self._completed.add(agent_id)
-        if t is not None:
+        if self.retain_agents:
+            self._completed.add(agent_id)
+            if t is not None:
+                self._fleet_finish[agent_id] = (float(t), replica)
+            return
+        # streaming mode: drop every per-agent map at completion — the
+        # assignment pop is what keeps _steal/_fail_replica correct
+        # without the O(agents) _completed set, and the finish time is
+        # queued so compact() can forget the clock entry once the arrival
+        # is safely reconciled (forgetting earlier would let the replayed
+        # arrival resurrect the virtual finish)
+        if t is not None and self._plan is not None:
             self._fleet_finish[agent_id] = (float(t), replica)
+        self.assignment.pop(agent_id, None)
+        self._specs.pop(agent_id, None)
+        self._extras.pop(agent_id, None)
+        self._stages_done.pop(agent_id, None)
+        self._stage_base.pop(agent_id, None)
+        self._arrival0.pop(agent_id, None)
+        self._arrived.discard(agent_id)
+        self._suppress_arrival.discard(agent_id)
+        self._ever_admitted.discard(agent_id)
+        self._stolen.discard(agent_id)
+        self._requeued.discard(agent_id)
+        self._suspended.pop(agent_id, None)
+        self._cl_tokens.pop(agent_id, None)
+        self._cl_marks.pop(agent_id, None)
+        if t is not None:
+            self._compact_done.append((float(t), agent_id))
+
+    def compact(self, until: float) -> GlobalClockSnapshot:
+        """Streaming-mode checkpoint: reconcile the global clock to
+        ``until`` and forget clock bookkeeping for agents that completed
+        at or before the reconciled horizon.
+
+        Safe because reconcile replays every pending arrival up to
+        ``until`` first — a forgotten agent's arrival can no longer be
+        sitting in the pending heap waiting to re-create its virtual
+        finish entry.  With ``retain_agents=True`` this is just an
+        explicit reconcile."""
+        snap = self.global_clock.reconcile(float(until))
+        self._last_snapshot = snap
+        if not self.retain_agents:
+            keep: list[tuple[float, int]] = []
+            for t, aid in self._compact_done:
+                if t <= until + _EPS:
+                    self.global_clock.forget(aid)
+                else:
+                    keep.append((t, aid))
+            self._compact_done = keep
+        return snap
 
     def pampering_order(self) -> list[int]:
         """Fleet-wide selective-pampering order (reconciled F_j ascending).

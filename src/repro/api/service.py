@@ -325,6 +325,25 @@ class _Dispatcher:
         # the agent alive in the same event/iteration
         self.svc._advance_closed_loop(ev)
 
+    def on_closed_loop_stage(
+        self, agent_id: int, stage: int, new_tokens: int, t: float, *,
+        replica: Optional[int] = None,
+    ) -> None:
+        """In-band closed-loop advancement during a concurrent fleet slice.
+
+        The fleet calls this from the serving child's worker thread
+        (serialized under its ``_cl_lock``) so the session can append the
+        next stage before the child's stage-exhaustion check; the
+        corresponding ``on_stage_complete`` arrives later, at buffer
+        replay, and must NOT re-run the session — the service records the
+        (agent, stage) pair to suppress it.  No event is pushed here: the
+        replayed ``StageCompleted`` is the one canonical record, keeping
+        the event stream bit-identical to sequential advancement.
+        """
+        self.svc._advance_closed_loop_inband(
+            agent_id, stage, new_tokens, self._t(t)
+        )
+
     def on_agent_complete(
         self, agent_id: int, t: float, *, replica: Optional[int] = None
     ) -> None:
@@ -401,6 +420,10 @@ class AgentService:
         self.record_events = record_events
         self._next_id = 0
         self._in_callback = False    # closed-loop re-entrancy guard
+        # (agent_id, stage) pairs whose session already ran in-band
+        # during a concurrent fleet slice; the replayed StageCompleted
+        # consumes its pair instead of re-running the session
+        self._cl_done: set = set()
         backend.set_listener(_Dispatcher(self))
 
     # ------------------------------------------------------- constructors
@@ -409,7 +432,8 @@ class AgentService:
     #: ``engine`` constructors (everything else goes to the child backends)
     _FLEET_KW = (
         "fault_plan", "watchdog_timeout", "watchdog_retries",
-        "watchdog_backoff", "think_time_accrual",
+        "watchdog_backoff", "think_time_accrual", "fleet_workers",
+        "steal_threshold", "steal_interval", "retain_agents",
     )
 
     @classmethod
@@ -558,6 +582,14 @@ class AgentService:
         handle = self.handles.get(ev.agent_id)
         if handle is None or handle.spec.next_stage is None:
             return
+        if (ev.agent_id, ev.stage) in self._cl_done:
+            # the session already ran in-band during the concurrent slice;
+            # re-sync the token mark now that the replayed token events
+            # have landed on the handle, exactly where the sequential path
+            # would have set it
+            self._cl_done.discard((ev.agent_id, ev.stage))
+            handle._stage_token_mark = handle.token_count
+            return
         outcome = StageOutcome(
             agent_id=ev.agent_id,
             stage=ev.stage,
@@ -579,6 +611,39 @@ class AgentService:
             session = handle.spec.next_stage
             self.backend.submit_stage(
                 ev.agent_id,
+                list(specs),
+                prompt_ids=getattr(session, "last_prompt_ids", None),
+                hints=getattr(session, "last_cached_hints", None),
+                resume_delay=getattr(session, "last_resume_delay", None),
+            )
+
+    def _advance_closed_loop_inband(
+        self, agent_id: int, stage: int, new_tokens: int, t: float
+    ) -> None:
+        """Concurrent-slice twin of :meth:`_advance_closed_loop` (see
+        :meth:`_Dispatcher.on_closed_loop_stage`): runs the session with
+        the fleet-counted token delta (the handle's counts lag until the
+        buffer replay) and records the pair for replay suppression."""
+        handle = self.handles.get(agent_id)
+        if handle is None or handle.spec.next_stage is None:
+            return
+        self._cl_done.add((agent_id, stage))
+        outcome = StageOutcome(
+            agent_id=agent_id,
+            stage=stage,
+            time=t,
+            new_tokens=int(new_tokens),
+            handle=handle,
+        )
+        self._in_callback = True
+        try:
+            specs = handle.spec.next_stage(outcome)
+        finally:
+            self._in_callback = False
+        if specs:
+            session = handle.spec.next_stage
+            self.backend.submit_stage(
+                agent_id,
                 list(specs),
                 prompt_ids=getattr(session, "last_prompt_ids", None),
                 hints=getattr(session, "last_cached_hints", None),

@@ -147,6 +147,9 @@ def service_for_backend(
     admission_watermark: Optional[tuple] = None,
     suspend_retention: Optional[str] = None,
     think_time_accrual: bool = True,
+    fleet_workers: Optional[int] = None,
+    steal_threshold: Optional[float] = None,
+    steal_interval: Optional[float] = None,
 ) -> AgentService:
     """Build an AgentService for ``backend`` in {"sim", "engine"}.
 
@@ -189,6 +192,13 @@ def service_for_backend(
     the backend default, "hold"); ``think_time_accrual=False`` removes
     thinking agents from the fleet's GPS reference so think time accrues
     no virtual time (the default True is the paper's stance).
+
+    ``fleet_workers > 1`` advances the fleet's children concurrently on a
+    bounded thread pool (bit-identical to the sequential lockstep loop —
+    see :class:`repro.api.ReplicatedBackend`); ``steal_threshold`` arms
+    load-triggered work stealing of queued, never-admitted agents at
+    every ``steal_interval`` workload-seconds.  All three require
+    ``replicas > 1``.
     """
     fleet_kw = {}
     if fault_plan is not None:
@@ -201,6 +211,12 @@ def service_for_backend(
         fleet_kw["watchdog_backoff"] = float(watchdog_backoff)
     if not think_time_accrual:
         fleet_kw["think_time_accrual"] = False
+    if fleet_workers is not None:
+        fleet_kw["fleet_workers"] = int(fleet_workers)
+    if steal_threshold is not None:
+        fleet_kw["steal_threshold"] = float(steal_threshold)
+    if steal_interval is not None:
+        fleet_kw["steal_interval"] = float(steal_interval)
     child_kw = {}
     if suspend_retention is not None:
         child_kw["suspend_retention"] = suspend_retention

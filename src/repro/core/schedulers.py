@@ -97,6 +97,14 @@ class AgentScheduler:
             rec.completed = True
         self.version += 1
 
+    def on_agent_cancel(self, agent_id: int, t: float) -> None:
+        """The agent was withdrawn before any of its requests ran (fleet
+        work stealing, PR 10).  Default: the completion cleanup — the
+        record is marked done so dynamic policies stop considering it.
+        Policies that registered the agent in auxiliary state at arrival
+        (Justitia's GPS clock) override to undo that registration too."""
+        self.on_agent_complete(agent_id, t)
+
     def on_agent_suspend(self, agent_id: int, t: float) -> None:
         """The agent entered think time (PR 9): it holds no decode slot
         until the matching :meth:`on_agent_resume`.  Default: no-op —
@@ -278,6 +286,13 @@ class JustitiaScheduler(AgentScheduler):
     def on_agent_complete(self, agent_id: int, t: float) -> None:
         super().on_agent_complete(agent_id, t)
         self.clock.advance(t)
+
+    def on_agent_cancel(self, agent_id: int, t: float) -> None:
+        # a stolen agent leaves WITHOUT service: pull it out of the GPS
+        # reference so it stops depressing V's rate for the agents that
+        # stay (its F_j heap entry retires harmlessly as V sweeps past)
+        super().on_agent_cancel(agent_id, t)
+        self.clock.deactivate(agent_id, t)
 
     def request_key(self, req: Request, t: float) -> tuple:
         rec = self.agents[req.agent_id]

@@ -114,6 +114,17 @@ class VirtualClock:
         if agent_id not in self._retired:
             self._active.add(agent_id)
 
+    def forget(self, agent_id: int) -> None:
+        """Drop a finished agent's membership bookkeeping (streaming mode).
+
+        The retired set otherwise grows O(agents) over a clock's lifetime —
+        it exists only to block ``reactivate`` of an already-swept agent,
+        which cannot happen once the agent has left the system for good.
+        Never call this for an agent that may still suspend/resume.
+        """
+        self._retired.discard(agent_id)
+        self._active.discard(agent_id)
+
     # -- internals ----------------------------------------------------------
 
     def _simulate(self, t: float, heap: list) -> tuple[float, list[int]]:
@@ -321,6 +332,68 @@ class GlobalVirtualClock:
         self.register(new_replica, agent_id, t, cost)
         self.replica_of[agent_id] = new_replica
         return self.virtual_finish.get(agent_id)
+
+    def steal(
+        self, agent_id: int, frm: int, to: int, t: float, cost: float
+    ) -> Optional[float]:
+        """Move a queued, never-admitted agent between LIVE replicas.
+
+        Work stealing's clock surgery.  Unlike :meth:`migrate` alone —
+        whose source replica is dead and already pruned by
+        :meth:`fail_replica` — stealing leaves the source clock running,
+        so the agent's presence there must be withdrawn first: an
+        un-replayed buffered arrival is simply dropped; an arrival that
+        ``reconcile`` already replayed is deactivated from the source's
+        GPS reference at the steal time (its F_j heap entry retires
+        harmlessly as V sweeps past — the same mechanics as a think-time
+        deactivation, except the agent never returns).  The re-arrival on
+        ``to`` then goes through :meth:`migrate`, which keeps any
+        recorded ``virtual_finish`` — a steal can never demote (or
+        promote) an agent in the fleet-wide pampering order.  Returns the
+        carried virtual finish, or ``None`` when the agent's arrival had
+        not been reconciled yet.
+        """
+        if frm in self._dead:
+            raise ValueError(f"replica {frm} is dead — use fail_replica")
+        dropped = False
+        pruned = []
+        for entry in self._pending:
+            if (
+                not dropped
+                and entry[2] == frm
+                and entry[3] == agent_id
+                and entry[5] == "arrive"
+            ):
+                dropped = True
+                continue
+            pruned.append(entry)
+        if dropped:
+            self._pending = pruned
+            heapq.heapify(self._pending)
+        else:
+            # already replayed into frm's clock: withdraw its GPS share
+            heapq.heappush(
+                self._pending,
+                (max(float(t), self._horizon), self._seq, frm, agent_id,
+                 0.0, "suspend"),
+            )
+            self._seq += 1
+        return self.migrate(agent_id, to, t, cost)
+
+    def forget(self, agent_id: int) -> None:
+        """Drop a COMPLETED agent's reconciled bookkeeping.
+
+        Streaming fleets call this (after the agent's arrival has been
+        reconciled — i.e. from :meth:`ReplicatedBackend.compact`) so
+        ``virtual_finish`` / ``replica_of`` and the per-clock retired
+        sets stay bounded by the in-flight population rather than growing
+        O(agents).  The agent thereafter no longer appears in
+        ``pampering_order``.
+        """
+        self.virtual_finish.pop(agent_id, None)
+        self.replica_of.pop(agent_id, None)
+        for clock in self.clocks:
+            clock.forget(agent_id)
 
     def reconcile(self, until: float) -> GlobalClockSnapshot:
         """Replay arrivals up to ``until`` and advance the live clocks.

@@ -714,6 +714,46 @@ class ServeEngine:
                 agent.hints.append(None)
             agent.hints.append(list(hints))
 
+    def cancel(self, agent_id: int) -> bool:
+        """Withdraw a never-admitted agent (fleet work stealing, PR 10).
+
+        Mirrors ``ClusterSim.cancel``: legal only while the agent's whole
+        opening stage still sits in the waiting queue (or its arrival is
+        still pending) — a request that was ever admitted, swapped,
+        mid-prefill, or suspended makes the agent ineligible and the call
+        returns False without touching engine state.  Silent: no events,
+        no completion entry; the fleet re-submits the agent elsewhere and
+        emits the migration itself.
+        """
+        for i, (_, _, a) in enumerate(self.pending):
+            if a.agent_id == agent_id:
+                self.pending.pop(i)
+                heapq.heapify(self.pending)
+                return True
+        agent = self.agents.get(agent_id)
+        if agent is None or agent.finish_iter >= 0:
+            return False
+        if agent.next_stage != 1:
+            return False
+        if agent_id in self._held or any(
+            a.agent_id == agent_id for _, _, a in self._resumes
+        ):
+            return False
+        if any(
+            req.agent_id == agent_id for req in self.slot_req.values()
+        ) or any(req.agent_id == agent_id for req in self.swapped):
+            return False
+        if agent.live != len(agent.stages[0]):
+            return False         # some opening request already ran
+        reqs = [req for req in self.waiting if req.agent_id == agent_id]
+        if len(reqs) != agent.live:
+            return False         # a request is admitted / mid-prefill
+        for req in reqs:
+            self.waiting.remove(req)
+        del self.agents[agent_id]
+        self.sched.on_agent_cancel(agent_id, float(self.now))
+        return True
+
     def _submit_stage(self, agent: EngineAgent) -> None:
         stage = agent.stages[agent.next_stage]
         hints = None

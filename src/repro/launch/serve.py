@@ -71,9 +71,30 @@ def main() -> None:
                     choices=("hold", "spill", "drop"),
                     help="KV retention for agents suspended through "
                          "tool-call think time (closed-loop workloads)")
+    ap.add_argument("--fleet-workers", type=int, default=None, metavar="N",
+                    help="(with --replicas > 1) advance the fleet's "
+                         "children concurrently on an N-thread pool — "
+                         "bit-identical to the sequential lockstep loop")
+    ap.add_argument("--steal-threshold", type=float, default=None,
+                    metavar="X",
+                    help="(with --replicas > 1) migrate queued, "
+                         "never-admitted agents off a replica whose "
+                         "capacity-normalized backlog exceeds X times the "
+                         "fleet mean (X > 1; the X-to-mean gap is the "
+                         "hysteresis band)")
+    ap.add_argument("--steal-interval", type=float, default=None,
+                    metavar="S",
+                    help="workload seconds between stealing passes "
+                         "(fleet default: 1.0)")
     args = ap.parse_args()
     if args.watchdog_timeout is not None and args.replicas <= 1:
         ap.error("--watchdog-timeout requires --replicas > 1")
+    if args.fleet_workers is not None and args.replicas <= 1:
+        ap.error("--fleet-workers requires --replicas > 1")
+    if args.steal_threshold is not None and args.replicas <= 1:
+        ap.error("--steal-threshold requires --replicas > 1")
+    if args.steal_interval is not None and args.steal_threshold is None:
+        ap.error("--steal-interval requires --steal-threshold")
 
     rng = np.random.default_rng(0)
     specs = specs_from_classes(rng, args.n_agents, args.window_s)
@@ -90,6 +111,9 @@ def main() -> None:
             if args.admission_watermark is not None else None
         ),
         suspend_retention=args.suspend_retention,
+        fleet_workers=args.fleet_workers,
+        steal_threshold=args.steal_threshold,
+        steal_interval=args.steal_interval,
     )
 
     t0 = time.time()

@@ -235,8 +235,17 @@ class ClusterSim:
         prefix_cache: bool = False,
         admission_watermark: Any = None,
         suspend_retention: str = "hold",
+        retain_results: bool = True,
     ):
         self.sched = scheduler
+        #: streaming mode (PR 10): with ``retain_results=False`` a
+        #: completed agent's record is evicted immediately — no
+        #: ``result.finish``/``result.jct`` entry, no ``_by_id`` object —
+        #: so a fleet can stream millions of agents through under
+        #: constant memory, consuming completions via listener events
+        #: only.  Strictly flag-gated: True (the default) keeps every
+        #: result dict and the drained snapshot exactly as before.
+        self.retain_results = bool(retain_results)
         self.m = float(total_kv)
         self.decode_rate = float(decode_rate)
         self.prefill_rate = float(prefill_rate)
@@ -886,6 +895,60 @@ class ClusterSim:
             )
             self._rid += 1
 
+    def cancel(self, agent_id: int) -> bool:
+        """Withdraw a never-admitted agent (fleet work stealing, PR 10).
+
+        Legal only while NONE of the agent's requests has ever been
+        admitted: either its arrival is still pending, or its whole
+        opening stage sits in the waiting queue.  The withdrawal is
+        silent — no completion event, no result entry — because the
+        caller (the fleet) re-submits the agent elsewhere and emits the
+        migration event itself.  The scheduler sees ``on_agent_cancel``
+        so arrival-time registrations (records, Justitia's GPS share)
+        are released.  Returns False — leaving the sim untouched — when
+        the agent is unknown, completed, suspended, past its opening
+        stage, or was ever admitted.
+        """
+        agent = self._by_id.get(agent_id)
+        if agent is None or agent.finish != float("inf"):
+            return False
+        if agent.next_stage == 0:
+            # submitted, not yet arrived: unwind silently — the scheduler
+            # and listener never saw it
+            for i, (_, aid, _a) in enumerate(self._arrivals):
+                if aid == agent_id:
+                    self._arrivals.pop(i)
+                    heapq.heapify(self._arrivals)
+                    del self._by_id[agent_id]
+                    self._live_agents -= 1
+                    return True
+            return False
+        if agent.next_stage != 1:
+            return False         # a later stage implies admitted service
+        if (
+            agent_id in self._held
+            or agent_id in self._spilled
+            or any(aid == agent_id for _, _, aid in self._resume_heap)
+        ):
+            return False         # suspended (implies admitted anyway)
+        if any(
+            r.req.agent_id == agent_id for r in self._running.values()
+        ) or any(r.req.agent_id == agent_id for r in self._swapped):
+            return False
+        if agent.live_inferences != len(agent.stages[0]):
+            return False         # some opening request already ran
+        reqs = [req for req in self._waiting if req.agent_id == agent_id]
+        if len(reqs) != agent.live_inferences:
+            return False
+        for req in reqs:
+            self._waiting.remove(req)
+        del self._by_id[agent_id]
+        self._live_agents -= 1
+        _t0 = _time.perf_counter()
+        self.sched.on_agent_cancel(agent_id, self.t)
+        self._sched_clock += _time.perf_counter() - _t0
+        return True
+
     # ------------------------------------------------------------ inspection
 
     @property
@@ -1060,13 +1123,21 @@ class ClusterSim:
                             self._submit_stage(agent, t)
                     else:
                         agent.finish = t
-                        self.result.finish[agent.agent_id] = t
-                        self.result.jct[agent.agent_id] = t - agent.arrival
+                        if self.retain_results:
+                            self.result.finish[agent.agent_id] = t
+                            self.result.jct[agent.agent_id] = (
+                                t - agent.arrival
+                            )
                         self._live_agents -= 1
                         _t0 = _time.perf_counter()
                         self.sched.on_agent_complete(agent.agent_id, t)
                         self._sched_clock += _time.perf_counter() - _t0
                         self._emit("on_agent_complete", agent.agent_id, t)
+                        if not self.retain_results:
+                            # streaming mode: evict the completed agent
+                            # (its live_inferences hit 0, so no other
+                            # request in this batch can re-read it)
+                            del self._by_id[agent.agent_id]
             self._admit(t)
             return True
 

@@ -296,6 +296,29 @@ def test_replicated_sim_stream_conformance(raw):
         assert h.replica == svc.backend.assignment[h.agent_id]
 
 
+@given(workload_strategy)
+@settings(max_examples=10, deadline=None)
+def test_concurrent_replicated_sim_stream_conformance(raw):
+    """The thread-pooled fleet stepper (PR 10) replays each child's
+    buffered events in child-index order, so every agent's stream obeys
+    the same lifecycle grammar — and with stealing armed, a migrated
+    agent's stream restarts on the target replica exactly like a failover
+    requeue (AgentRequeued, then a fresh admission cycle)."""
+    svc = AgentService.sim(
+        "justitia", replicas=2, router="round_robin",
+        total_kv=2000.0, token_events=True,
+        fleet_workers=2, steal_threshold=1.3, steal_interval=0.5,
+    )
+    handles = svc.submit_many(_specs(raw))
+    res = svc.drain()
+    assert len(res.finish) == len(raw)
+    for h, raw_agent in zip(handles, raw):
+        assert_conformant_stream(
+            h, expect_replica=True, token_demands=_demands(raw_agent),
+            allow_requeue=True,
+        )
+
+
 # ----------------------------------------------------------- engine backend
 
 

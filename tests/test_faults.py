@@ -436,6 +436,29 @@ def test_fault_kwargs_require_fleet():
         AgentService.sim(fault_plan=FaultPlan().crash(0, 1.0))
 
 
+def test_concurrent_crash_failover_bit_identical():
+    """fleet_workers>1 reproduces the sequential crash-failover run
+    event-for-event — with and without work stealing armed on top."""
+    plan = FaultPlan().crash(1, 3.0)
+    for steal in (None, 1.3):
+        runs = []
+        for workers in (None, 4):
+            svc = _fleet(plan, watchdog=0.5, fleet_workers=workers,
+                         steal_threshold=steal)
+            handles = [svc.submit(s) for s in _specs(12)]
+            runs.append((svc.drain(), handles))
+        (ra, _), (rb, hb) = runs
+        assert ra.finish == rb.finish
+        assert ra.jct == rb.jct
+        assert ra.event_counts == rb.event_counts
+        assert rb.metrics["fleet_workers"] == 4
+        assert rb.metrics["replica_failures"] == 1
+        for h in hb:
+            assert_conformant_stream(
+                h, expect_replica=True, allow_requeue=True
+            )
+
+
 def test_fleet_without_plan_unchanged():
     """fault_plan=None keeps the original plain lockstep drive —
     bit-identical results with and without the fault machinery armed."""

@@ -251,6 +251,42 @@ def test_failover_suspension_grammar_fuzz(crash_at, think, accrual):
         )
 
 
+@given(
+    st.integers(min_value=0, max_value=10_000),
+    st.booleans(),                                # think-time accrual
+)
+@settings(max_examples=8, deadline=None)
+def test_concurrent_suspension_bit_identical(seed, accrual):
+    """Concurrent advancement reproduces suspension/resume streams
+    event-for-event: the same scripted think workload through a crash
+    fleet yields identical typed event sequences with fleet_workers=2."""
+    rng = np.random.default_rng(seed)
+    raw = [
+        (float(rng.uniform(0.0, 4.0)),
+         [[(int(rng.integers(60, 200)), int(rng.integers(10, 40)))]
+          for _ in range(int(rng.integers(1, 4)))],
+         None)
+        for _ in range(int(rng.integers(2, 6)))
+    ]
+    raw = [
+        (a, stages,
+         [float(rng.choice([0.0, 1.5, 3.0])) for _ in stages[1:]])
+        for a, stages, _ in raw
+    ]
+    streams = []
+    for workers in (None, 2):
+        svc = _fleet(FaultPlan().crash(0, 3.0), accrual=accrual,
+                     fleet_workers=workers)
+        handles = svc.submit_many(_specs(raw))
+        res = svc.drain()
+        streams.append((
+            [[(type(e).__name__, e.time, e.replica)
+              for e in h.events] for h in handles],
+            res.jct, res.event_counts, res.metrics["suspensions"],
+        ))
+    assert streams[0] == streams[1]
+
+
 def test_suspended_on_dead_replica_resumes_once_on_survivor():
     """The tentpole failover contract, deterministically: agents thinking
     on the crashed replica resume EXACTLY ONCE — the resume lands before

@@ -164,6 +164,7 @@ def test_main_writes_out_and_discovers_defaults(bench_pair, tmp_path,
         "BENCH_slo.json", "BENCH_slo_quick.json",
         "BENCH_faults.json", "BENCH_faults_quick.json",
         "BENCH_suspend.json", "BENCH_suspend_quick.json",
+        "BENCH_fleet.json", "BENCH_fleet_quick.json",
     )
 
 
